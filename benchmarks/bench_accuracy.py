@@ -1,0 +1,111 @@
+"""Fig. 9 — simulation accuracy vs the SimNet baseline.
+
+Trains Tao (multi-metric, functional-trace inputs) and SimNet (CNN,
+detailed-trace inputs) on the train benchmarks for each µarch and compares
+per-benchmark CPI error against the detailed simulator's ground truth.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import simulate_trace, train_tao
+from repro.core.align import build_adjusted_trace
+from repro.core.simnet import (
+    SimNetConfig,
+    init_simnet,
+    make_simnet_step,
+    simnet_features,
+    simnet_forward,
+    simnet_windows,
+)
+from repro.train.optim import AdamWConfig, adamw_init
+from repro.uarch import UARCH_A, UARCH_B, UARCH_C, get_benchmark, run_detailed, run_functional
+
+from .common import (
+    EPOCHS,
+    TEST_BENCHES,
+    TEST_LEN,
+    TRACE_LEN,
+    TRAIN_BENCHES,
+    Timer,
+    adjusted_dataset,
+    emit,
+    ground_truth,
+    tao_config,
+)
+
+
+def _train_simnet(uarch, window):
+    cfg = SimNetConfig(window=window)
+    feats = []
+    for b in TRAIN_BENCHES:
+        prog = get_benchmark(b)
+        ft = run_functional(prog, TRACE_LEN)
+        det, _ = run_detailed(prog, ft, uarch)
+        al = build_adjusted_trace(det)
+        feats.append(simnet_features(al.adjusted))
+    x = np.concatenate([f["x"] for f in feats])
+    labels = np.concatenate([f["labels"] for f in feats])
+    ds = simnet_windows({"x": x, "labels": labels}, window)
+    params = init_simnet(jax.random.PRNGKey(0), cfg)
+    opt = adamw_init(params)
+    step = make_simnet_step(cfg, AdamWConfig(lr=1e-3))
+    rng = np.random.default_rng(0)
+    n = len(ds["x"])
+    for ep in range(EPOCHS):
+        order = rng.permutation(n)
+        for lo in range(0, n - 8 + 1, 8):
+            idx = order[lo : lo + 8]
+            batch = {"x": jnp.asarray(ds["x"][idx]), "labels": jnp.asarray(ds["labels"][idx])}
+            params, opt, loss = step(params, opt, batch)
+    return cfg, params
+
+
+def _simnet_cpi(cfg, params, uarch, bench):
+    """SimNet needs the µarch-specific detailed trace as INPUT."""
+    prog = get_benchmark(bench)
+    ft = run_functional(prog, TEST_LEN)
+    det, _ = run_detailed(prog, ft, uarch)
+    al = build_adjusted_trace(det)
+    feats = simnet_features(al.adjusted)
+    ds = simnet_windows(feats, cfg.window)
+    preds = []
+    fwd = jax.jit(lambda p, x: simnet_forward(p, x, cfg))
+    for lo in range(0, len(ds["x"]), 32):
+        out = fwd(params, jnp.asarray(ds["x"][lo : lo + 32]))
+        preds.append(np.asarray(out, np.float32))
+    from repro.core.model import LAT_SCALE
+
+    lat = np.maximum(np.concatenate(preds).reshape(-1, 2), 0.0) * LAT_SCALE
+    total = lat[:, 0].sum() + lat[-1, 1]
+    return total / len(lat)
+
+
+def run() -> None:
+    cfg = tao_config()
+    results = []
+    for uarch in (UARCH_A, UARCH_B, UARCH_C):
+        ds = adjusted_dataset(uarch, TRAIN_BENCHES)
+        with Timer() as t_tao:
+            res = train_tao(cfg, ds, epochs=EPOCHS, batch_size=16, lr=1e-3)
+        with Timer() as t_sn:
+            sn_cfg, sn_params = _train_simnet(uarch, cfg.window)
+        for bench in TEST_BENCHES:
+            ft, truth = ground_truth(uarch, bench)
+            sim = simulate_trace(res.params, ft, cfg)
+            tao_err = sim.error_vs(truth["cpi"])
+            sn_cpi = _simnet_cpi(sn_cfg, sn_params, uarch, bench)
+            sn_err = abs(sn_cpi - truth["cpi"]) / truth["cpi"] * 100
+            results.append((uarch.name, bench, tao_err, sn_err))
+            emit(
+                f"fig9/{uarch.name}-{bench}",
+                sim.seconds * 1e6,
+                f"tao_err={tao_err:.1f}%;simnet_err={sn_err:.1f}%;truth_cpi={truth['cpi']:.3f};tao_cpi={sim.cpi:.3f}",
+            )
+    tao_avg = float(np.mean([r[2] for r in results]))
+    sn_avg = float(np.mean([r[3] for r in results]))
+    emit("fig9/avg", 0.0, f"tao_avg_err={tao_avg:.2f}%;simnet_avg_err={sn_avg:.2f}%")

@@ -1,0 +1,71 @@
+"""Fig. 15 — hardware design-space exploration with Tao: L1D-size sweep
+(cache MPKI) and branch-predictor sweep (branch MPKI), prediction vs the
+detailed simulator's ground truth."""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import simulate_trace, train_tao
+from repro.uarch import UARCH_B, MicroArchConfig
+
+from .common import (
+    EPOCHS,
+    TEST_BENCHES,
+    TRAIN_BENCHES,
+    adjusted_dataset,
+    emit,
+    ground_truth,
+    tao_config,
+)
+
+
+def _model_for(uarch):
+    cfg = tao_config()
+    ds = adjusted_dataset(uarch, TRAIN_BENCHES[:2])
+    res = train_tao(cfg, ds, epochs=max(3, EPOCHS // 2), batch_size=16, lr=1e-3)
+    return cfg, res.params
+
+
+def run() -> None:
+    # Fig 15a: L1 D-cache size sweep — does predicted MPKI track the truth?
+    truth_curve, pred_curve = [], []
+    for size_kb in (16, 32, 128):
+        ua = dataclasses.replace(
+            UARCH_B, l1d_size=size_kb * 1024, name=f"l1d{size_kb}"
+        )
+        cfg, params = _model_for(ua)
+        t_mpki, p_mpki = [], []
+        for bench in TEST_BENCHES[:2]:
+            ft, truth = ground_truth(ua, bench)
+            sim = simulate_trace(params, ft, cfg)
+            t_mpki.append(truth["l1d_mpki"])
+            p_mpki.append(sim.l1d_mpki)
+        truth_curve.append(float(np.mean(t_mpki)))
+        pred_curve.append(float(np.mean(p_mpki)))
+        emit(
+            f"fig15a/l1d={size_kb}KB",
+            0.0,
+            f"truth_l1d_mpki={truth_curve[-1]:.2f};tao_l1d_mpki={pred_curve[-1]:.2f}",
+        )
+    mono_truth = all(np.diff(truth_curve) <= 1e-9)
+    mono_pred = all(np.diff(pred_curve) <= max(1.0, 0.1 * pred_curve[0]))
+    emit("fig15a/trend", 0.0,
+         f"truth_monotone={mono_truth};tao_tracks_trend={mono_pred}")
+
+    # Fig 15b: branch predictor sweep
+    for bp in ("Local", "BiMode", "Tournament"):
+        ua = dataclasses.replace(UARCH_B, branch_predictor=bp, name=f"bp{bp}")
+        cfg, params = _model_for(ua)
+        t_mpki, p_mpki = [], []
+        for bench in TEST_BENCHES[:2]:
+            ft, truth = ground_truth(ua, bench)
+            sim = simulate_trace(params, ft, cfg)
+            t_mpki.append(truth["branch_mpki"])
+            p_mpki.append(sim.branch_mpki)
+        emit(
+            f"fig15b/bp={bp}",
+            0.0,
+            f"truth_br_mpki={np.mean(t_mpki):.2f};tao_br_mpki={np.mean(p_mpki):.2f}",
+        )

@@ -1,0 +1,80 @@
+"""Kernel micro-benchmarks: the model-side flash attention (chunked jnp,
+what the CPU path runs and the TPU kernel mirrors) vs the naive reference,
+and the SSD chunked scan vs the sequential recurrence.
+
+On CPU the interesting number is the XLA-compiled wall time of the chunked
+formulations (the Pallas kernels themselves are only validated in interpret
+mode — their perf target is the TPU; see EXPERIMENTS.md §Roofline)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.ssd.ref import ssd_sequential_ref
+from repro.models.attention import flash_ref
+from repro.models.mamba2 import ssd_chunked_ref
+
+from .common import emit
+
+
+def _time(fn, *args, iters=3):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters
+
+
+def run() -> None:
+    key = jax.random.PRNGKey(0)
+    # attention: naive materializes S^2, flash stays blocked
+    for S in (512, 2048):
+        B, H, D = 1, 4, 64
+        ks = jax.random.split(key, 3)
+        q = jax.random.normal(ks[0], (B, H, S, D))
+        k = jax.random.normal(ks[1], (B, H, S, D))
+        v = jax.random.normal(ks[2], (B, H, S, D))
+
+        naive = jax.jit(
+            lambda q, k, v: jax.nn.softmax(
+                jnp.where(
+                    jnp.tril(jnp.ones((S, S), bool))[None, None],
+                    jnp.einsum("bhqd,bhkd->bhqk", q, k) / np.sqrt(D),
+                    -jnp.inf,
+                ),
+                -1,
+            )
+            @ v
+        )
+        flash = jax.jit(lambda q, k, v: flash_ref(q, k, v, causal=True))
+        t_naive = _time(naive, q, k, v)
+        t_flash = _time(flash, q, k, v)
+        emit(
+            f"kernels/attn_S{S}",
+            t_flash * 1e6,
+            f"naive_us={t_naive*1e6:.0f};flash_us={t_flash*1e6:.0f}",
+        )
+
+    # SSD: chunked (parallel) vs sequential recurrence
+    B, S, H, P, G, N = 1, 2048, 8, 32, 1, 32
+    ks = jax.random.split(key, 5)
+    xh = jax.random.normal(ks[0], (B, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H))) * 0.1
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.3)
+    Bm = jax.random.normal(ks[3], (B, S, G, N)) * 0.5
+    Cm = jax.random.normal(ks[4], (B, S, G, N)) * 0.5
+    seq = jax.jit(ssd_sequential_ref)
+    chk = jax.jit(lambda *a: ssd_chunked_ref(*a, chunk=128))
+    t_seq = _time(seq, xh, dt, A, Bm, Cm)
+    t_chk = _time(chk, xh, dt, A, Bm, Cm)
+    emit(
+        f"kernels/ssd_S{S}",
+        t_chk * 1e6,
+        f"sequential_us={t_seq*1e6:.0f};chunked_us={t_chk*1e6:.0f};"
+        f"speedup={t_seq/t_chk:.1f}x",
+    )

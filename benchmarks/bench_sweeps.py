@@ -1,0 +1,43 @@
+"""Fig. 12 — input-feature parameter sweeps: memory-context queue size N_m
+and branch-history table (N_b, N_q)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import FeatureConfig, simulate_trace, train_tao
+from repro.uarch import UARCH_A
+
+from .common import (
+    EPOCHS,
+    TEST_BENCHES,
+    TRAIN_BENCHES,
+    adjusted_dataset,
+    emit,
+    ground_truth,
+    tao_config,
+)
+
+
+def _error_with_features(fcfg: FeatureConfig) -> float:
+    import dataclasses
+
+    cfg = dataclasses.replace(tao_config(), features=fcfg)
+    ds = adjusted_dataset(UARCH_A, TRAIN_BENCHES[:2], features=fcfg)
+    res = train_tao(cfg, ds, epochs=max(3, EPOCHS // 2), batch_size=16, lr=1e-3)
+    errs = []
+    for bench in TEST_BENCHES[:2]:
+        ft, truth = ground_truth(UARCH_A, bench)
+        sim = simulate_trace(res.params, ft, cfg)
+        errs.append(sim.error_vs(truth["cpi"]))
+    return float(np.mean(errs))
+
+
+def run() -> None:
+    # Fig 12a: N_m sweep (paper: improves to N_m=64, marginal beyond)
+    for n_mem in (4, 16, 32):
+        err = _error_with_features(FeatureConfig(n_buckets=256, n_queue=8, n_mem=n_mem))
+        emit(f"fig12a/n_mem={n_mem}", 0.0, f"avg_cpi_err={err:.2f}%")
+    # Fig 12b: (N_b, N_q) sweep
+    for nb, nq in ((64, 4), (256, 8), (512, 16)):
+        err = _error_with_features(FeatureConfig(n_buckets=nb, n_queue=nq, n_mem=16))
+        emit(f"fig12b/nb={nb},nq={nq}", 0.0, f"avg_cpi_err={err:.2f}%")

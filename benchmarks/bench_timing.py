@@ -1,0 +1,89 @@
+"""Table 4 + Fig. 10 — end-to-end time decomposition and trace economics.
+
+  * functional vs detailed trace generation throughput (Fig 10b; paper: ~25x)
+  * squashed/nop composition of the detailed-trace surplus (Fig 10a)
+  * simulation (inference) throughput for Tao
+  * the Table-4 ratio: (trace gen + train + simulate) Tao vs SimNet, where
+    SimNet is charged detailed-trace generation for every new µarch and Tao
+    is charged the reusable functional trace once.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import simulate_trace, train_tao
+from repro.uarch import UARCH_A, UARCH_B, UARCH_C, get_benchmark, run_detailed, run_functional
+from repro.uarch.isa import KIND_NOP, KIND_REAL, KIND_SQUASHED
+
+from .common import (
+    EPOCHS,
+    TEST_BENCHES,
+    TRACE_LEN,
+    TRAIN_BENCHES,
+    Timer,
+    adjusted_dataset,
+    emit,
+    tao_config,
+)
+
+
+def run() -> None:
+    # --- Fig 10b: trace generation throughput ---------------------------
+    func_mips, det_mips = [], []
+    sq_frac, nop_frac = [], []
+    for bench in TRAIN_BENCHES:
+        prog = get_benchmark(bench)
+        with Timer() as tf:
+            ft = run_functional(prog, TRACE_LEN)
+        for uarch in (UARCH_A, UARCH_B, UARCH_C):
+            with Timer() as td:
+                det, summ = run_detailed(prog, ft, uarch)
+            func_mips.append(TRACE_LEN / tf.seconds / 1e6)
+            det_mips.append(TRACE_LEN / td.seconds / 1e6)
+            kinds = det["kind"]
+            extra = (kinds != KIND_REAL).sum()
+            if extra:
+                sq_frac.append((kinds == KIND_SQUASHED).sum() / extra)
+                nop_frac.append((kinds == KIND_NOP).sum() / extra)
+    f_mips = float(np.mean(func_mips))
+    d_mips = float(np.mean(det_mips))
+    ratio = f_mips / d_mips
+    emit(
+        "fig10b/trace_gen",
+        1e6 / (f_mips * 1e6),
+        f"functional_mips={f_mips:.3f};detailed_mips={d_mips:.3f};speedup={ratio:.1f}x(paper:25.2x)",
+    )
+    emit(
+        "fig10a/trace_surplus",
+        0.0,
+        f"squashed_frac={np.mean(sq_frac)*100:.1f}%;nop_frac={np.mean(nop_frac)*100:.1f}%(paper:97.0/3.0)",
+    )
+
+    # --- Table 4: overall time, Tao vs SimNet ---------------------------
+    cfg = tao_config()
+    # Tao: functional trace (once) + transfer-style short training + sim
+    prog = get_benchmark("dee")
+    with Timer() as t_func:
+        ft = run_functional(prog, TRACE_LEN)
+    ds = adjusted_dataset(UARCH_A, TRAIN_BENCHES)
+    with Timer() as t_train_short:
+        res = train_tao(cfg, ds.subsample(max(16, len(ds) // 4)), epochs=max(2, EPOCHS // 3),
+                        batch_size=16, lr=1e-3)
+    with Timer() as t_sim:
+        ft_test = run_functional(get_benchmark("mcf"), TRACE_LEN // 2)
+        sim = simulate_trace(res.params, ft_test, cfg)
+    tao_total = t_func.seconds + t_train_short.seconds + t_sim.seconds
+
+    # SimNet-style: detailed trace for the new µarch + full training + sim
+    with Timer() as t_det:
+        run_detailed(prog, ft, UARCH_B)
+    with Timer() as t_train_full:
+        train_tao(cfg, ds, epochs=EPOCHS, batch_size=16, lr=1e-3)
+    simnet_total = t_det.seconds + t_train_full.seconds + t_sim.seconds
+    emit(
+        "table4/overall",
+        tao_total * 1e6,
+        f"tao_s={tao_total:.1f};simnet_style_s={simnet_total:.1f};"
+        f"speedup={simnet_total/tao_total:.2f}x(paper:18.06x at 10B-instr scale);"
+        f"sim_mips={sim.mips:.4f}",
+    )

@@ -1,0 +1,111 @@
+"""Shared benchmark scaffolding.
+
+Every benchmark mirrors one paper table/figure at CPU scale: reduced trace
+lengths and model widths (controlled by SCALE), with the paper-facing claim
+being the RELATIVE result (ratios, orderings, trends) rather than absolute
+A100 wall-clock.  Emits ``name,us_per_call,derived`` CSV rows.
+"""
+from __future__ import annotations
+
+import os
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core import FeatureConfig, TaoConfig, build_windows, extract_features
+from repro.core.align import build_adjusted_trace
+from repro.core.dataset import WindowDataset, concat_datasets
+from repro.uarch import (
+    UARCH_A,
+    UARCH_B,
+    UARCH_C,
+    MicroArchConfig,
+    get_benchmark,
+    run_detailed,
+    run_functional,
+)
+
+SCALE = os.environ.get("BENCH_SCALE", "small")
+
+if SCALE == "small":
+    TRACE_LEN = 12_000
+    TEST_LEN = 6_000
+    EPOCHS = 6
+    WINDOW = 33
+    D_MODEL, N_HEADS, N_LAYERS, D_FF, D_CAT = 64, 4, 2, 128, 32
+else:  # "full"-ish (still CPU feasible)
+    TRACE_LEN = 60_000
+    TEST_LEN = 20_000
+    EPOCHS = 15
+    WINDOW = 65
+    D_MODEL, N_HEADS, N_LAYERS, D_FF, D_CAT = 128, 4, 3, 256, 64
+
+FEATURES = FeatureConfig(n_buckets=256, n_queue=8, n_mem=16)
+
+TRAIN_BENCHES = ["dee", "rom", "nab", "lee"]
+TEST_BENCHES = ["mcf", "xal", "wrf", "cac"]
+
+_ROWS: List[str] = []
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    row = f"{name},{us_per_call:.1f},{derived}"
+    _ROWS.append(row)
+    print(row, flush=True)
+
+
+def rows() -> List[str]:
+    return list(_ROWS)
+
+
+def tao_config() -> TaoConfig:
+    return TaoConfig(
+        window=WINDOW,
+        d_model=D_MODEL,
+        n_heads=N_HEADS,
+        n_layers=N_LAYERS,
+        d_ff=D_FF,
+        d_cat=D_CAT,
+        features=FEATURES,
+    )
+
+
+_ds_cache: Dict = {}
+
+
+def adjusted_dataset(uarch: MicroArchConfig, benches, n=None, features=FEATURES,
+                     window=None) -> WindowDataset:
+    """Trace -> §4.1 adjusted trace -> windows, cached."""
+    n = n or TRACE_LEN
+    window = window or WINDOW
+    key = (uarch.key(), tuple(benches), n, features, window)
+    if key in _ds_cache:
+        return _ds_cache[key]
+    parts = []
+    for b in benches:
+        prog = get_benchmark(b)
+        ft = run_functional(prog, n)
+        det, _ = run_detailed(prog, ft, uarch)
+        al = build_adjusted_trace(det)
+        parts.append(build_windows(extract_features(al.adjusted, features), window))
+    ds = concat_datasets(parts)
+    _ds_cache[key] = ds
+    return ds
+
+
+def ground_truth(uarch: MicroArchConfig, bench: str, n=None):
+    n = n or TEST_LEN
+    prog = get_benchmark(bench)
+    ft = run_functional(prog, n)
+    det, summ = run_detailed(prog, ft, uarch)
+    return ft, summ
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.seconds = time.perf_counter() - self.t0

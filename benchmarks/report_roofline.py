@@ -1,0 +1,49 @@
+"""Render the §Roofline table from dry-run result JSONs.
+
+Usage: PYTHONPATH=src python -m benchmarks.report_roofline \\
+           [dryrun_results.json [dryrun_results_multi.json]]
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+
+def fmt(results: dict) -> str:
+    hdr = (
+        f"| {'arch':21s} | {'shape':11s} | {'dominant':10s} | {'comp ms':>8s} "
+        f"| {'mem ms':>8s} | {'coll ms':>8s} | {'roofl%':>6s} | {'useful%':>7s} "
+        f"| {'mem GiB':>8s} | fits |"
+    )
+    sep = "|" + "-" * (len(hdr) - 2) + "|"
+    lines = [hdr, sep]
+    for key in sorted(results):
+        v = results[key]
+        if "error" in v:
+            lines.append(f"| {key:46s} | ERROR: {v['error'][:60]} |")
+            continue
+        ro = v["roofline"]
+        m = v["memory"]
+        mem_gib = min(m["per_device_total"], m.get("tpu_estimate", m["per_device_total"])) / 2**30
+        lines.append(
+            f"| {v['arch']:21s} | {v['shape']:11s} | {ro['dominant'][:-2]:10s} "
+            f"| {ro['compute_s']*1e3:8.2f} | {ro['memory_s']*1e3:8.2f} "
+            f"| {ro['collective_s']*1e3:8.2f} | {ro['roofline_fraction']*100:6.1f} "
+            f"| {ro['useful_flops_ratio']*100:7.1f} | {mem_gib:8.2f} "
+            f"| {'Y' if m['fits_16gb'] else 'N'}    |"
+        )
+    return "\n".join(lines)
+
+
+def main():
+    paths = sys.argv[1:] or ["dryrun_results.json"]
+    for p in paths:
+        with open(p) as f:
+            results = json.load(f)
+        n_ok = sum(1 for v in results.values() if "error" not in v)
+        print(f"\n== {p} ({n_ok}/{len(results)} cells ok) ==\n")
+        print(fmt(results))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""Benchmark harness — one module per paper table/figure.
+
+  bench_accuracy   Fig 9     accuracy vs SimNet baseline
+  bench_timing     Table 4 + Fig 10   trace economics / end-to-end time
+  bench_sweeps     Fig 12    feature-parameter sweeps (N_m, N_b, N_q)
+  bench_transfer   Fig 13/14 + Table 5/6  agnostic embeddings + transfer
+  bench_dse        Fig 15    design-space exploration
+  bench_kernels    (systems) chunked attention / SSD formulations
+
+Prints ``name,us_per_call,derived`` CSV.  BENCH_SCALE=small|full controls
+trace lengths / epochs (CPU container defaults to small).
+Run a subset: ``python -m benchmarks.run --only fig9,table4``.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+from . import (
+    bench_accuracy,
+    bench_dse,
+    bench_kernels,
+    bench_sweeps,
+    bench_timing,
+    bench_transfer,
+)
+from .common import emit, rows
+
+SUITES = {
+    "fig9": bench_accuracy.run,
+    "table4": bench_timing.run,
+    "fig12": bench_sweeps.run,
+    "fig13_14_t5": bench_transfer.run,
+    "fig15": bench_dse.run,
+    "kernels": bench_kernels.run,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, help="comma-separated suite names")
+    args = ap.parse_args()
+    names = list(SUITES) if not args.only else args.only.split(",")
+
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    failures = 0
+    for name in names:
+        try:
+            t = time.time()
+            SUITES[name]()
+            emit(f"{name}/total", (time.time() - t) * 1e6, "ok")
+        except Exception as e:  # record and continue
+            failures += 1
+            emit(f"{name}/total", 0.0, f"FAILED:{type(e).__name__}:{e}")
+            traceback.print_exc()
+    emit("all/total", (time.time() - t0) * 1e6, f"failures={failures}")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

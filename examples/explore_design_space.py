@@ -1,0 +1,54 @@
+"""Design-space exploration with a trained Tao model (paper §5.6 / Fig 15).
+
+Sweeps L1-D cache sizes and branch predictors, comparing Tao's predicted
+MPKI curves against detailed simulation — the use case DL-based simulators
+exist for: evaluating design points ~10-1000x faster than detailed sim.
+
+Run:  PYTHONPATH=src python examples/explore_design_space.py
+"""
+import dataclasses
+import time
+
+import numpy as np
+
+from repro.core import FeatureConfig, TaoConfig, build_windows, extract_features, simulate_trace, train_tao
+from repro.core.align import build_adjusted_trace
+from repro.uarch import UARCH_B, get_benchmark, run_detailed, run_functional
+
+N = 12_000
+fcfg = FeatureConfig(n_buckets=256, n_queue=8, n_mem=16)
+cfg = TaoConfig(window=33, d_model=64, n_heads=4, n_layers=2, d_ff=128,
+                d_cat=32, features=fcfg)
+
+
+def tao_for(uarch):
+    prog = get_benchmark("dee")
+    ft = run_functional(prog, N)
+    det, _ = run_detailed(prog, ft, uarch)
+    ds = build_windows(extract_features(build_adjusted_trace(det).adjusted, fcfg), cfg.window)
+    return train_tao(cfg, ds, epochs=4, batch_size=16, lr=1e-3).params
+
+
+print(f"{'design':24s} {'truth L1D MPKI':>15s} {'tao L1D MPKI':>13s} {'sim speed':>10s}")
+for size_kb in (16, 32, 64, 128):
+    ua = dataclasses.replace(UARCH_B, l1d_size=size_kb * 1024, name=f"L1D-{size_kb}KB")
+    params = tao_for(ua)
+    prog = get_benchmark("mcf")
+    ft = run_functional(prog, N // 2)
+    t0 = time.time()
+    _, truth = run_detailed(prog, ft, ua)
+    t_detailed = time.time() - t0
+    sim = simulate_trace(params, ft, cfg)
+    print(f"{ua.name:24s} {truth['l1d_mpki']:15.2f} {sim.l1d_mpki:13.2f} "
+          f"{t_detailed/ max(sim.seconds,1e-9):9.1f}x")
+
+print()
+print(f"{'predictor':24s} {'truth br MPKI':>15s} {'tao br MPKI':>13s}")
+for bp in ("Local", "BiMode", "Tournament", "TAGE_SC_L"):
+    ua = dataclasses.replace(UARCH_B, branch_predictor=bp, name=f"BP-{bp}")
+    params = tao_for(ua)
+    prog = get_benchmark("xal")
+    ft = run_functional(prog, N // 2)
+    _, truth = run_detailed(prog, ft, ua)
+    sim = simulate_trace(params, ft, cfg)
+    print(f"{ua.name:24s} {truth['branch_mpki']:15.2f} {sim.branch_mpki:13.2f}")

@@ -1,0 +1,15 @@
+"""The paper's own model at production scale: ROB-128 context windows
+(W = 129), multi-metric heads — expressed as a TaoConfig for the core and an
+ArchConfig-equivalent is unnecessary (Tao trains via repro.core)."""
+from ..core.features import FeatureConfig
+from ..core.model import TaoConfig
+
+CONFIG = TaoConfig(
+    window=129,
+    d_model=512,
+    n_heads=8,
+    n_layers=6,
+    d_ff=2048,
+    d_cat=128,
+    features=FeatureConfig(n_buckets=1024, n_queue=32, n_mem=64),
+)

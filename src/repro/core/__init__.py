@@ -1,0 +1,51 @@
+"""Tao's core contributions (paper §4) as composable modules."""
+from .align import AlignedTrace, build_adjusted_trace, verify_alignment
+from .dataset import WindowDataset, build_windows, concat_datasets
+from .features import NUM_OPCODES, FeatureConfig, FeatureSet, extract_features
+from .model import (
+    LOSS_WEIGHTS,
+    TaoConfig,
+    init_tao,
+    multi_metric_loss,
+    tao_forward,
+)
+from .multiarch import METHODS, init_multiarch, make_joint_step
+from .selection import (
+    measure_design_metrics,
+    select_pair_euclidean,
+    select_pair_mahalanobis,
+    select_random,
+)
+from .simulate import SimulationResult, phase_curves, simulate_trace
+from .transfer import TrainResult, train_tao, transfer_finetune
+
+__all__ = [
+    "AlignedTrace",
+    "build_adjusted_trace",
+    "verify_alignment",
+    "WindowDataset",
+    "build_windows",
+    "concat_datasets",
+    "FeatureConfig",
+    "FeatureSet",
+    "extract_features",
+    "NUM_OPCODES",
+    "TaoConfig",
+    "init_tao",
+    "tao_forward",
+    "multi_metric_loss",
+    "LOSS_WEIGHTS",
+    "METHODS",
+    "init_multiarch",
+    "make_joint_step",
+    "measure_design_metrics",
+    "select_pair_mahalanobis",
+    "select_pair_euclidean",
+    "select_random",
+    "SimulationResult",
+    "simulate_trace",
+    "phase_curves",
+    "TrainResult",
+    "train_tao",
+    "transfer_finetune",
+]

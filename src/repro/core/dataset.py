@@ -1,0 +1,138 @@
+"""Windowed training dataset construction over extracted features.
+
+The model consumes windows of W = N+1 consecutive instructions and predicts
+metrics for every position (causal attention), which is the batched
+equivalent of the paper's "current instruction + N context instructions"
+formulation.  Duplicate windows are removed (the paper de-duplicates
+samples during preprocessing).
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import Dict, Iterator, List, Optional, Sequence
+
+import numpy as np
+
+from .features import FeatureSet
+
+__all__ = ["WindowDataset", "build_windows", "concat_datasets"]
+
+_INPUT_KEYS = ("opcode", "regbits", "flags", "brhist", "memdist")
+_LABEL_KEYS = (
+    "fetch_lat",
+    "exec_lat",
+    "mispred",
+    "dlevel",
+    "icache_miss",
+    "tlb_miss",
+    "is_branch",
+    "is_mem",
+)
+
+
+@dataclasses.dataclass
+class WindowDataset:
+    """Stacked windows: inputs[k] has shape (num_windows, W, ...)."""
+
+    inputs: Dict[str, np.ndarray]
+    labels: Optional[Dict[str, np.ndarray]]
+
+    def __len__(self) -> int:
+        return len(self.inputs["opcode"])
+
+    @property
+    def window(self) -> int:
+        return self.inputs["opcode"].shape[1]
+
+    def batches(
+        self, batch_size: int, rng: Optional[np.random.Generator] = None, drop_last: bool = True
+    ) -> Iterator[Dict[str, np.ndarray]]:
+        n = len(self)
+        order = np.arange(n)
+        if rng is not None:
+            rng.shuffle(order)
+        stop = n - (n % batch_size) if drop_last else n
+        for lo in range(0, stop, batch_size):
+            idx = order[lo : lo + batch_size]
+            out = {k: v[idx] for k, v in self.inputs.items()}
+            if self.labels is not None:
+                out["labels"] = {k: v[idx] for k, v in self.labels.items()}
+            yield out
+
+    def subsample(self, n: int, seed: int = 0) -> "WindowDataset":
+        if n >= len(self):
+            return self
+        idx = np.random.default_rng(seed).choice(len(self), size=n, replace=False)
+        return WindowDataset(
+            inputs={k: v[idx] for k, v in self.inputs.items()},
+            labels=None
+            if self.labels is None
+            else {k: v[idx] for k, v in self.labels.items()},
+        )
+
+
+def build_windows(
+    fs: FeatureSet,
+    window: int,
+    stride: Optional[int] = None,
+    dedup: bool = True,
+) -> WindowDataset:
+    stride = stride or window
+    n = len(fs)
+    starts = list(range(0, max(1, n - window + 1), stride))
+
+    def _stack(arr: np.ndarray) -> np.ndarray:
+        return np.stack([arr[s : s + window] for s in starts])
+
+    inputs = {
+        "opcode": _stack(fs.opcode),
+        "regbits": _stack(fs.regbits),
+        "flags": _stack(fs.flags),
+        "brhist": _stack(fs.brhist),
+        "memdist": _stack(fs.memdist),
+    }
+    labels = None
+    if fs.labels is not None:
+        labels = {k: _stack(fs.labels[k]) for k in _LABEL_KEYS}
+
+    if dedup:
+        keep = _dedup_mask(inputs, labels)
+        inputs = {k: v[keep] for k, v in inputs.items()}
+        if labels is not None:
+            labels = {k: v[keep] for k, v in labels.items()}
+
+    return WindowDataset(inputs=inputs, labels=labels)
+
+
+def _dedup_mask(inputs: Dict, labels: Optional[Dict]) -> np.ndarray:
+    """Drop windows whose (features, labels) content is byte-identical."""
+    n = len(inputs["opcode"])
+    seen = set()
+    keep = np.zeros(n, dtype=bool)
+    lat = labels["fetch_lat"] if labels is not None else None
+    for i in range(n):
+        h = hashlib.blake2b(digest_size=16)
+        h.update(inputs["opcode"][i].tobytes())
+        h.update(inputs["memdist"][i].tobytes())
+        h.update(inputs["brhist"][i].tobytes())
+        if lat is not None:
+            h.update(lat[i].tobytes())
+            h.update(labels["exec_lat"][i].tobytes())
+        d = h.digest()
+        if d not in seen:
+            seen.add(d)
+            keep[i] = True
+    return keep
+
+
+def concat_datasets(parts: Sequence[WindowDataset]) -> WindowDataset:
+    inputs = {
+        k: np.concatenate([p.inputs[k] for p in parts]) for k in _INPUT_KEYS
+    }
+    labels = None
+    if parts[0].labels is not None:
+        labels = {
+            k: np.concatenate([p.labels[k] for p in parts]) for k in _LABEL_KEYS
+        }
+    return WindowDataset(inputs=inputs, labels=labels)

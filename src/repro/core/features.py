@@ -1,0 +1,155 @@
+"""§4.2 Feature engineering from the µarch-agnostic functional trace.
+
+Per-instruction features: opcode id (lookup-table embedding downstream),
+register bitmap (src+dst, NUM_REGS wide), instruction flags.
+
+Cross-instruction features:
+  * branch-history hash table — N_b buckets × N_q outcomes keyed by
+    (pc>>2) % N_b; a conditional branch's feature is its bucket's recent
+    outcome queue (most-recent first; 0 for empty slots, ±1 for
+    not-taken/taken).  Hash collisions deliberately mix histories of
+    different branches, providing a lightweight global history (paper Fig 4).
+  * memory access-distance queue — signed-log-compressed deltas between the
+    current access address and the previous N_m accesses (paper Fig 3), a
+    cheap stand-in for reuse/stack distance.
+
+Defaults N_b=1024, N_q=32, N_m=64 are the paper's empirically chosen values
+(§5.4); the benchmark harness sweeps them (Fig 12).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import numpy as np
+
+from ..uarch.isa import NUM_REGS, Op
+
+__all__ = ["FeatureConfig", "FeatureSet", "extract_features", "NUM_OPCODES"]
+
+NUM_OPCODES = len(Op)
+
+
+@dataclasses.dataclass(frozen=True)
+class FeatureConfig:
+    n_buckets: int = 1024   # N_b
+    n_queue: int = 32       # N_q
+    n_mem: int = 64         # N_m
+
+    @property
+    def flags_dim(self) -> int:
+        return 5  # is_branch, taken, is_mem, is_store, is_fp
+
+
+@dataclasses.dataclass
+class FeatureSet:
+    """Model inputs (+ labels when built from an adjusted trace)."""
+
+    opcode: np.ndarray      # (N,) int32
+    regbits: np.ndarray     # (N, NUM_REGS) float32
+    flags: np.ndarray       # (N, 5) float32
+    brhist: np.ndarray      # (N, N_q) float32 in {-1, 0, +1}
+    memdist: np.ndarray     # (N, N_m) float32 signed-log deltas
+    labels: Optional[Dict[str, np.ndarray]] = None
+
+    def __len__(self) -> int:
+        return len(self.opcode)
+
+    def slice(self, lo: int, hi: int) -> "FeatureSet":
+        lab = None
+        if self.labels is not None:
+            lab = {k: v[lo:hi] for k, v in self.labels.items()}
+        return FeatureSet(
+            opcode=self.opcode[lo:hi],
+            regbits=self.regbits[lo:hi],
+            flags=self.flags[lo:hi],
+            brhist=self.brhist[lo:hi],
+            memdist=self.memdist[lo:hi],
+            labels=lab,
+        )
+
+
+_FP_OPS = (int(Op.FALU), int(Op.FMUL), int(Op.FDIV))
+
+
+def extract_features(
+    trace: np.ndarray, cfg: FeatureConfig = FeatureConfig(), with_labels: bool = True
+) -> FeatureSet:
+    """`trace` is either an adjusted trace (ADJ_DTYPE, labels available) or a
+    raw functional trace (FUNC_TRACE_DTYPE, inference path)."""
+    n = len(trace)
+    opcode = trace["opcode"].astype(np.int32)
+
+    # ---- per-instruction features (vectorized) -------------------------
+    regbits = np.zeros((n, NUM_REGS), dtype=np.float32)
+    rows = np.arange(n)
+    regbits[rows, trace["src1"].astype(np.int64)] = 1.0
+    regbits[rows, trace["src2"].astype(np.int64)] = 1.0
+    # dst included too (paper: both source and destination registers)
+    regbits[rows, trace["dst"].astype(np.int64)] = 1.0
+
+    is_fp = np.isin(opcode, _FP_OPS)
+    flags = np.stack(
+        [
+            trace["is_branch"].astype(np.float32),
+            trace["taken"].astype(np.float32),
+            trace["is_mem"].astype(np.float32),
+            trace["is_store"].astype(np.float32),
+            is_fp.astype(np.float32),
+        ],
+        axis=1,
+    )
+
+    # ---- branch-history hash table (sequential over branches) ----------
+    brhist = np.zeros((n, cfg.n_queue), dtype=np.float32)
+    table = np.zeros((cfg.n_buckets, cfg.n_queue), dtype=np.float32)
+    br_idx = np.nonzero(trace["is_branch"])[0]
+    br_pc = (trace["pc"][br_idx] >> 2) % cfg.n_buckets
+    br_taken = np.where(trace["taken"][br_idx], 1.0, -1.0).astype(np.float32)
+    for j in range(len(br_idx)):
+        b = br_pc[j]
+        row = table[b]
+        brhist[br_idx[j]] = row
+        # push most-recent-first
+        row[1:] = row[:-1]
+        row[0] = br_taken[j]
+
+    # ---- memory access-distance queue (sequential over mem ops) --------
+    memdist = np.zeros((n, cfg.n_mem), dtype=np.float32)
+    queue = np.zeros(cfg.n_mem, dtype=np.int64)
+    filled = 0
+    mem_idx = np.nonzero(trace["is_mem"])[0]
+    addrs = trace["addr"][mem_idx].astype(np.int64)
+    for j in range(len(mem_idx)):
+        a = addrs[j]
+        if filled:
+            d = (a - queue[:filled]).astype(np.float64)
+            memdist[mem_idx[j], :filled] = (
+                np.sign(d) * np.log2(1.0 + np.abs(d)) / 32.0
+            ).astype(np.float32)
+        queue[1:] = queue[:-1]
+        queue[0] = a
+        if filled < cfg.n_mem:
+            filled += 1
+
+    labels = None
+    if with_labels and "fetch_lat" in trace.dtype.names:
+        labels = {
+            "fetch_lat": trace["fetch_lat"].astype(np.float32),
+            "exec_lat": trace["exec_lat"].astype(np.float32),
+            "mispred": trace["mispred"].astype(np.float32),
+            "dlevel": trace["dlevel"].astype(np.int32),
+            "icache_miss": trace["icache_miss"].astype(np.float32),
+            "tlb_miss": trace["tlb_miss"].astype(np.float32),
+            "is_branch": trace["is_branch"].astype(np.float32),
+            "is_mem": trace["is_mem"].astype(np.float32),
+        }
+
+    return FeatureSet(
+        opcode=opcode,
+        regbits=regbits,
+        flags=flags,
+        brhist=brhist,
+        memdist=memdist,
+        labels=labels,
+    )

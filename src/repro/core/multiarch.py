@@ -1,0 +1,169 @@
+"""§4.3 Microarchitecture-agnostic embedding training (Algorithm 1) and the
+two baselines the paper compares against (Granite-style gradient averaging,
+GradNorm loss weighting).
+
+Parameter layout during joint training over two µarchs A and B:
+
+    shared:  embed                       (the µarch-agnostic layers)
+    per-µarch: adapt_X, pred_X           (adaptation + prediction networks)
+
+Algorithm 1 (Tao):
+  1. standard forward for L_A, L_B
+  2. per-µarch grads for pred_X, adapt_X   (applied directly)
+  3. shared-embedding grads g_X = dL_X/d(embed)  — note jax.grad computes the
+     chain through the adaptation layer, i.e. exactly G_X·W_Xᵀ of the paper
+  4. normalize each g_X leafwise: (g - mean) / (max - min)
+  5. shared grad = average of normalized grads
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..train.optim import AdamWConfig, AdamWState, adamw_init, adamw_update
+from .model import TaoConfig, apply_adapt, apply_embed, apply_pred, multi_metric_loss
+
+__all__ = [
+    "MultiArchState",
+    "init_multiarch",
+    "make_joint_step",
+    "METHODS",
+]
+
+METHODS = ("tao", "tao_no_adapt", "granite", "gradnorm")
+
+
+@dataclasses.dataclass
+class MultiArchState:
+    params: Dict           # {"embed":…, "A":{"adapt":…,"pred":…}, "B":{…}}
+    opt: AdamWState
+    gradnorm_w: jnp.ndarray  # (2,) learnable loss weights (GradNorm only)
+    initial_losses: jnp.ndarray  # (2,) L_X(0) for GradNorm's rate term
+
+
+def init_multiarch(key, cfg: TaoConfig) -> Dict:
+    from .model import init_adapt_params, init_embed_params, init_pred_params
+
+    ke, ka1, kp1, ka2, kp2 = jax.random.split(key, 5)
+    return {
+        "embed": init_embed_params(ke, cfg),
+        "A": {"adapt": init_adapt_params(ka1, cfg), "pred": init_pred_params(kp1, cfg)},
+        "B": {"adapt": init_adapt_params(ka2, cfg), "pred": init_pred_params(kp2, cfg)},
+    }
+
+
+def _forward_loss(embed_p, arch_p, batch, cfg: TaoConfig, use_adapt: bool):
+    h = apply_embed(embed_p, batch, cfg)
+    if use_adapt:
+        h = apply_adapt(arch_p["adapt"], h)
+    preds = apply_pred(arch_p["pred"], h, cfg)
+    loss, parts = multi_metric_loss(preds, batch["labels"])
+    return loss, parts
+
+
+def _normalize_grad(g):
+    """Paper's normalization: (X - mean) / (max - min), per gradient matrix."""
+
+    def _n(x):
+        x32 = x.astype(jnp.float32)
+        mean = jnp.mean(x32)
+        rng = jnp.max(x32) - jnp.min(x32)
+        return ((x32 - mean) / (rng + 1e-8)).astype(x.dtype)
+
+    return jax.tree.map(_n, g)
+
+
+def make_joint_step(cfg: TaoConfig, opt_cfg: AdamWConfig, method: str = "tao"):
+    """Build a jitted joint-training step over µarchs A and B.
+
+    step(params, opt, gradnorm_w, initial_losses, batch_a, batch_b)
+      -> (params, opt, gradnorm_w, metrics)
+    """
+    if method not in METHODS:
+        raise ValueError(f"method {method!r} not in {METHODS}")
+    use_adapt = method in ("tao", "gradnorm")  # gradnorm baseline keeps its
+    # own adaptation-free design in the paper; give it the same capacity but
+    # no gradient surgery so the comparison isolates the combination rule.
+    use_adapt_by_method = {
+        "tao": True,
+        "tao_no_adapt": False,
+        "granite": False,
+        "gradnorm": False,
+    }
+    use_adapt = use_adapt_by_method[method]
+    alpha = 0.5  # GradNorm asymmetry
+
+    def loss_a(embed_p, arch_p, batch):
+        return _forward_loss(embed_p, arch_p, batch, cfg, use_adapt)
+
+    @functools.partial(jax.jit, donate_argnums=(0, 1))
+    def step(params, opt, gradnorm_w, initial_losses, batch_a, batch_b):
+        embed_p = params["embed"]
+
+        (la, _), (ga_embed, ga_arch) = jax.value_and_grad(
+            loss_a, argnums=(0, 1), has_aux=True
+        )(embed_p, params["A"], batch_a)
+        (lb, _), (gb_embed, gb_arch) = jax.value_and_grad(
+            loss_a, argnums=(0, 1), has_aux=True
+        )(embed_p, params["B"], batch_b)
+
+        new_gradnorm_w = gradnorm_w
+        if method == "granite":
+            g_embed = jax.tree.map(lambda a, b: 0.5 * (a + b), ga_embed, gb_embed)
+        elif method in ("tao", "tao_no_adapt"):
+            # Algorithm 1 line 5-6: normalize per-µarch embedding grads, average.
+            na = _normalize_grad(ga_embed)
+            nb = _normalize_grad(gb_embed)
+            g_embed = jax.tree.map(lambda a, b: 0.5 * (a + b), na, nb)
+        else:  # gradnorm
+            wa, wb = gradnorm_w[0], gradnorm_w[1]
+            g_embed = jax.tree.map(
+                lambda a, b: 0.5 * (wa * a + wb * b), ga_embed, gb_embed
+            )
+            # GradNorm weight update: match per-task gradient norms scaled by
+            # relative inverse training rate.
+            def _gn(g):
+                return jnp.sqrt(
+                    sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(g))
+                )
+
+            gna = wa * _gn(ga_embed)
+            gnb = wb * _gn(gb_embed)
+            mean_gn = 0.5 * (gna + gnb)
+            rate_a = la / jnp.maximum(initial_losses[0], 1e-6)
+            rate_b = lb / jnp.maximum(initial_losses[1], 1e-6)
+            mean_rate = 0.5 * (rate_a + rate_b)
+            tgt_a = mean_gn * (rate_a / mean_rate) ** alpha
+            tgt_b = mean_gn * (rate_b / mean_rate) ** alpha
+            # d|gn_i - tgt_i|/dw_i with gn_i = w_i * ||g_i||
+            d_wa = jnp.sign(gna - tgt_a) * _gn(ga_embed)
+            d_wb = jnp.sign(gnb - tgt_b) * _gn(gb_embed)
+            lr_w = 0.025
+            wa = jnp.maximum(wa - lr_w * d_wa, 0.05)
+            wb = jnp.maximum(wb - lr_w * d_wb, 0.05)
+            # renormalize so weights sum to 2 (GradNorm convention)
+            s = (wa + wb) / 2.0
+            new_gradnorm_w = jnp.stack([wa / s, wb / s])
+
+        grads = {"embed": g_embed, "A": ga_arch, "B": gb_arch}
+        new_params, new_opt, gnorm = adamw_update(params, grads, opt, opt_cfg)
+        metrics = {"loss_a": la, "loss_b": lb, "gnorm": gnorm}
+        return new_params, new_opt, new_gradnorm_w, metrics
+
+    return step
+
+
+def eval_loss(params, batches, cfg: TaoConfig, arch: str, use_adapt: bool = True):
+    """Average loss of one µarch head over a list of batches."""
+    total, count = 0.0, 0
+    fwd = jax.jit(
+        lambda ep, ap, b: _forward_loss(ep, ap, b, cfg, use_adapt)[0]
+    )
+    for b in batches:
+        total += float(fwd(params["embed"], params[arch], b))
+        count += 1
+    return total / max(count, 1)

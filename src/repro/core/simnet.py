@@ -1,0 +1,155 @@
+"""SimNet baseline (Li et al., SIGMETRICS'22) — the state of the art Tao
+compares against.
+
+Key contrasts with Tao, reproduced faithfully:
+  * INPUT: µarch-SPECIFIC detailed-trace features — the model consumes
+    branch-mispredict flags and data-access levels as inputs (so a new µarch
+    needs a new detailed trace: the regeneration cost Table 4 charges it for).
+  * MODEL: 1-D CNN (the paper's "C3 hybrid" configuration) over the
+    instruction context window, numerical feature rows rather than learned
+    per-category embeddings.
+  * OUTPUT: instruction latency only (single-metric).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..nn.core import dense, gelu, init_dense
+from ..train.optim import AdamWConfig, adamw_init, adamw_update
+
+__all__ = ["SimNetConfig", "init_simnet", "simnet_forward", "simnet_features", "make_simnet_step"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SimNetConfig:
+    window: int = 129
+    channels: int = 128
+    n_conv: int = 3          # the C3 configuration
+    kernel_size: int = 5
+    feat_dim: int = 44       # opcode onehot(15) + regbits(... compressed) + metrics
+
+
+def simnet_features(adj_trace: np.ndarray) -> Dict[str, np.ndarray]:
+    """µarch-specific input rows: static properties + detailed-trace metrics.
+
+    This is exactly what makes SimNet's inputs non-reusable across µarchs.
+    """
+    n = len(adj_trace)
+    op = adj_trace["opcode"].astype(np.int64)
+    onehot = np.zeros((n, 15), np.float32)
+    onehot[np.arange(n), op] = 1.0
+    regs = np.stack(
+        [
+            adj_trace["dst"].astype(np.float32) / 32.0,
+            adj_trace["src1"].astype(np.float32) / 32.0,
+            adj_trace["src2"].astype(np.float32) / 32.0,
+        ],
+        axis=1,
+    )
+    flags = np.stack(
+        [
+            adj_trace["is_branch"].astype(np.float32),
+            adj_trace["taken"].astype(np.float32),
+            adj_trace["is_mem"].astype(np.float32),
+            adj_trace["is_store"].astype(np.float32),
+        ],
+        axis=1,
+    )
+    # µarch-specific metric inputs (SimNet's defining dependence):
+    dlevel = np.zeros((n, 4), np.float32)
+    dlevel[np.arange(n), adj_trace["dlevel"].astype(np.int64)] = 1.0
+    metrics = np.concatenate(
+        [
+            dlevel,
+            adj_trace["mispred"].astype(np.float32)[:, None],
+            adj_trace["icache_miss"].astype(np.float32)[:, None],
+            adj_trace["tlb_miss"].astype(np.float32)[:, None],
+        ],
+        axis=1,
+    )
+    addr = (adj_trace["addr"].astype(np.float64) % (1 << 20)) / float(1 << 20)
+    x = np.concatenate(
+        [onehot, regs, flags, metrics, addr[:, None].astype(np.float32)], axis=1
+    )
+    # pad feature dim to cfg.feat_dim
+    want = SimNetConfig().feat_dim
+    if x.shape[1] < want:
+        x = np.pad(x, ((0, 0), (0, want - x.shape[1])))
+    labels = np.stack(
+        [
+            adj_trace["fetch_lat"].astype(np.float32),
+            adj_trace["exec_lat"].astype(np.float32),
+        ],
+        axis=1,
+    )
+    return {"x": x, "labels": labels}
+
+
+def init_simnet(key, cfg: SimNetConfig) -> Dict:
+    ks = jax.random.split(key, cfg.n_conv + 2)
+    params = {"convs": []}
+    cin = cfg.feat_dim
+    for i in range(cfg.n_conv):
+        params["convs"].append(
+            {
+                "w": 0.02
+                * jax.random.normal(ks[i], (cfg.kernel_size, cin, cfg.channels)),
+                "b": jnp.zeros((cfg.channels,)),
+            }
+        )
+        cin = cfg.channels
+    params["fc1"] = init_dense(ks[-2], cfg.channels, cfg.channels)
+    params["head"] = init_dense(ks[-1], cfg.channels, 2)
+    return params
+
+
+def simnet_forward(params: Dict, x: jnp.ndarray, cfg: SimNetConfig) -> jnp.ndarray:
+    """x: (B, W, F) -> (B, W, 2) latency predictions (log1p space).
+
+    Causal 1-D convolutions: left-padded so position i sees only <= i.
+    """
+    h = x
+    for conv in params["convs"]:
+        k = conv["w"].shape[0]
+        hp = jnp.pad(h, ((0, 0), (k - 1, 0), (0, 0)))
+        h = jax.lax.conv_general_dilated(
+            hp,
+            conv["w"],
+            window_strides=(1,),
+            padding="VALID",
+            dimension_numbers=("NWC", "WIO", "NWC"),
+        )
+        h = gelu(h + conv["b"])
+    h = gelu(dense(params["fc1"], h))
+    return dense(params["head"], h)
+
+
+def make_simnet_step(cfg: SimNetConfig, opt_cfg: AdamWConfig):
+    def loss_fn(params, batch):
+        preds = simnet_forward(params, batch["x"], cfg)
+        from .model import LAT_SCALE  # same linear-space regression as Tao
+
+        tgt = batch["labels"] / LAT_SCALE
+        return jnp.mean(jnp.square(preds - tgt))
+
+    @jax.jit
+    def step(params, opt, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        params, opt, _ = adamw_update(params, grads, opt, opt_cfg)
+        return params, opt, loss
+
+    return step
+
+
+def simnet_windows(feats: Dict[str, np.ndarray], window: int) -> Dict[str, np.ndarray]:
+    n = len(feats["x"])
+    starts = range(0, max(1, n - window + 1), window)
+    return {
+        "x": np.stack([feats["x"][s : s + window] for s in starts]),
+        "labels": np.stack([feats["labels"][s : s + window] for s in starts]),
+    }

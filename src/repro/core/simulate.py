@@ -1,0 +1,125 @@
+"""DL-based simulation (inference) driver.
+
+Streams a functional trace through a trained Tao model and aggregates the
+predicted performance metrics:
+
+  CPI          = (sum of predicted fetch latencies + final exec latency) / N
+                 (retire-clock formulation of §4.2)
+  branch MPKI  = predicted mispredictions per 1000 instructions
+  L1D MPKI     = predicted accesses with level >= L2 per 1000 instructions
+  phase curves = per-chunk averages (Fig. 11)
+
+Windows are simulated in parallel (the paper partitions the trace into
+subtraces — here that is simply the batch dimension, which the distributed
+runtime shards across the `data` mesh axis).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..uarch.isa import DLEVEL_L2
+from .dataset import build_windows
+from .features import FeatureConfig, FeatureSet, extract_features
+from .model import LAT_SCALE, TaoConfig, tao_forward
+
+__all__ = ["SimulationResult", "simulate_trace", "phase_curves"]
+
+
+@dataclasses.dataclass
+class SimulationResult:
+    cpi: float
+    total_cycles: float
+    branch_mpki: float
+    l1d_mpki: float
+    num_instructions: int
+    seconds: float
+    mips: float
+    # per-instruction predictions (for phase plots / DSE)
+    fetch_lat: np.ndarray
+    exec_lat: np.ndarray
+    mispred_prob: np.ndarray
+    dlevel: np.ndarray
+
+    def error_vs(self, truth_cpi: float) -> float:
+        return abs(self.cpi - truth_cpi) / truth_cpi * 100.0
+
+
+def simulate_trace(
+    params: Dict,
+    func_trace: np.ndarray,
+    cfg: TaoConfig,
+    batch_size: int = 64,
+    features: Optional[FeatureSet] = None,
+) -> SimulationResult:
+    t0 = time.perf_counter()
+    fs = features if features is not None else extract_features(
+        func_trace, cfg.features, with_labels=False
+    )
+    ds = build_windows(fs, cfg.window, stride=cfg.window, dedup=False)
+    n_windows = len(ds)
+
+    fwd = jax.jit(lambda p, b: tao_forward(p, b, cfg))
+
+    fetch, execl, misp, dlev = [], [], [], []
+    for lo in range(0, n_windows, batch_size):
+        batch = {k: v[lo : lo + batch_size] for k, v in ds.inputs.items()}
+        out = fwd(params, batch)
+        fetch.append(np.asarray(out["fetch_lat"], np.float32))
+        execl.append(np.asarray(out["exec_lat"], np.float32))
+        misp.append(np.asarray(jax.nn.sigmoid(out["mispred_logit"]), np.float32))
+        dlev.append(np.asarray(jnp.argmax(out["dlevel_logits"], -1), np.int32))
+
+    fetch = np.maximum(np.concatenate(fetch).reshape(-1), 0.0)
+    execl = np.maximum(np.concatenate(execl).reshape(-1), 0.0)
+    misp = np.concatenate(misp).reshape(-1)
+    dlev = np.concatenate(dlev).reshape(-1)
+    n = len(fetch)
+
+    # Masks from the trace itself (branch/memory heads only count where valid).
+    covered = n_windows * cfg.window
+    is_branch = np.zeros(n, bool)
+    is_mem = np.zeros(n, bool)
+    is_branch[: min(covered, len(func_trace))] = func_trace["is_branch"][:covered][: n]
+    is_mem[: min(covered, len(func_trace))] = func_trace["is_mem"][:covered][: n]
+
+    fetch = np.maximum(fetch, 0.0)
+    total = float(fetch.sum() + (execl[-1] if n else 0.0))
+    mispred_count = float((misp > 0.5)[is_branch].sum())
+    l1d_miss_count = float((dlev >= DLEVEL_L2)[is_mem].sum())
+    secs = time.perf_counter() - t0
+    return SimulationResult(
+        cpi=total / max(n, 1),
+        total_cycles=total,
+        branch_mpki=1000.0 * mispred_count / max(n, 1),
+        l1d_mpki=1000.0 * l1d_miss_count / max(n, 1),
+        num_instructions=n,
+        seconds=secs,
+        mips=n / 1e6 / secs,
+        fetch_lat=fetch,
+        exec_lat=execl,
+        mispred_prob=misp,
+        dlevel=dlev,
+    )
+
+
+def phase_curves(
+    result: SimulationResult, chunk: int = 10_000
+) -> Dict[str, np.ndarray]:
+    """Per-chunk CPI / branch MPKI / L1D MPKI curves (Fig. 11)."""
+    n = result.num_instructions
+    m = n // chunk
+    cpi = np.zeros(m)
+    br = np.zeros(m)
+    l1 = np.zeros(m)
+    for i in range(m):
+        s = slice(i * chunk, (i + 1) * chunk)
+        cpi[i] = result.fetch_lat[s].mean()
+        br[i] = 1000.0 * (result.mispred_prob[s] > 0.5).mean()
+        l1[i] = 1000.0 * (result.dlevel[s] >= DLEVEL_L2).mean()
+    return {"cpi": cpi, "branch_mpki": br, "l1d_mpki": l1}

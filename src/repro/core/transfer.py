@@ -1,0 +1,156 @@
+"""§4.3/§5.5 Transfer learning to an unseen microarchitecture.
+
+Three regimes (paper Table 5):
+  * scratch              — full model trained from random init
+  * direct fine-tuning   — all parameters initialized from a donor model
+  * shared + fine-tune   — Tao's scheme: µarch-agnostic embeddings FROZEN,
+                           adaptation + prediction layers fine-tuned on a
+                           small dataset (20M instructions in the paper)
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..train.optim import AdamWConfig, adamw_init, adamw_update
+from .dataset import WindowDataset
+from .model import TaoConfig, init_tao, multi_metric_loss, tao_forward
+
+__all__ = ["TrainResult", "train_tao", "transfer_finetune"]
+
+
+@dataclasses.dataclass
+class TrainResult:
+    params: Dict
+    losses: List[float]
+    eval_losses: List[float]
+    seconds: float
+    steps: int
+
+
+def _make_step(cfg: TaoConfig, opt_cfg: AdamWConfig, trainable: str):
+    """trainable: 'all' or 'headonly' (freeze shared embeddings)."""
+
+    def loss_fn(params, batch):
+        preds = tao_forward(params, batch, cfg)
+        loss, _ = multi_metric_loss(preds, batch["labels"])
+        return loss
+
+    if trainable == "all":
+
+        @jax.jit
+        def step(params, opt, batch):
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+            params, opt, _ = adamw_update(params, grads, opt, opt_cfg)
+            return params, opt, loss
+
+        return step
+
+    @jax.jit
+    def step(params, opt, batch):
+        # Freeze the shared embedding group: grads only for adapt+pred.
+        def loss_head(head_params, embed_params, batch):
+            full = {"embed": embed_params, **head_params}
+            return loss_fn(full, batch)
+
+        head = {"adapt": params["adapt"], "pred": params["pred"]}
+        loss, grads = jax.value_and_grad(loss_head)(head, params["embed"], batch)
+        head, opt, _ = adamw_update(head, grads, opt, opt_cfg)
+        return {"embed": params["embed"], **head}, opt, loss
+
+    return step
+
+
+def _run_epochs(
+    params,
+    step,
+    dataset: WindowDataset,
+    epochs: int,
+    batch_size: int,
+    opt,
+    eval_fn: Optional[Callable] = None,
+    seed: int = 0,
+    target_loss: Optional[float] = None,
+) -> Tuple[Dict, List[float], List[float], int]:
+    rng = np.random.default_rng(seed)
+    losses, evals = [], []
+    steps = 0
+    for ep in range(epochs):
+        ep_loss, nb = 0.0, 0
+        for batch in dataset.batches(batch_size, rng=rng):
+            params, opt, loss = step(params, opt, batch)
+            ep_loss += float(loss)
+            nb += 1
+            steps += 1
+        ep_loss /= max(nb, 1)
+        losses.append(ep_loss)
+        if eval_fn is not None:
+            evals.append(float(eval_fn(params)))
+        if target_loss is not None and ep_loss <= target_loss:
+            break
+    return params, losses, evals, steps
+
+
+def train_tao(
+    cfg: TaoConfig,
+    dataset: WindowDataset,
+    *,
+    epochs: int = 10,
+    batch_size: int = 16,
+    lr: float = 3e-4,
+    init_params: Optional[Dict] = None,
+    freeze_embed: bool = False,
+    eval_fn: Optional[Callable] = None,
+    seed: int = 0,
+    target_loss: Optional[float] = None,
+) -> TrainResult:
+    """Train (or fine-tune) a single-µarch Tao model.
+
+    scratch            -> init_params=None,  freeze_embed=False
+    direct fine-tune   -> init_params=donor, freeze_embed=False
+    shared + fine-tune -> init_params={'embed': shared, ...}, freeze_embed=True
+    """
+    key = jax.random.PRNGKey(seed)
+    params = init_params if init_params is not None else init_tao(key, cfg)
+    opt_cfg = AdamWConfig(lr=lr)
+    trainable = "headonly" if freeze_embed else "all"
+    step = _make_step(cfg, opt_cfg, trainable)
+    if freeze_embed:
+        opt = adamw_init({"adapt": params["adapt"], "pred": params["pred"]})
+    else:
+        opt = adamw_init(params)
+    t0 = time.perf_counter()
+    params, losses, evals, steps = _run_epochs(
+        params, step, dataset, epochs, batch_size, opt, eval_fn, seed, target_loss
+    )
+    return TrainResult(
+        params=params,
+        losses=losses,
+        eval_losses=evals,
+        seconds=time.perf_counter() - t0,
+        steps=steps,
+    )
+
+
+def transfer_finetune(
+    cfg: TaoConfig,
+    shared_embed: Dict,
+    donor_arch_params: Dict,
+    small_dataset: WindowDataset,
+    **kw,
+) -> TrainResult:
+    """Tao's fast path: frozen shared embeddings + donor-initialized heads,
+    fine-tuned on a reduced dataset."""
+    init = {
+        "embed": shared_embed,
+        "adapt": donor_arch_params["adapt"],
+        "pred": donor_arch_params["pred"],
+    }
+    return train_tao(
+        cfg, small_dataset, init_params=init, freeze_embed=True, **kw
+    )

@@ -1,0 +1,3 @@
+from .pipeline import LMDataPipeline, TraceDataPipeline, make_lm_batch_specs
+
+__all__ = ["LMDataPipeline", "TraceDataPipeline", "make_lm_batch_specs"]

@@ -1,0 +1,19 @@
+from .sharding import (
+    LOGICAL_RULES,
+    current_mesh,
+    logical_to_spec,
+    mesh_context,
+    named_sharding,
+    shard,
+    spec_for_shape,
+)
+
+__all__ = [
+    "LOGICAL_RULES",
+    "mesh_context",
+    "current_mesh",
+    "logical_to_spec",
+    "shard",
+    "named_sharding",
+    "spec_for_shape",
+]

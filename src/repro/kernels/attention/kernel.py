@@ -1,0 +1,160 @@
+"""Pallas TPU flash-attention kernel.
+
+Grid: (B, H, num_q_blocks, num_k_blocks) with the k dimension marked
+"arbitrary" (sequential) so the online-softmax state (m, l, acc) lives in
+VMEM scratch across k steps.  Block shapes are (block_q, head_dim) /
+(block_k, head_dim) tiles staged HBM->VMEM by BlockSpec; head_dim and the
+block sizes are multiples of 128 to keep the MXU fully utilized.
+
+Causal masking is applied per-tile from absolute positions; fully-masked
+tiles are skipped (the classic flash-attention triangular schedule).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["flash_attention_kernel", "flash_attention_pallas"]
+
+NEG_INF = -1e30
+
+
+def flash_attention_kernel(
+    q_ref, k_ref, v_ref,       # inputs (VMEM tiles)
+    o_ref,                     # output tile
+    m_scr, l_scr, acc_scr,     # VMEM scratch carried over the k grid dim
+    *,
+    block_q: int,
+    block_k: int,
+    seq_k: int,
+    causal: bool,
+    q_offset: int,
+    scale: float,
+):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_pos = q_offset + qi * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 0
+    )
+    k_pos = ki * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 1
+    )
+
+    # Skip tiles that are entirely above the causal diagonal.
+    first_q = q_offset + qi * block_q
+    last_q = first_q + block_q - 1
+    first_k = ki * block_k
+    run = True
+    if causal:
+        run = last_q >= first_k  # static per-tile predicate? positions are
+        # trace-time ints only when q_offset is static; keep dynamic:
+        run = jnp.asarray(last_q >= first_k)
+
+    @pl.when(run if causal else jnp.asarray(True))
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32)          # (bq, d)
+        k = k_ref[0, 0].astype(jnp.float32)          # (bk, d)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale                                     # (bq, bk)
+        mask = k_pos < seq_k
+        if causal:
+            mask &= q_pos >= k_pos
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]                           # (bq, 1)
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)
+        p = jnp.where(mask, p, 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_new = l_scr[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+        v = v_ref[0, 0].astype(jnp.float32)           # (bk, dv)
+        pv = jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        acc_scr[...] = acc_scr[...] * corr + pv
+        m_scr[...] = m_new
+        l_scr[...] = l_new
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        l = l_scr[...]
+        o_ref[0, 0] = (acc_scr[...] / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    q_offset: int = 0,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """q,k,v: (B, H, S, D) (GQA already expanded).  Returns (B, H, Sq, D)."""
+    B, H, Sq, D = q.shape
+    Sk = k.shape[2]
+    Dv = v.shape[3]
+    scale = 1.0 / math.sqrt(D)
+    bq = min(block_q, max(Sq, 8))
+    bk = min(block_k, max(Sk, 8))
+    nq = -(-Sq // bq)
+    nk = -(-Sk // bk)
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, nq * bq - Sq), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, nk * bk - Sk), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, nk * bk - Sk), (0, 0)))
+
+    kernel = functools.partial(
+        flash_attention_kernel,
+        block_q=bq,
+        block_k=bk,
+        seq_k=Sk,
+        causal=causal,
+        q_offset=q_offset,
+        scale=scale,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, D), lambda b, h, qi, ki: (b, h, qi, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, qi, ki: (b, h, ki, 0)),
+            pl.BlockSpec((1, 1, bk, Dv), lambda b, h, qi, ki: (b, h, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, Dv), lambda b, h, qi, ki: (b, h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, nq * bq, Dv), q.dtype),
+        scratch_shapes=[
+            pltpu_scratch((bq, 1)),
+            pltpu_scratch((bq, 1)),
+            pltpu_scratch((bq, Dv)),
+        ],
+        compiler_params=dict(
+            dimension_semantics=("parallel", "parallel", "parallel", "arbitrary")
+        )
+        if not interpret
+        else None,
+        interpret=interpret,
+    )(qp, kp, vp)
+    return out[:, :, :Sq, :]
+
+
+def pltpu_scratch(shape):
+    """VMEM f32 scratch allocation (TPU memory space)."""
+    from jax.experimental.pallas import tpu as pltpu
+
+    return pltpu.VMEM(shape, jnp.float32)

@@ -1,0 +1,46 @@
+"""Jit'd public wrapper for the flash-attention kernel.
+
+On TPU this lowers the Pallas kernel natively; on CPU (this container) the
+kernel body executes under ``interpret=True``, which runs the same program
+in Python for correctness validation.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention_pallas
+
+__all__ = ["flash_attention"]
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "q_offset", "block_q", "block_k")
+)
+def flash_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    q_offset: int = 0,
+    block_q: int = 128,
+    block_k: int = 128,
+) -> jnp.ndarray:
+    """Flash attention over (B, H, S, D) operands (GQA pre-expanded)."""
+    return flash_attention_pallas(
+        q,
+        k,
+        v,
+        causal=causal,
+        q_offset=q_offset,
+        block_q=block_q,
+        block_k=block_k,
+        interpret=not _on_tpu(),
+    )

@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for the flash-attention kernel (naive softmax attention;
+materializes the full score matrix — test shapes only)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["attention_ref"]
+
+
+def attention_ref(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    q_offset: int = 0,
+) -> jnp.ndarray:
+    """q,k,v: (B,H,S,D); returns (B,H,Sq,Dv) in fp32 math."""
+    B, H, Sq, D = q.shape
+    Sk = k.shape[2]
+    s = jnp.einsum(
+        "bhqd,bhkd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) / math.sqrt(D)
+    if causal:
+        qpos = q_offset + jnp.arange(Sq)
+        kpos = jnp.arange(Sk)
+        mask = qpos[:, None] >= kpos[None, :]
+        s = jnp.where(mask[None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32)).astype(q.dtype)

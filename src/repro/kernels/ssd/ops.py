@@ -1,0 +1,29 @@
+"""Jit'd public wrapper for the SSD chunked-scan kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import ssd_pallas
+
+__all__ = ["ssd_scan"]
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def ssd_scan(
+    xh: jnp.ndarray,
+    dt: jnp.ndarray,
+    A: jnp.ndarray,
+    Bm: jnp.ndarray,
+    Cm: jnp.ndarray,
+    *,
+    chunk: int = 256,
+) -> jnp.ndarray:
+    """Chunked SSD scan: xh (B,S,H,P), dt (B,S,H), A (H,), B/C (B,S,G,N)."""
+    return ssd_pallas(xh, dt, A, Bm, Cm, chunk=chunk, interpret=not _on_tpu())

@@ -1,0 +1,44 @@
+"""Pure-jnp oracles for the SSD kernel.
+
+Two independent references:
+  * ``ssd_sequential_ref`` — the literal per-token recurrence (ground truth)
+  * ``repro.models.mamba2.ssd_chunked_ref`` — the chunked formulation the
+    model uses on CPU
+
+The kernel is validated against both (tests/test_kernels.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["ssd_sequential_ref"]
+
+
+def ssd_sequential_ref(
+    xh: jnp.ndarray,   # (B, S, H, P)
+    dt: jnp.ndarray,   # (B, S, H)
+    A: jnp.ndarray,    # (H,) negative
+    Bm: jnp.ndarray,   # (B, S, G, N)
+    Cm: jnp.ndarray,   # (B, S, G, N)
+) -> jnp.ndarray:
+    """Literal recurrence: h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_tᵀ;
+    y_t = C_t · h_t."""
+    B, S, H, P = xh.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    rep = H // G
+    Bh = jnp.repeat(Bm, rep, axis=2).astype(jnp.float32)  # (B,S,H,N)
+    Ch = jnp.repeat(Cm, rep, axis=2).astype(jnp.float32)
+    x = xh.astype(jnp.float32)
+    d = dt.astype(jnp.float32)
+
+    def step(state, t):
+        decay = jnp.exp(d[:, t] * A[None, :])              # (B,H)
+        upd = jnp.einsum("bh,bhn,bhp->bhnp", d[:, t], Bh[:, t], x[:, t])
+        state = state * decay[..., None, None] + upd
+        y = jnp.einsum("bhn,bhnp->bhp", Ch[:, t], state)
+        return state, y
+
+    init = jnp.zeros((B, H, N, P), jnp.float32)
+    _, ys = jax.lax.scan(step, init, jnp.arange(S))
+    return ys.transpose(1, 0, 2, 3).astype(xh.dtype)       # (B,S,H,P)

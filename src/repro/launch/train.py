@@ -1,0 +1,116 @@
+"""Training launcher: real steps on the local device(s), with checkpointing,
+auto-resume, preemption handling, and optional production-mesh dry-run.
+
+Examples (CPU container):
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2-0.5b --reduced \\
+      --steps 20 --batch 8 --seq 128 --ckpt-dir /tmp/ckpt
+  PYTHONPATH=src python -m repro.launch.train --arch tao --steps 50  # Tao model
+
+On a real cluster the same script runs under `jax.distributed.initialize()`
+with the production mesh (--mesh data,model=16,16); the per-host data
+pipeline feeds its slice of the global batch.
+"""
+from __future__ import annotations
+
+import argparse
+import signal
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..ckpt import CheckpointManager
+from ..configs import get_arch
+from ..data.pipeline import LMDataPipeline
+from ..distributed.sharding import mesh_context
+from ..models.backbone import Model
+from ..train.trainer import TrainConfig, TrainState, init_state, make_train_step
+from .mesh import make_mesh
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-0.5b")
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--full", dest="reduced", action="store_false")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=10)
+    ap.add_argument("--mesh", default=None, help="e.g. data,model=2,2")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch, reduced=args.reduced)
+    model = Model(cfg)
+    tcfg = TrainConfig(lr=args.lr, total_steps=args.steps, warmup_steps=max(1, args.steps // 10),
+                       microbatches=args.microbatches)
+    step_fn = make_train_step(model, tcfg)
+
+    mesh = None
+    if args.mesh:
+        names, sizes = args.mesh.split("=")
+        mesh = make_mesh([int(x) for x in sizes.split(",")], names.split(","))
+
+    pipeline = LMDataPipeline(cfg, args.batch, args.seq, seed=args.seed)
+
+    mgr = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
+    state = init_state(model, jax.random.PRNGKey(args.seed), tcfg)
+    start_step = 0
+    if mgr is not None:
+        restored, extra = mgr.restore_latest(state)
+        if restored is not None:
+            state = restored
+            start_step = extra["step"]
+            pipeline.load_state_dict(extra.get("data", {"next_index": start_step, "seed": args.seed}))
+            print(f"[resume] from step {start_step}")
+
+    # preemption hook: checkpoint immediately on SIGTERM, then exit cleanly
+    preempted = {"flag": False}
+
+    def _on_sigterm(signum, frame):
+        preempted["flag"] = True
+
+    signal.signal(signal.SIGTERM, _on_sigterm)
+
+    jit_step = jax.jit(step_fn, donate_argnums=(0,))
+
+    ctx = mesh_context(mesh) if mesh is not None else None
+    if ctx is not None:
+        ctx.__enter__()
+    try:
+        t0 = time.perf_counter()
+        for i in range(start_step, args.steps):
+            batch = jax.tree.map(jnp.asarray, pipeline.make_batch(i))
+            pipeline.next_index = i + 1
+            state, metrics = jit_step(state, batch)
+            if i % 5 == 0 or i == args.steps - 1:
+                print(
+                    f"step {i:5d} loss {float(metrics['loss']):.4f} "
+                    f"gnorm {float(metrics['grad_norm']):.3f} "
+                    f"lr {float(metrics['lr']):.2e}"
+                )
+            if mgr is not None and (
+                (i + 1) % args.ckpt_every == 0 or preempted["flag"]
+            ):
+                mgr.save(state, i + 1, extra={"data": pipeline.state_dict()},
+                         block=preempted["flag"])
+            if preempted["flag"]:
+                print(f"[preempt] checkpointed at step {i+1}, exiting")
+                break
+        dt = time.perf_counter() - t0
+        done = args.steps - start_step
+        print(f"trained {done} steps in {dt:.1f}s ({done/max(dt,1e-9):.2f} steps/s)")
+    finally:
+        if ctx is not None:
+            ctx.__exit__(None, None, None)
+        if mgr is not None:
+            mgr.close()
+
+
+if __name__ == "__main__":
+    main()

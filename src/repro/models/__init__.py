@@ -1,0 +1,5 @@
+"""Assigned-architecture model zoo."""
+from .backbone import Model
+from .config import ArchConfig, HybridConfig, MLAConfig, MoEConfig, SSMConfig
+
+__all__ = ["Model", "ArchConfig", "MoEConfig", "MLAConfig", "SSMConfig", "HybridConfig"]

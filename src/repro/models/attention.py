@@ -1,0 +1,609 @@
+"""Attention layers for the zoo: MHA / GQA / MQA, MLA (DeepSeek), with RoPE /
+M-RoPE, optional QKV bias and QK-norm, causal / bidirectional / local-window
+masking, a flash-style chunked reference implementation (memory-safe at 32k+
+sequence lengths), and decode paths over sharded KV caches.
+
+Sharding strategy (see DESIGN.md §6):
+  * If kv_heads divide the `model` axis -> tensor-parallel over heads.
+  * Otherwise -> shard the query sequence over `model` (flash chunking keeps
+    the working set bounded); KV replicated over `model`.
+  * Decode caches are sharded (batch -> data, seq -> model); the softmax /
+    context contractions over the sharded seq dim lower to all-reduces.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.sharding import current_mesh, shard
+from ..nn.core import init_rmsnorm, rmsnorm, truncated_normal_init
+from .config import ArchConfig
+from .rotary import apply_mrope, apply_rope, text_mrope_positions
+
+__all__ = [
+    "init_attention",
+    "attention_forward",
+    "attention_decode",
+    "init_mla",
+    "mla_forward",
+    "mla_decode",
+    "flash_ref",
+    "init_kv_cache",
+    "init_mla_cache",
+]
+
+
+def _param(key, shape, fan_in, dtype):
+    return truncated_normal_init(key, shape, 1.0 / math.sqrt(fan_in), dtype)
+
+
+def _heads_shardable(n_kv_heads: int) -> bool:
+    mesh = current_mesh()
+    if mesh is None or "model" not in mesh.shape:
+        return True
+    return n_kv_heads % mesh.shape["model"] == 0
+
+
+# ---------------------------------------------------------------------------
+# standard attention (MHA/GQA/MQA)
+# ---------------------------------------------------------------------------
+
+
+def init_attention(key, cfg: ArchConfig) -> Dict:
+    d, H, Hkv = cfg.d_model, cfg.n_heads, cfg.n_kv_heads
+    hd = cfg.resolved_head_dim
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": _param(ks[0], (d, H, hd), d, dt),
+        "wk": _param(ks[1], (d, Hkv, hd), d, dt),
+        "wv": _param(ks[2], (d, Hkv, hd), d, dt),
+        "wo": _param(ks[3], (H, hd, d), H * hd, dt),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H, hd), dt)
+        p["bk"] = jnp.zeros((Hkv, hd), dt)
+        p["bv"] = jnp.zeros((Hkv, hd), dt)
+    if cfg.qk_norm:
+        p["q_norm"] = init_rmsnorm(hd, dt)
+        p["k_norm"] = init_rmsnorm(hd, dt)
+    return p
+
+
+def attention_param_axes(cfg: ArchConfig) -> Dict:
+    ax = {
+        "wq": ("fsdp", "heads", "head_dim"),
+        "wk": ("fsdp", "kv_heads", "head_dim"),
+        "wv": ("fsdp", "kv_heads", "head_dim"),
+        "wo": ("heads", "head_dim", "fsdp"),
+    }
+    if cfg.qkv_bias:
+        ax.update(
+            bq=("heads", "head_dim"),
+            bk=("kv_heads", "head_dim"),
+            bv=("kv_heads", "head_dim"),
+        )
+    if cfg.qk_norm:
+        ax.update(q_norm={"scale": (None,)}, k_norm={"scale": (None,)})
+    return ax
+
+
+def _project_qkv(p, x, cfg: ArchConfig, positions):
+    """x: (B,S,d) -> q (B,S,H,hd), k,v (B,S,Hkv,hd) with rope applied."""
+    cd = jnp.dtype(cfg.compute_dtype)
+    x = x.astype(cd)
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(cd))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(cd))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(cd))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(cd)
+        k = k + p["bk"].astype(cd)
+        v = v + p["bv"].astype(cd)
+    if cfg.qk_norm:
+        q = rmsnorm(p["q_norm"], q)
+        k = rmsnorm(p["k_norm"], k)
+    # (B,H,S,hd)
+    q = q.transpose(0, 2, 1, 3)
+    k = k.transpose(0, 2, 1, 3)
+    v = v.transpose(0, 2, 1, 3)
+    if cfg.rope == "rope":
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    elif cfg.rope == "mrope":
+        pos3 = text_mrope_positions(positions)
+        q = apply_mrope(q, pos3, cfg.mrope_sections, cfg.rope_theta)
+        k = apply_mrope(k, pos3, cfg.mrope_sections, cfg.rope_theta)
+    return q, k, v
+
+
+def flash_ref(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_offset: int = 0,
+    block_q: int = 512,
+    block_k: int = 512,
+) -> jnp.ndarray:
+    """Pure-jnp flash attention (online softmax over K blocks, scan over Q
+    blocks).  Shapes: q (B,H,Sq,D), k/v (B,H,Sk,D) with GQA handled by the
+    caller.  Memory: O(block_q * block_k) scores — safe at 32k+.
+
+    `q_offset`: absolute position of q[0] (prefill continuation / decode).
+    `window`: local attention span (keys with q_pos - k_pos >= window masked).
+    """
+    B, H, Sq, D = q.shape
+    Dv = v.shape[-1]  # MLA: value head dim may differ from qk head dim
+    Sk = k.shape[2]
+    scale = 1.0 / math.sqrt(D)
+    nq = -(-Sq // block_q)
+    nk = -(-Sk // block_k)
+    pad_q = nq * block_q - Sq
+    pad_k = nk * block_k - Sk
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+    kp = kp.reshape(B, H, nk, block_k, D)
+    vp = vp.reshape(B, H, nk, block_k, Dv)
+
+    q_pos_base = jnp.arange(block_q)
+    k_pos_base = jnp.arange(block_k)
+
+    def q_block(qi, qblk):
+        # qblk: (B,H,block_q,D)
+        m0 = jnp.full((B, H, block_q), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((B, H, block_q), jnp.float32)
+        a0 = jnp.zeros((B, H, block_q, Dv), jnp.float32)
+        qpos = q_offset + qi * block_q + q_pos_base  # (block_q,)
+
+        @jax.checkpoint  # flash semantics: recompute scores in backward
+        def k_step(carry, ki):
+            m, l, acc = carry
+            kblk = kp[:, :, ki]
+            vblk = vp[:, :, ki]
+            s = jnp.einsum("bhqd,bhkd->bhqk", qblk, kblk).astype(jnp.float32) * scale
+            kpos = ki * block_k + k_pos_base
+            mask = jnp.ones((block_q, block_k), bool)
+            if causal:
+                mask &= qpos[:, None] >= kpos[None, :]
+            if window is not None:
+                mask &= qpos[:, None] - kpos[None, :] < window
+            mask &= (kpos < Sk)[None, :]
+            s = jnp.where(mask, s, -jnp.inf)
+            m_new = jnp.maximum(m, s.max(-1))
+            # guard fully-masked rows
+            m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+            p_ = jnp.exp(s - m_safe[..., None])
+            p_ = jnp.where(mask, p_, 0.0)
+            corr = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+            l_new = l * corr + p_.sum(-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhqk,bhkd->bhqd", p_.astype(qblk.dtype), vblk
+            ).astype(jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        (m, l, acc), _ = jax.lax.scan(k_step, (m0, l0, a0), jnp.arange(nk))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return out.astype(q.dtype)
+
+    qblocks = qp.reshape(B, H, nq, block_q, D).transpose(2, 0, 1, 3, 4)
+    out = jax.lax.map(jax.checkpoint(lambda t: q_block(t[0], t[1])), (jnp.arange(nq), qblocks))
+    out = out.transpose(1, 2, 0, 3, 4).reshape(B, H, nq * block_q, Dv)
+    return out[:, :, :Sq]
+
+
+def _pad_heads(x, msize: int):
+    """Pad the head dim (axis 1) to a multiple of the model-axis size.
+
+    Uneven GSPMD shardings triggered 'involuntary full rematerialization'
+    copies in the SPMD partitioner (observed: 42 GiB/device temps on the
+    40-head qwen1.5 cells).  Explicit zero-padding (40 -> 48 on a 16-way
+    axis) keeps every collective even at <=20%% padded-head waste, and the
+    output projection contracts the zero heads away exactly.
+    """
+    H = x.shape[1]
+    pad = (-H) % msize
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    return x, H
+
+
+def _attend(q, k, v, cfg: ArchConfig, *, causal, window, q_offset=0):
+    """GQA-aware attention dispatch: Pallas kernel or flash reference.
+
+    After the GQA repeat all of q/k/v are (B, H, S, D); heads are padded to
+    an even multiple of the `model` axis and sharded over it; batch over
+    (pod, data).
+    """
+    B, H, Sq, D = q.shape
+    Hkv = k.shape[1]
+    if H != Hkv:
+        rep = H // Hkv
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    mesh = current_mesh()
+    msize = mesh.shape.get("model", 1) if mesh is not None else 1
+    q, H0 = _pad_heads(q, msize)
+    k, _ = _pad_heads(k, msize)
+    v, _ = _pad_heads(v, msize)
+    q = shard(q, "batch", "heads", None, None)
+    k = shard(k, "batch", "heads", None, None)
+    v = shard(v, "batch", "heads", None, None)
+    if cfg.use_pallas and window is None:
+        from ..kernels.attention.ops import flash_attention
+
+        o = flash_attention(q, k, v, causal=causal, q_offset=q_offset)
+    else:
+        o = flash_ref(q, k, v, causal=causal, window=window, q_offset=q_offset)
+    return o[:, :H0]
+
+
+def attention_forward(
+    p: Dict,
+    x: jnp.ndarray,
+    cfg: ArchConfig,
+    positions: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    return_kv: bool = False,
+):
+    """Full-sequence attention (training / prefill). x: (B,S,d).
+
+    With return_kv=True also returns (k, v) in cache layout (B,S,Hkv,hd) —
+    the prefill path's per-layer cache contribution.
+    """
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    o = _attend(q, k, v, cfg, causal=causal, window=window)
+    o = o.transpose(0, 2, 1, 3)  # (B,S,H,hd)
+    cd = jnp.dtype(cfg.compute_dtype)
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(cd))
+    out = shard(out, "batch", "seq", None)
+    if return_kv:
+        kv = (k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3))
+        return out, kv
+    return out
+
+
+# ---------------------------------------------------------------------------
+# KV cache + decode
+# ---------------------------------------------------------------------------
+
+
+def init_kv_cache(cfg: ArchConfig, n_layers: int, batch: int, max_len: int):
+    """Stacked-layer KV cache (L, B, S, Hkv, hd) + scales for int8 mode."""
+    hd = cfg.resolved_head_dim
+    shape = (n_layers, batch, max_len, cfg.n_kv_heads, hd)
+    if cfg.kv_cache_dtype == "int8":
+        return {
+            "k": jnp.zeros(shape, jnp.int8),
+            "v": jnp.zeros(shape, jnp.int8),
+            "k_scale": jnp.zeros(shape[:-1], jnp.float32),
+            "v_scale": jnp.zeros(shape[:-1], jnp.float32),
+        }
+    return {
+        "k": jnp.zeros(shape, jnp.dtype(cfg.kv_cache_dtype)),
+        "v": jnp.zeros(shape, jnp.dtype(cfg.kv_cache_dtype)),
+    }
+
+
+def kv_cache_axes(cfg: ArchConfig) -> Dict:
+    ax = ("stack", "cache_batch", "cache_seq", None, None)
+    d = {"k": ax, "v": ax}
+    if cfg.kv_cache_dtype == "int8":
+        d["k_scale"] = ax[:-1]
+        d["v_scale"] = ax[:-1]
+    return d
+
+
+def _quantize_kv(x):
+    """(B,1,H,D) -> int8 + per (B,1,H) scale."""
+    amax = jnp.max(jnp.abs(x), axis=-1)
+    scale = jnp.maximum(amax.astype(jnp.float32), 1e-6) / 127.0
+    q = jnp.clip(jnp.round(x / scale[..., None]), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def attention_decode(
+    p: Dict,
+    x: jnp.ndarray,
+    layer_cache: Dict,
+    pos: jnp.ndarray,
+    cfg: ArchConfig,
+    *,
+    exclude_slot: Optional[jnp.ndarray] = None,
+) -> Tuple[jnp.ndarray, Tuple[jnp.ndarray, jnp.ndarray]]:
+    """Single-token decode, READ-ONLY over the cache.
+
+    x: (B,1,d); layer_cache k/v: (B,S,Hkv,hd).  Attends over the old cache
+    (positions < pos; ring buffers additionally exclude the stale
+    `exclude_slot`) plus the current token's k/v inline, and returns
+    (out, (k_new, v_new)) — the caller performs ONE batched cache update
+    outside the layer scan.  Rationale: updating a donated cache inside
+    lax.scan forces XLA to keep a full pre-loop copy (observed +20
+    GiB/device); a read-only loop plus a single elementwise select keeps
+    the donated buffer truly in place.  The cache seq dim is sharded over
+    `model`; softmax/context over it lower to all-reduces.
+    """
+    cd = jnp.dtype(cfg.compute_dtype)
+    B = x.shape[0]
+    positions = jnp.broadcast_to(pos[None], (B,))[:, None]  # (B,1)
+    q, k_new, v_new = _project_qkv(p, x, cfg, positions)  # (B,H,1,hd)
+    k_row = k_new.transpose(0, 2, 1, 3)  # (B,1,Hkv,hd)
+    v_row = v_new.transpose(0, 2, 1, 3)
+
+    int8 = "k_scale" in layer_cache
+    if int8:
+        k_all = layer_cache["k"].astype(cd) * layer_cache["k_scale"][..., None].astype(cd)
+        v_all = layer_cache["v"].astype(cd) * layer_cache["v_scale"][..., None].astype(cd)
+    else:
+        k_all = layer_cache["k"].astype(cd)
+        v_all = layer_cache["v"].astype(cd)
+
+    k_all = shard(k_all, "cache_batch", "cache_seq", None, None)
+    v_all = shard(v_all, "cache_batch", "cache_seq", None, None)
+
+    S = k_all.shape[1]
+    Hkv = k_all.shape[2]
+    H = q.shape[1]
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    qh = q[:, :, 0]  # (B,H,hd)
+    kpos = jnp.arange(S)
+    valid = kpos < pos
+    if exclude_slot is not None:
+        valid = valid & (kpos != exclude_slot)
+
+    if H != Hkv:
+        qg = qh.reshape(B, Hkv, H // Hkv, -1)
+        s_cache = jnp.einsum("bgrd,bsgd->bgrs", qg, k_all).astype(jnp.float32) * scale
+        s_cache = jnp.where(valid[None, None, None, :], s_cache, -1e30)
+        s_new = jnp.einsum("bgrd,bgd->bgr", qg, k_row[:, 0].astype(cd)).astype(
+            jnp.float32
+        )[..., None] * scale
+        scores = jnp.concatenate([s_cache, s_new], axis=-1)
+        probs = jax.nn.softmax(scores, axis=-1).astype(cd)
+        ctx = jnp.einsum("bgrs,bsgd->bgrd", probs[..., :S], v_all)
+        ctx = ctx + probs[..., S:] * v_row[:, 0, :, None, :]
+        ctx = ctx.reshape(B, H, -1)
+    else:
+        s_cache = jnp.einsum("bhd,bshd->bhs", qh, k_all).astype(jnp.float32) * scale
+        s_cache = jnp.where(valid[None, None, :], s_cache, -1e30)
+        s_new = jnp.einsum("bhd,bhd->bh", qh, k_row[:, 0].astype(cd)).astype(
+            jnp.float32
+        )[..., None] * scale
+        scores = jnp.concatenate([s_cache, s_new], axis=-1)
+        probs = jax.nn.softmax(scores, axis=-1).astype(cd)
+        ctx = jnp.einsum("bhs,bshd->bhd", probs[..., :S], v_all)
+        ctx = ctx + probs[..., S] [..., None] * v_row[:, 0].astype(cd)
+    out = jnp.einsum("bhk,hkd->bd", ctx, p["wo"].astype(cd))[:, None]
+    return out, (k_row, v_row)
+
+
+def _sharded_seq_write(old: jnp.ndarray, rows: jnp.ndarray, pos) -> jnp.ndarray:
+    """Write `rows` (L,B,1,...) at seq position `pos` (dim 2) of the
+    (L,B,S,...) cache, truly in place.
+
+    With the seq dim sharded over `model`, both dynamic_update_slice (SPMD
+    'involuntary full rematerialization' copies) and full-size selects
+    (XLA:CPU upcasts bf16 selects to f32: +2x cache in f32 temps) blow up.
+    shard_map makes the update LOCAL: only the shard owning `pos` writes —
+    a 1-row dynamic_slice/select/dynamic_update_slice per device.
+    """
+    from ..distributed.sharding import logical_to_spec
+
+    mesh = current_mesh()
+    trail = (None,) * (old.ndim - 3)
+
+    def local_update(c, r, p_start):
+        S_loc = c.shape[2]
+        local = pos - p_start
+        safe = jnp.clip(local, 0, S_loc - 1)
+        cur = jax.lax.dynamic_slice_in_dim(c, safe, 1, axis=2)
+        in_range = jnp.logical_and(local >= 0, local < S_loc)
+        row = jax.lax.select(
+            jnp.broadcast_to(in_range, cur.shape), r.astype(c.dtype), cur
+        )
+        return jax.lax.dynamic_update_slice_in_dim(c, row, safe, axis=2)
+
+    if mesh is None or "model" not in mesh.shape or old.shape[2] % mesh.shape["model"]:
+        return local_update(old, rows, jnp.int32(0))
+
+    from jax.sharding import PartitionSpec as P
+
+    cache_spec = logical_to_spec(
+        ("stack", "cache_batch", "cache_seq") + trail, old.shape, mesh
+    )
+    rows_spec = logical_to_spec(
+        ("stack", "cache_batch", None) + trail, rows.shape, mesh
+    )
+
+    def body(c, r):
+        idx = jax.lax.axis_index("model")
+        return local_update(c, r, idx * c.shape[2])
+
+    return jax.shard_map(
+        body, mesh=mesh, in_specs=(cache_spec, rows_spec), out_specs=cache_spec,
+    )(old, rows)
+
+
+def apply_kv_cache_update(cache: Dict, new_kv, write_slot) -> Dict:
+    """One batched in-place write of the stacked per-layer rows into the
+    (L,B,S,Hkv,hd) cache — donation-friendly.
+
+    new_kv: (k_rows, v_rows) each (L,B,1,Hkv,hd) float.
+    """
+    k_rows, v_rows = new_kv
+    if "k_scale" in cache:
+        kq, ks = _quantize_kv(k_rows)
+        vq, vs = _quantize_kv(v_rows)
+        return {
+            "k": _sharded_seq_write(cache["k"], kq, write_slot),
+            "v": _sharded_seq_write(cache["v"], vq, write_slot),
+            "k_scale": _sharded_seq_write(cache["k_scale"], ks, write_slot),
+            "v_scale": _sharded_seq_write(cache["v_scale"], vs, write_slot),
+        }
+    return {
+        "k": _sharded_seq_write(cache["k"], k_rows, write_slot),
+        "v": _sharded_seq_write(cache["v"], v_rows, write_slot),
+    }
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2) — compressed KV attention
+# ---------------------------------------------------------------------------
+
+
+def init_mla(key, cfg: ArchConfig) -> Dict:
+    m = cfg.mla
+    d, H = cfg.d_model, cfg.n_heads
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 6)
+    qd = m.qk_nope_head_dim + m.qk_rope_head_dim
+    return {
+        "wq": _param(ks[0], (d, H, qd), d, dt),
+        "w_dkv": _param(ks[1], (d, m.kv_lora_rank), d, dt),
+        "w_kr": _param(ks[2], (d, m.qk_rope_head_dim), d, dt),
+        "kv_norm": init_rmsnorm(m.kv_lora_rank, dt),
+        "w_uk": _param(ks[3], (m.kv_lora_rank, H, m.qk_nope_head_dim), m.kv_lora_rank, dt),
+        "w_uv": _param(ks[4], (m.kv_lora_rank, H, m.v_head_dim), m.kv_lora_rank, dt),
+        "wo": _param(ks[5], (H, m.v_head_dim, d), H * m.v_head_dim, dt),
+    }
+
+
+def mla_param_axes(cfg: ArchConfig) -> Dict:
+    return {
+        "wq": ("fsdp", "heads", None),
+        "w_dkv": ("fsdp", None),
+        "w_kr": ("fsdp", None),
+        "kv_norm": {"scale": (None,)},
+        "w_uk": (None, "heads", None),
+        "w_uv": (None, "heads", None),
+        "wo": ("heads", None, "fsdp"),
+    }
+
+
+def mla_forward(
+    p: Dict,
+    x: jnp.ndarray,
+    cfg: ArchConfig,
+    positions: jnp.ndarray,
+    return_kv: bool = False,
+):
+    """Full-sequence MLA (training/prefill), causal."""
+    m = cfg.mla
+    cd = jnp.dtype(cfg.compute_dtype)
+    x = x.astype(cd)
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    nope, rope_d = m.qk_nope_head_dim, m.qk_rope_head_dim
+
+    q = jnp.einsum("bsd,dhk->bhsk", x, p["wq"].astype(cd))
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    c_kv = rmsnorm(p["kv_norm"], jnp.einsum("bsd,dr->bsr", x, p["w_dkv"].astype(cd)))
+    k_rope = apply_rope(
+        jnp.einsum("bsd,dk->bsk", x, p["w_kr"].astype(cd))[:, None],
+        positions,
+        cfg.rope_theta,
+    )  # (B,1,S,rope_d) shared across heads
+    k_nope = jnp.einsum("bsr,rhk->bhsk", c_kv, p["w_uk"].astype(cd))
+    v = jnp.einsum("bsr,rhk->bhsk", c_kv, p["w_uv"].astype(cd))
+
+    qf = jnp.concatenate([q_nope, q_rope], -1)
+    kf = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope, (B, H, S, rope_d))], -1)
+    qf = shard(qf, "batch", "heads", None, None)
+    kf = shard(kf, "batch", "heads", None, None)
+    o = flash_ref(qf, kf, v, causal=True)
+    out = jnp.einsum("bhsk,hkd->bsd", o, p["wo"].astype(cd))
+    out = shard(out, "batch", "seq", None)
+    if return_kv:
+        # compressed cache: (c_kv (B,S,r), k_rope (B,S,rope_d))
+        return out, (c_kv, k_rope[:, 0])
+    return out
+
+
+def init_mla_cache(cfg: ArchConfig, n_layers: int, batch: int, max_len: int):
+    m = cfg.mla
+    dt = jnp.dtype(cfg.kv_cache_dtype) if cfg.kv_cache_dtype != "int8" else jnp.bfloat16
+    return {
+        "c_kv": jnp.zeros((n_layers, batch, max_len, m.kv_lora_rank), dt),
+        "k_rope": jnp.zeros((n_layers, batch, max_len, m.qk_rope_head_dim), dt),
+    }
+
+
+def mla_cache_axes(cfg: ArchConfig) -> Dict:
+    return {
+        "c_kv": ("stack", "cache_batch", "cache_seq", None),
+        "k_rope": ("stack", "cache_batch", "cache_seq", None),
+    }
+
+
+def mla_decode(
+    p: Dict,
+    x: jnp.ndarray,
+    layer_cache: Dict,
+    pos: jnp.ndarray,
+    cfg: ArchConfig,
+) -> Tuple[jnp.ndarray, Tuple[jnp.ndarray, jnp.ndarray]]:
+    """Weight-absorbed MLA decode: attention runs directly over the
+    compressed c_kv cache — the memory/bandwidth win MLA exists for.
+
+    READ-ONLY over the cache (same rationale as attention_decode): returns
+    (out, (c_new, kr_new)); the caller batches the cache write."""
+    m = cfg.mla
+    cd = jnp.dtype(cfg.compute_dtype)
+    B = x.shape[0]
+    x = x.astype(cd)
+    positions = jnp.broadcast_to(pos[None], (B,))[:, None]
+
+    q = jnp.einsum("bsd,dhk->bhsk", x, p["wq"].astype(cd))  # (B,H,1,qd)
+    q_nope, q_rope = q[..., : m.qk_nope_head_dim], q[..., m.qk_nope_head_dim :]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)[:, :, 0]  # (B,H,rd)
+    q_nope = q_nope[:, :, 0]
+
+    c_new = rmsnorm(p["kv_norm"], jnp.einsum("bsd,dr->bsr", x, p["w_dkv"].astype(cd)))
+    kr_new = apply_rope(
+        jnp.einsum("bsd,dk->bsk", x, p["w_kr"].astype(cd))[:, None],
+        positions,
+        cfg.rope_theta,
+    )[:, 0]  # (B,1,rd)
+
+    c_all = shard(layer_cache["c_kv"].astype(cd), "cache_batch", "cache_seq", None)
+    kr_all = shard(layer_cache["k_rope"].astype(cd), "cache_batch", "cache_seq", None)
+
+    # absorbed scores: q_c = q_nope @ W_uk  -> (B,H,r); scores over c_kv
+    q_c = jnp.einsum("bhk,rhk->bhr", q_nope, p["w_uk"].astype(cd))
+    s_c = jnp.einsum("bhr,bsr->bhs", q_c, c_all)
+    s_r = jnp.einsum("bhk,bsk->bhs", q_rope, kr_all)
+    scale = 1.0 / math.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+    scores = (s_c + s_r).astype(jnp.float32) * scale
+    S = c_all.shape[1]
+    valid = jnp.arange(S) < pos
+    scores = jnp.where(valid[None, None, :], scores, -1e30)
+    # inline current-token score
+    s_new = (
+        jnp.einsum("bhr,br->bh", q_c, c_new[:, 0])
+        + jnp.einsum("bhk,bk->bh", q_rope, kr_new[:, 0])
+    ).astype(jnp.float32)[..., None] * scale
+    scores = jnp.concatenate([scores, s_new], axis=-1)
+    probs = jax.nn.softmax(scores, axis=-1).astype(cd)
+    ctx_c = jnp.einsum("bhs,bsr->bhr", probs[..., :S], c_all)   # (B,H,r)
+    ctx_c = ctx_c + probs[..., S][..., None] * c_new[:, 0][:, None, :]
+    ctx = jnp.einsum("bhr,rhk->bhk", ctx_c, p["w_uv"].astype(cd))
+    out = jnp.einsum("bhk,hkd->bd", ctx, p["wo"].astype(cd))[:, None]
+    return out, (c_new, kr_new)
+
+
+def apply_mla_cache_update(cache: Dict, new_rows, pos) -> Dict:
+    """Batched in-place write of (L,B,1,·) rows into the MLA cache."""
+    c_rows, kr_rows = new_rows
+    return {
+        "c_kv": _sharded_seq_write(cache["c_kv"], c_rows, pos),
+        "k_rope": _sharded_seq_write(cache["k_rope"], kr_rows, pos),
+    }

@@ -1,0 +1,765 @@
+"""Model assembly: embedding/frontends, scanned layer stacks, losses, and
+serving entry points for every assigned architecture family.
+
+Families:
+  dense / moe / vlm          — causal decoder (attention or MLA + MLP/MoE)
+  audio                      — bidirectional encoder, frame classification
+  ssm                        — Mamba-2 stack
+  hybrid                     — RecurrentGemma units (2×RG-LRU + 1×local attn)
+
+Layers are scanned (params stacked on a leading L axis) with configurable
+rematerialization, so the HLO stays compact at 94-layer scale and the
+activation working set is one layer deep.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.sharding import shard
+from ..nn.core import (
+    init_layernorm,
+    init_rmsnorm,
+    layernorm,
+    rmsnorm,
+    truncated_normal_init,
+)
+from .attention import (
+    apply_kv_cache_update,
+    apply_mla_cache_update,
+    attention_decode,
+    attention_forward,
+    attention_param_axes,
+    init_attention,
+    init_kv_cache,
+    init_mla,
+    init_mla_cache,
+    kv_cache_axes,
+    mla_cache_axes,
+    mla_decode,
+    mla_forward,
+    mla_param_axes,
+)
+from .config import ArchConfig
+from .mamba2 import (
+    init_mamba2,
+    init_ssm_state,
+    mamba2_decode,
+    mamba2_forward,
+    mamba2_param_axes,
+    ssm_state_axes,
+)
+from .mlp import init_mlp, mlp_forward, mlp_param_axes
+from .moe import init_moe, moe_forward, moe_param_axes
+from .rglru import (
+    init_rglru_block,
+    init_rglru_state,
+    rglru_block_decode,
+    rglru_block_forward,
+    rglru_param_axes,
+    rglru_state_axes,
+)
+
+__all__ = ["Model"]
+
+VOCAB_CHUNK = 2048  # logit/CE chunk along seq to bound live logits
+
+
+def _norm_init(cfg: ArchConfig):
+    return init_rmsnorm if cfg.norm == "rmsnorm" else init_layernorm
+
+
+def _norm_apply(cfg: ArchConfig):
+    return rmsnorm if cfg.norm == "rmsnorm" else layernorm
+
+
+def _remat(fn, cfg: ArchConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        )
+    return jax.checkpoint(fn)
+
+
+def _stack_init(init_fn, key, n: int):
+    """vmap an init over layer keys -> params stacked on axis 0."""
+    keys = jax.random.split(key, n)
+    return jax.vmap(init_fn)(keys)
+
+
+def _stacked_axes(layer_axes):
+    """Prefix every leaf logical-axis tuple with the scan 'stack' dim."""
+    return jax.tree.map(
+        lambda ax: ("stack",) + tuple(ax),
+        layer_axes,
+        is_leaf=lambda x: isinstance(x, tuple),
+    )
+
+
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Model:
+    """Functional model wrapper: init / param_axes / loss / serve paths."""
+
+    cfg: ArchConfig
+
+    # ---------------- layer definitions ----------------
+
+    def _uses_moe_at(self, layer_in_stack: str) -> bool:
+        return self.cfg.moe is not None and layer_in_stack == "main"
+
+    def _init_tf_layer(self, key, moe: bool):
+        cfg = self.cfg
+        k1, k2 = jax.random.split(key)
+        ninit = _norm_init(cfg)
+        p = {
+            "ln_attn": ninit(cfg.d_model, jnp.dtype(cfg.param_dtype)),
+            "attn": init_mla(k1, cfg) if cfg.mla else init_attention(k1, cfg),
+            "ln_mlp": ninit(cfg.d_model, jnp.dtype(cfg.param_dtype)),
+        }
+        if moe:
+            p["moe"] = init_moe(k2, cfg)
+        else:
+            p["mlp"] = init_mlp(k2, cfg.d_model, cfg.d_ff, cfg.mlp_act, cfg.param_dtype)
+        return p
+
+    def _tf_layer_axes(self, moe: bool):
+        cfg = self.cfg
+        nax = {"scale": (None,)} if cfg.norm == "rmsnorm" else {
+            "scale": (None,),
+            "bias": (None,),
+        }
+        ax = {
+            "ln_attn": nax,
+            "attn": mla_param_axes(cfg) if cfg.mla else attention_param_axes(cfg),
+            "ln_mlp": nax,
+        }
+        if moe:
+            ax["moe"] = moe_param_axes(cfg)
+        else:
+            ax["mlp"] = mlp_param_axes(cfg.mlp_act)
+        return ax
+
+    def _tf_layer_fwd(self, p, x, positions, *, causal, window, moe: bool):
+        cfg = self.cfg
+        napply = _norm_apply(cfg)
+        h = napply(p["ln_attn"], x)
+        if cfg.mla:
+            attn_out = mla_forward(p["attn"], h, cfg, positions)
+        else:
+            attn_out = attention_forward(
+                p["attn"], h, cfg, positions, causal=causal, window=window
+            )
+        x = x + attn_out
+        h = napply(p["ln_mlp"], x)
+        if moe:
+            mlp_out, aux = moe_forward(p["moe"], h, cfg)
+        else:
+            mlp_out, aux = mlp_forward(p["mlp"], h, cfg, cfg.mlp_act), None
+        return x + mlp_out, aux
+
+    def _tf_layer_decode(self, p, x, layer_cache, pos, *, moe: bool,
+                         exclude_slot=None):
+        """Read-only over layer_cache; returns (x, new_kv_rows)."""
+        cfg = self.cfg
+        napply = _norm_apply(cfg)
+        h = napply(p["ln_attn"], x)
+        if cfg.mla:
+            attn_out, rows = mla_decode(p["attn"], h, layer_cache, pos, cfg)
+        else:
+            attn_out, rows = attention_decode(
+                p["attn"], h, layer_cache, pos, cfg, exclude_slot=exclude_slot
+            )
+        x = x + attn_out
+        h = napply(p["ln_mlp"], x)
+        if moe:
+            mlp_out, _ = moe_forward(p["moe"], h, cfg)
+        else:
+            mlp_out = mlp_forward(p["mlp"], h, cfg, cfg.mlp_act)
+        return x + mlp_out, rows
+
+    # ssm layer ---------------------------------------------------------
+
+    def _init_ssm_layer(self, key):
+        cfg = self.cfg
+        return {
+            "ln": _norm_init(cfg)(cfg.d_model, jnp.dtype(cfg.param_dtype)),
+            "mixer": init_mamba2(key, cfg),
+        }
+
+    def _ssm_layer_axes(self):
+        return {"ln": {"scale": (None,)}, "mixer": mamba2_param_axes(self.cfg)}
+
+    # hybrid unit ---------------------------------------------------------
+
+    def _init_hybrid_rec_layer(self, key):
+        cfg = self.cfg
+        k1, k2 = jax.random.split(key)
+        return {
+            "ln_mix": _norm_init(cfg)(cfg.d_model, jnp.dtype(cfg.param_dtype)),
+            "rec": init_rglru_block(k1, cfg),
+            "ln_mlp": _norm_init(cfg)(cfg.d_model, jnp.dtype(cfg.param_dtype)),
+            "mlp": init_mlp(k2, cfg.d_model, cfg.d_ff, cfg.mlp_act, cfg.param_dtype),
+        }
+
+    def _hybrid_rec_axes(self):
+        return {
+            "ln_mix": {"scale": (None,)},
+            "rec": rglru_param_axes(self.cfg),
+            "ln_mlp": {"scale": (None,)},
+            "mlp": mlp_param_axes(self.cfg.mlp_act),
+        }
+
+    def _hybrid_rec_fwd(self, p, x, cfg):
+        napply = _norm_apply(cfg)
+        x = x + rglru_block_forward(p["rec"], napply(p["ln_mix"], x), cfg)
+        x = x + mlp_forward(p["mlp"], napply(p["ln_mlp"], x), cfg, cfg.mlp_act)
+        return x
+
+    # ---------------- init ----------------
+
+    def init(self, key) -> Dict:
+        cfg = self.cfg
+        ks = jax.random.split(key, 8)
+        dt = jnp.dtype(cfg.param_dtype)
+        params: Dict[str, Any] = {
+            "embed": {
+                "table": truncated_normal_init(ks[0], (cfg.vocab, cfg.d_model), 0.02, dt)
+            },
+            "final_norm": _norm_init(cfg)(cfg.d_model, dt),
+        }
+        if not cfg.tie_embeddings:
+            params["lm_head"] = truncated_normal_init(
+                ks[1], (cfg.d_model, cfg.vocab), 1.0 / math.sqrt(cfg.d_model), dt
+            )
+        if cfg.frontend is not None:
+            params["frontend"] = {
+                "proj": truncated_normal_init(
+                    ks[2], (cfg.frontend_dim, cfg.d_model), 1.0 / math.sqrt(cfg.frontend_dim), dt
+                )
+            }
+        if cfg.family == "ssm":
+            params["layers"] = _stack_init(self._init_ssm_layer, ks[4], cfg.n_layers)
+        elif cfg.family == "hybrid":
+            hy = cfg.hybrid
+            unit = hy.rec_per_unit + hy.attn_per_unit
+            n_units = cfg.n_layers // unit
+            rem = cfg.n_layers - n_units * unit
+
+            def init_unit(key):
+                kr = jax.random.split(key, hy.rec_per_unit + 1)
+                return {
+                    "recs": _stack_init(
+                        self._init_hybrid_rec_layer, kr[0], hy.rec_per_unit
+                    ),
+                    "attn": self._init_tf_layer(kr[-1], moe=False),
+                }
+
+            params["layers"] = _stack_init(init_unit, ks[4], n_units)
+            if rem:
+                params["tail"] = _stack_init(self._init_hybrid_rec_layer, ks[5], rem)
+        elif cfg.moe is not None and cfg.moe.first_dense_layers:
+            nd = cfg.moe.first_dense_layers
+            params["dense_layers"] = _stack_init(
+                lambda k: self._init_tf_layer(k, moe=False), ks[4], nd
+            )
+            params["layers"] = _stack_init(
+                lambda k: self._init_tf_layer(k, moe=True), ks[5], cfg.n_layers - nd
+            )
+        else:
+            moe = cfg.moe is not None
+            params["layers"] = _stack_init(
+                lambda k: self._init_tf_layer(k, moe=moe), ks[4], cfg.n_layers
+            )
+        return params
+
+    def param_axes(self) -> Dict:
+        cfg = self.cfg
+        axes: Dict[str, Any] = {
+            "embed": {"table": ("vocab", "fsdp")},
+            "final_norm": {"scale": (None,)}
+            if cfg.norm == "rmsnorm"
+            else {"scale": (None,), "bias": (None,)},
+        }
+        if not cfg.tie_embeddings:
+            axes["lm_head"] = ("fsdp", "vocab")
+        if cfg.frontend is not None:
+            axes["frontend"] = {"proj": (None, "fsdp")}
+        if cfg.family == "ssm":
+            axes["layers"] = _stacked_axes(self._ssm_layer_axes())
+        elif cfg.family == "hybrid":
+            hy = cfg.hybrid
+            unit_axes = {
+                "recs": _stacked_axes(self._hybrid_rec_axes()),
+                "attn": self._tf_layer_axes(moe=False),
+            }
+            axes["layers"] = _stacked_axes(unit_axes)
+            unit = hy.rec_per_unit + hy.attn_per_unit
+            if cfg.n_layers % unit:
+                axes["tail"] = _stacked_axes(self._hybrid_rec_axes())
+        elif cfg.moe is not None and cfg.moe.first_dense_layers:
+            axes["dense_layers"] = _stacked_axes(self._tf_layer_axes(moe=False))
+            axes["layers"] = _stacked_axes(self._tf_layer_axes(moe=True))
+        else:
+            axes["layers"] = _stacked_axes(self._tf_layer_axes(moe=cfg.moe is not None))
+        return axes
+
+    # ---------------- forward (training / encoding) ----------------
+
+    def _embed_inputs(self, params, batch) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """-> (x (B,S,d), positions (B,S))."""
+        cfg = self.cfg
+        cd = jnp.dtype(cfg.compute_dtype)
+        if cfg.family == "audio":
+            x = batch["frames"].astype(cd) @ params["frontend"]["proj"].astype(cd)
+        else:
+            tokens = batch["tokens"]
+            x = params["embed"]["table"].astype(cd)[tokens]
+            if cfg.family == "vlm":
+                patches = batch["patches"].astype(cd) @ params["frontend"]["proj"].astype(cd)
+                x = jnp.concatenate([patches, x[:, patches.shape[1] :]], axis=1)
+        B, S = x.shape[0], x.shape[1]
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        x = shard(x, "batch", "seq", None)
+        return x, positions
+
+    def _run_layers(self, params, x, positions) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """-> (hidden, aux_loss_sum)."""
+        cfg = self.cfg
+        causal = not cfg.encoder_only
+        aux0 = jnp.zeros((), jnp.float32)
+
+        if cfg.family == "ssm":
+
+            def body(carry, lp):
+                h = carry
+                ln = _norm_apply(cfg)(lp["ln"], h)
+                h = h + mamba2_forward(lp["mixer"], ln, cfg)
+                return h, None
+
+            x, _ = jax.lax.scan(_remat(body, cfg), x, params["layers"])
+            return x, aux0
+
+        if cfg.family == "hybrid":
+            hy = cfg.hybrid
+
+            def unit_body(carry, up):
+                h = carry
+
+                def rec_body(c, rp):
+                    return self._hybrid_rec_fwd(rp, c, cfg), None
+
+                h, _ = jax.lax.scan(rec_body, h, up["recs"])
+                h, _ = self._tf_layer_fwd(
+                    up["attn"], h, positions, causal=True, window=hy.window, moe=False
+                )
+                return h, None
+
+            x, _ = jax.lax.scan(_remat(unit_body, cfg), x, params["layers"])
+            if "tail" in params:
+
+                def rec_body(c, rp):
+                    return self._hybrid_rec_fwd(rp, c, cfg), None
+
+                x, _ = jax.lax.scan(_remat(rec_body, cfg), x, params["tail"])
+            return x, aux0
+
+        # transformer stacks (dense / moe / vlm / audio)
+        def make_body(moe: bool):
+            def body(carry, lp):
+                h, aux = carry
+                h, layer_aux = self._tf_layer_fwd(
+                    lp, h, positions, causal=causal, window=None, moe=moe
+                )
+                if layer_aux is not None and cfg.moe is not None:
+                    m = cfg.moe
+                    aux = aux + (
+                        m.router_aux_weight * layer_aux["load_balance"]
+                        + m.router_z_weight * layer_aux["router_z"]
+                    )
+                return (h, aux), None
+
+            return body
+
+        aux = aux0
+        if cfg.moe is not None and cfg.moe.first_dense_layers:
+            (x, aux), _ = jax.lax.scan(
+                _remat(make_body(False), cfg), (x, aux), params["dense_layers"]
+            )
+        moe = cfg.moe is not None
+        (x, aux), _ = jax.lax.scan(
+            _remat(make_body(moe), cfg), (x, aux), params["layers"]
+        )
+        return x, aux
+
+    def _logits_head(self, params):
+        cfg = self.cfg
+        if cfg.tie_embeddings:
+            return params["embed"]["table"].T
+        return params["lm_head"]
+
+    def loss(self, params, batch) -> Tuple[jnp.ndarray, Dict]:
+        """Next-token (or frame-classification) loss with chunked CE."""
+        cfg = self.cfg
+        cd = jnp.dtype(cfg.compute_dtype)
+        x, positions = self._embed_inputs(params, batch)
+        x, aux = self._run_layers(params, x, positions)
+        x = _norm_apply(cfg)(params["final_norm"], x)
+        head = self._logits_head(params).astype(cd)
+        labels = batch["labels"]
+        B, S = labels.shape
+
+        if cfg.encoder_only:
+            shift_x, shift_labels = x, labels
+        else:
+            shift_x, shift_labels = x[:, :-1], labels[:, 1:]
+            S = S - 1
+
+        csz = min(VOCAB_CHUNK, S)
+        nchunk = S // csz
+
+        @jax.checkpoint  # recompute chunk logits in backward
+        def ce_chunk(carry, i):
+            tot, cnt = carry
+            xs = jax.lax.dynamic_slice_in_dim(shift_x, i * csz, csz, axis=1)
+            ys = jax.lax.dynamic_slice_in_dim(shift_labels, i * csz, csz, axis=1)
+            logits = (xs @ head).astype(jnp.float32)
+            logits = shard(logits, "batch", None, "vocab")
+            lse = jax.nn.logsumexp(logits, axis=-1)
+            gold = jnp.take_along_axis(logits, ys[..., None], axis=-1)[..., 0]
+            mask = (ys >= 0).astype(jnp.float32)
+            tot = tot + jnp.sum((lse - gold) * mask)
+            cnt = cnt + jnp.sum(mask)
+            return (tot, cnt), None
+
+        (tot, cnt), _ = jax.lax.scan(
+            ce_chunk, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+            jnp.arange(nchunk),
+        )
+        # remainder positions (S not divisible by chunk): fold in directly
+        rem = S - nchunk * csz
+        if rem > 0:
+            xs = shift_x[:, nchunk * csz :]
+            ys = shift_labels[:, nchunk * csz :]
+            logits = (xs @ head).astype(jnp.float32)
+            lse = jax.nn.logsumexp(logits, axis=-1)
+            gold = jnp.take_along_axis(logits, ys[..., None], axis=-1)[..., 0]
+            mask = (ys >= 0).astype(jnp.float32)
+            tot = tot + jnp.sum((lse - gold) * mask)
+            cnt = cnt + jnp.sum(mask)
+
+        ce = tot / jnp.maximum(cnt, 1.0)
+        total = ce + aux
+        return total, {"ce": ce, "aux": aux}
+
+    def encode(self, params, batch) -> jnp.ndarray:
+        """Encoder-only inference (hubert prefill cell): frame logits."""
+        cfg = self.cfg
+        cd = jnp.dtype(cfg.compute_dtype)
+        x, positions = self._embed_inputs(params, batch)
+        x, _ = self._run_layers(params, x, positions)
+        x = _norm_apply(cfg)(params["final_norm"], x)
+        return (x @ self._logits_head(params).astype(cd)).astype(jnp.float32)
+
+    # ---------------- serving ----------------
+
+    def prefill(self, params, batch) -> Tuple[jnp.ndarray, Dict]:
+        """Process a full prompt; returns (last-token logits (B,V), cache).
+
+        With cfg.prefill_chunks > 1 the prompt batch is processed in chunks
+        via lax.map, bounding the transient working set (MoE dispatch /
+        combine buffers scale with live tokens) at the cost of one cache
+        re-layout."""
+        cfg = self.cfg
+        nc = cfg.prefill_chunks
+        B = jax.tree.leaves(batch)[0].shape[0]
+        if nc > 1 and B % nc == 0:
+            chunked = jax.tree.map(
+                lambda a: a.reshape((nc, B // nc) + a.shape[1:]), batch
+            )
+            logits, cache = jax.lax.map(
+                lambda b: self._prefill_impl(params, b), chunked
+            )
+            logits = logits.reshape((B,) + logits.shape[2:])
+            # (nc, L, bc, ...) -> (L, nc*bc, ...)
+            cache = jax.tree.map(
+                lambda a: jnp.moveaxis(a, 0, 1).reshape(
+                    (a.shape[1], nc * a.shape[2]) + a.shape[3:]
+                ),
+                cache,
+            )
+            return logits, cache
+        return self._prefill_impl(params, batch)
+
+    def _prefill_impl(self, params, batch) -> Tuple[jnp.ndarray, Dict]:
+        cfg = self.cfg
+        cd = jnp.dtype(cfg.compute_dtype)
+        x, positions = self._embed_inputs(params, batch)
+
+        if cfg.family == "ssm":
+
+            def body(carry, lp):
+                h = carry
+                ln = _norm_apply(cfg)(lp["ln"], h)
+                out, st = mamba2_forward(lp["mixer"], ln, cfg, return_state=True)
+                return h + out, st
+
+            x, states = jax.lax.scan(_remat(body, cfg), x, params["layers"])
+            cache = states
+        elif cfg.family == "hybrid":
+            hy = cfg.hybrid
+            napply = _norm_apply(cfg)
+
+            def rec_body(c, rp):
+                out, st = rglru_block_forward(
+                    rp["rec"], napply(rp["ln_mix"], c), cfg, return_state=True
+                )
+                c = c + out
+                c = c + mlp_forward(rp["mlp"], napply(rp["ln_mlp"], c), cfg, cfg.mlp_act)
+                return c, st
+
+            def unit_body(carry, up):
+                h = carry
+                h, rec_states = jax.lax.scan(rec_body, h, up["recs"])
+                h2 = napply(up["attn"]["ln_attn"], h)
+                attn_out, (k, v) = attention_forward(
+                    up["attn"]["attn"], h2, cfg, positions,
+                    causal=True, window=hy.window, return_kv=True,
+                )
+                h = h + attn_out
+                h = h + mlp_forward(
+                    up["attn"]["mlp"], napply(up["attn"]["ln_mlp"], h), cfg, cfg.mlp_act
+                )
+                # keep only the last `window` keys (ring buffer contents)
+                kv = (k[:, -hy.window :], v[:, -hy.window :])
+                return h, (rec_states, kv)
+
+            x, (ru, kvs) = jax.lax.scan(_remat(unit_body, cfg), x, params["layers"])
+            rec = jax.tree.map(lambda a: a.reshape((-1,) + a.shape[2:]), ru)
+            if "tail" in params:
+                x, tail_states = jax.lax.scan(
+                    _remat(rec_body, cfg) if cfg.remat != "none" else rec_body,
+                    x,
+                    params["tail"],
+                )
+                rec = jax.tree.map(
+                    lambda a, b: jnp.concatenate([a, b], 0), rec, tail_states
+                )
+            cache = {"attn": {"k": kvs[0], "v": kvs[1]}, "rec": rec}
+        elif cfg.mla:
+
+            def body(carry, xs):
+                h, aux = carry
+                lp = xs
+                napply = _norm_apply(cfg)
+                h2 = napply(lp["ln_attn"], h)
+                attn_out, (c_kv, k_rope) = mla_forward(
+                    lp["attn"], h2, cfg, positions, return_kv=True
+                )
+                h = h + attn_out
+                h2 = napply(lp["ln_mlp"], h)
+                if "moe" in lp:
+                    mlp_out, _ = moe_forward(lp["moe"], h2, cfg)
+                else:
+                    mlp_out = mlp_forward(lp["mlp"], h2, cfg, cfg.mlp_act)
+                return (h + mlp_out, aux), (c_kv, k_rope)
+
+            aux0 = jnp.zeros((), jnp.float32)
+            caches = []
+            if cfg.moe is not None and cfg.moe.first_dense_layers:
+                (x, _), kv_d = jax.lax.scan(
+                    _remat(body, cfg), (x, aux0), params["dense_layers"]
+                )
+                caches.append(kv_d)
+            (x, _), kv_m = jax.lax.scan(_remat(body, cfg), (x, aux0), params["layers"])
+            caches.append(kv_m)
+            c_kv = jnp.concatenate([c[0] for c in caches], 0)
+            k_rope = jnp.concatenate([c[1] for c in caches], 0)
+            cache = {"c_kv": c_kv, "k_rope": k_rope}
+        else:
+            moe = cfg.moe is not None
+
+            def body(carry, lp):
+                h = carry
+                napply = _norm_apply(cfg)
+                h2 = napply(lp["ln_attn"], h)
+                attn_out, (k, v) = attention_forward(
+                    lp["attn"], h2, cfg, positions, causal=True, return_kv=True
+                )
+                h = h + attn_out
+                h2 = napply(lp["ln_mlp"], h)
+                if moe:
+                    mlp_out, _ = moe_forward(lp["moe"], h2, cfg)
+                else:
+                    mlp_out = mlp_forward(lp["mlp"], h2, cfg, cfg.mlp_act)
+                return h + mlp_out, (k, v)
+
+            x, (ks_, vs_) = jax.lax.scan(_remat(body, cfg), x, params["layers"])
+            cache = {"k": ks_, "v": vs_}
+
+        x = _norm_apply(cfg)(params["final_norm"], x)
+        logits = (x[:, -1] @ self._logits_head(params).astype(cd)).astype(jnp.float32)
+        logits = shard(logits, "batch", "vocab")
+        return logits, cache
+
+    def init_cache(self, batch: int, max_len: int) -> Dict:
+        cfg = self.cfg
+        if cfg.family == "ssm":
+            return init_ssm_state(cfg, cfg.n_layers, batch)
+        if cfg.family == "hybrid":
+            hy = cfg.hybrid
+            unit = hy.rec_per_unit + hy.attn_per_unit
+            n_units = cfg.n_layers // unit
+            rem = cfg.n_layers - n_units * unit
+            cache = {
+                "attn": init_kv_cache(cfg, n_units, batch, min(max_len, hy.window)),
+                "rec": init_rglru_state(cfg, n_units * hy.rec_per_unit + rem, batch),
+            }
+            return cache
+        if cfg.mla:
+            return init_mla_cache(cfg, cfg.n_layers, batch, max_len)
+        return init_kv_cache(cfg, cfg.n_layers, batch, max_len)
+
+    def cache_axes(self) -> Dict:
+        cfg = self.cfg
+        if cfg.family == "ssm":
+            return ssm_state_axes(cfg)
+        if cfg.family == "hybrid":
+            return {"attn": kv_cache_axes(cfg), "rec": rglru_state_axes(cfg)}
+        if cfg.mla:
+            return mla_cache_axes(cfg)
+        return kv_cache_axes(cfg)
+
+    def decode_step(self, params, cache, tokens, pos) -> Tuple[jnp.ndarray, Dict]:
+        """One decode step.  tokens: (B,) int32; pos: scalar int32."""
+        cfg = self.cfg
+        cd = jnp.dtype(cfg.compute_dtype)
+        x = params["embed"]["table"].astype(cd)[tokens][:, None, :]  # (B,1,d)
+
+        if cfg.family == "ssm":
+
+            def body(carry, xs):
+                h = carry
+                lp, st = xs
+                ln = _norm_apply(cfg)(lp["ln"], h)
+                out, new_st = mamba2_decode(lp["mixer"], ln, st, cfg)
+                return h + out, new_st
+
+            x, new_states = jax.lax.scan(body, x, (params["layers"], cache))
+            new_cache = new_states
+        elif cfg.family == "hybrid":
+            hy = cfg.hybrid
+            unit = hy.rec_per_unit + hy.attn_per_unit
+            n_units = cfg.n_layers // unit
+            rem = cfg.n_layers - n_units * unit
+            rec_state = cache["rec"]
+            # rec states grouped per unit: (n_units, rec_per_unit, B, w)
+            ru = jax.tree.map(
+                lambda a: a[: n_units * hy.rec_per_unit].reshape(
+                    (n_units, hy.rec_per_unit) + a.shape[1:]
+                ),
+                rec_state,
+            )
+            napply = _norm_apply(cfg)
+            # ring-buffer slot in the window cache
+            win = cache["attn"]["k"].shape[2]
+            slot = jnp.mod(pos, win)
+
+            def unit_body(carry, xs):
+                h = carry
+                up, rst, att_cache = xs
+
+                def rec_body(c, rxs):
+                    rp, st = rxs
+                    out, new_st = rglru_block_decode(
+                        rp["rec"], napply(rp["ln_mix"], c), st, cfg
+                    )
+                    c = c + out
+                    c = c + mlp_forward(rp["mlp"], napply(rp["ln_mlp"], c), cfg, cfg.mlp_act)
+                    return c, new_st
+
+                h, new_rst = jax.lax.scan(rec_body, h, (up["recs"], rst))
+                h2 = napply(up["attn"]["ln_attn"], h)
+                # ring buffer: the slot being overwritten holds the expired
+                # (pos - window) entry -> exclude it; current token inline.
+                attn_out, att_rows = attention_decode(
+                    up["attn"]["attn"], h2, att_cache, pos, cfg,
+                    exclude_slot=slot,
+                )
+                h = h + attn_out
+                h = h + mlp_forward(
+                    up["attn"]["mlp"], napply(up["attn"]["ln_mlp"], h), cfg, cfg.mlp_act
+                )
+                return h, (new_rst, att_rows)
+
+            x, (new_ru, attn_rows) = jax.lax.scan(
+                unit_body, x, (params["layers"], ru, cache["attn"])
+            )
+            new_attn = apply_kv_cache_update(cache["attn"], attn_rows, slot)
+            new_rec = jax.tree.map(
+                lambda a: a.reshape((n_units * hy.rec_per_unit,) + a.shape[2:]), new_ru
+            )
+            if rem:
+                tail_state = jax.tree.map(
+                    lambda a: a[n_units * hy.rec_per_unit :], rec_state
+                )
+
+                def rec_body(c, rxs):
+                    rp, st = rxs
+                    out, new_st = rglru_block_decode(
+                        rp["rec"], napply(rp["ln_mix"], c), st, cfg
+                    )
+                    c = c + out
+                    c = c + mlp_forward(rp["mlp"], napply(rp["ln_mlp"], c), cfg, cfg.mlp_act)
+                    return c, new_st
+
+                x, new_tail = jax.lax.scan(rec_body, x, (params["tail"], tail_state))
+                new_rec = jax.tree.map(
+                    lambda a, b: jnp.concatenate([a, b], 0), new_rec, new_tail
+                )
+            new_cache = {"attn": new_attn, "rec": new_rec}
+        else:
+            moe = cfg.moe is not None
+
+            def body(carry, xs):
+                h = carry
+                lp, ca = xs
+                h, rows = self._tf_layer_decode(lp, h, ca, pos, moe=moe)
+                return h, rows
+
+            if cfg.moe is not None and cfg.moe.first_dense_layers:
+                nd = cfg.moe.first_dense_layers
+                dense_cache = jax.tree.map(lambda a: a[:nd], cache)
+                moe_cache = jax.tree.map(lambda a: a[nd:], cache)
+
+                def body_dense(carry, xs):
+                    h = carry
+                    lp, ca = xs
+                    h, rows = self._tf_layer_decode(lp, h, ca, pos, moe=False)
+                    return h, rows
+
+                x, r1 = jax.lax.scan(body_dense, x, (params["dense_layers"], dense_cache))
+                x, r2 = jax.lax.scan(body, x, (params["layers"], moe_cache))
+                rows = jax.tree.map(lambda a, b: jnp.concatenate([a, b], 0), r1, r2)
+            else:
+                x, rows = jax.lax.scan(body, x, (params["layers"], cache))
+            # ONE donation-friendly cache write outside the layer scan
+            if cfg.mla:
+                new_cache = apply_mla_cache_update(cache, rows, pos)
+            else:
+                new_cache = apply_kv_cache_update(cache, rows, pos)
+
+        x = _norm_apply(cfg)(params["final_norm"], x)
+        cd = jnp.dtype(cfg.compute_dtype)
+        logits = (x[:, 0] @ self._logits_head(params).astype(cd)).astype(jnp.float32)
+        logits = shard(logits, "batch", "vocab")
+        return logits, new_cache

@@ -1,0 +1,177 @@
+"""Architecture configuration schema for the assigned-architecture zoo.
+
+Every assigned architecture is expressed as an ArchConfig instance in
+`repro/configs/<id>.py`; reduced smoke-test variants are derived with
+`.reduced()`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+__all__ = ["MoEConfig", "MLAConfig", "SSMConfig", "HybridConfig", "ArchConfig"]
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    top_k: int
+    d_ff_expert: int
+    num_shared: int = 0
+    d_ff_shared: int = 0
+    capacity_factor: float = 1.25
+    router_aux_weight: float = 0.01
+    router_z_weight: float = 1e-3
+    # layers before this index use a dense MLP (DeepSeek: first layer dense)
+    first_dense_layers: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    kv_lora_rank: int = 512
+    qk_nope_head_dim: int = 128
+    qk_rope_head_dim: int = 64
+    v_head_dim: int = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    """Mamba-2 (SSD) block parameters."""
+
+    d_state: int = 128
+    head_dim: int = 64
+    expand: int = 2
+    conv_kernel: int = 4
+    n_groups: int = 1
+    chunk: int = 256
+    dt_min: float = 0.001
+    dt_max: float = 0.1
+
+    def d_inner(self, d_model: int) -> int:
+        return self.expand * d_model
+
+    def n_heads(self, d_model: int) -> int:
+        return self.d_inner(d_model) // self.head_dim
+
+
+@dataclasses.dataclass(frozen=True)
+class HybridConfig:
+    """RecurrentGemma-style: repeating (recurrent × rec_per_unit, attention)."""
+
+    rec_per_unit: int = 2            # RG-LRU layers per unit
+    attn_per_unit: int = 1           # local-attention layers per unit
+    window: int = 2048               # local attention window
+    lru_width: Optional[int] = None  # defaults to d_model
+    conv_kernel: int = 4
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                      # dense | ssm | moe | hybrid | audio | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: Optional[int] = None   # explicit (qwen3: 128); else d_model/n_heads
+    qkv_bias: bool = False
+    qk_norm: bool = False            # qwen3-style per-head RMSNorm on q,k
+    rope: str = "rope"               # rope | mrope | none
+    rope_theta: float = 10_000.0
+    mrope_sections: Tuple[int, int, int] = (16, 24, 24)
+    mlp_act: str = "swiglu"          # swiglu | gelu
+    norm: str = "rmsnorm"            # rmsnorm | layernorm
+    tie_embeddings: bool = False
+    encoder_only: bool = False       # hubert: bidirectional, no decode
+    frontend: Optional[str] = None   # audio_stub | vision_stub
+    frontend_dim: int = 512          # stub embedding dim
+    vision_patches: int = 64         # patches prepended per sample (vlm stub)
+    moe: Optional[MoEConfig] = None
+    mla: Optional[MLAConfig] = None
+    ssm: Optional[SSMConfig] = None
+    hybrid: Optional[HybridConfig] = None
+    # numerics / memory policy
+    param_dtype: str = "bfloat16"
+    compute_dtype: str = "bfloat16"
+    remat: str = "full"              # full | dots | none
+    scan_layers: bool = True
+    use_pallas: bool = False         # route attention/SSD through Pallas kernels
+    kv_cache_dtype: str = "bfloat16"  # bfloat16 | int8 (beyond-paper opt)
+    # process the prompt batch in chunks (lax.map) to bound prefill temps
+    # (MoE dispatch/combine buffers scale with live tokens)
+    prefill_chunks: int = 1
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim if self.head_dim is not None else self.d_model // self.n_heads
+
+    @property
+    def attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """Supports the long_500k cell (state-space or windowed attention)."""
+        return self.family in ("ssm", "hybrid")
+
+    def reduced(self) -> "ArchConfig":
+        """Small same-family variant for CPU smoke tests."""
+        kw = dataclasses.asdict(self)
+        # dataclasses.asdict recurses; rebuild the nested configs.
+        kw["moe"] = (
+            dataclasses.replace(
+                self.moe,
+                num_experts=min(self.moe.num_experts, 8),
+                top_k=min(self.moe.top_k, 2),
+                d_ff_expert=64,
+                d_ff_shared=64 if self.moe.num_shared else 0,
+                # dropless at smoke scale: capacity C >= Tg*k for any routing,
+                # so prefill/decode consistency tests are exact
+                capacity_factor=8.0,
+            )
+            if self.moe
+            else None
+        )
+        kw["mla"] = (
+            dataclasses.replace(self.mla, kv_lora_rank=32, qk_nope_head_dim=16,
+                                qk_rope_head_dim=8, v_head_dim=16)
+            if self.mla
+            else None
+        )
+        kw["ssm"] = (
+            dataclasses.replace(self.ssm, d_state=16, head_dim=16, chunk=32)
+            if self.ssm
+            else None
+        )
+        kw["hybrid"] = (
+            dataclasses.replace(self.hybrid, window=32, lru_width=None)
+            if self.hybrid
+            else None
+        )
+        n_heads = min(self.n_heads, 4) if self.n_heads else 0
+        n_kv = min(self.n_kv_heads, n_heads) if self.n_kv_heads else n_heads
+        if n_kv and n_heads % n_kv:
+            n_kv = 1
+        if self.rope == "mrope":
+            # keep sections summing to (reduced head_dim)/2 = 8
+            kw["mrope_sections"] = (2, 3, 3)
+        kw.update(
+            n_layers=min(self.n_layers, 4)
+            if not self.hybrid
+            else (self.hybrid.rec_per_unit + self.hybrid.attn_per_unit) + 1,
+            d_model=64,
+            n_heads=n_heads,
+            n_kv_heads=n_kv,
+            d_ff=128,
+            vocab=512,
+            head_dim=16 if self.head_dim is not None else None,
+            frontend_dim=32,
+            vision_patches=4,
+            param_dtype="float32",
+            compute_dtype="float32",
+            remat="none",
+            use_pallas=False,
+        )
+        return ArchConfig(**kw)

@@ -1,0 +1,277 @@
+"""Mamba-2 block (SSD — state-space duality, arXiv:2405.21060).
+
+Training path uses the chunked SSD algorithm: within-chunk quadratic
+(attention-like) term + across-chunk linear recurrence on (H, P, N) states,
+scanned with lax.scan.  Decode path is the O(1) state update.
+
+Layout: x (B, S, d_model) -> in_proj -> [z | xBC | dt]; depthwise causal
+conv over xBC; SSD over heads H = d_inner / head_dim with state size N.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.sharding import shard
+from ..nn.core import init_rmsnorm, rmsnorm, truncated_normal_init
+from .config import ArchConfig
+
+__all__ = [
+    "init_mamba2",
+    "mamba2_forward",
+    "mamba2_decode",
+    "mamba2_param_axes",
+    "init_ssm_state",
+    "ssd_chunked_ref",
+]
+
+
+def init_mamba2(key, cfg: ArchConfig) -> Dict:
+    s = cfg.ssm
+    d = cfg.d_model
+    din = s.d_inner(d)
+    H = s.n_heads(d)
+    N = s.d_state
+    G = s.n_groups
+    dt = jnp.dtype(cfg.param_dtype)
+    conv_dim = din + 2 * G * N
+    ks = jax.random.split(key, 5)
+    # dt bias initialized so softplus(dt_bias) spans [dt_min, dt_max]
+    u = jax.random.uniform(ks[3], (H,), minval=math.log(s.dt_min), maxval=math.log(s.dt_max))
+    dt_init = jnp.log(jnp.expm1(jnp.exp(u)))  # inverse softplus
+    return {
+        "in_proj": truncated_normal_init(
+            ks[0], (d, 2 * din + 2 * G * N + H), 1.0 / math.sqrt(d), dt
+        ),
+        "conv_w": truncated_normal_init(ks[1], (s.conv_kernel, conv_dim), 0.5, dt),
+        "conv_b": jnp.zeros((conv_dim,), dt),
+        "A_log": jnp.log(jnp.arange(1, H + 1, dtype=jnp.float32)),
+        "dt_bias": dt_init.astype(jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "gate_norm": init_rmsnorm(din, dt),
+        "out_proj": truncated_normal_init(ks[2], (din, d), 1.0 / math.sqrt(din), dt),
+    }
+
+
+def mamba2_param_axes(cfg: ArchConfig) -> Dict:
+    return {
+        "in_proj": ("fsdp", "mlp"),
+        "conv_w": (None, "mlp"),
+        "conv_b": ("mlp",),
+        "A_log": (None,),
+        "dt_bias": (None,),
+        "D": (None,),
+        "gate_norm": {"scale": (None,)},
+        "out_proj": ("mlp", "fsdp"),
+    }
+
+
+def _split_proj(p, x, cfg: ArchConfig):
+    s = cfg.ssm
+    d = cfg.d_model
+    din = s.d_inner(d)
+    G, N = s.n_groups, s.d_state
+    H = s.n_heads(d)
+    cd = jnp.dtype(cfg.compute_dtype)
+    zxbcdt = x.astype(cd) @ p["in_proj"].astype(cd)
+    z = zxbcdt[..., :din]
+    xbc = zxbcdt[..., din : 2 * din + 2 * G * N]
+    dt_raw = zxbcdt[..., 2 * din + 2 * G * N :]
+    return z, xbc, dt_raw, (din, G, N, H)
+
+
+def _causal_conv(xbc, w, b, kernel: int):
+    """Depthwise causal conv along seq. xbc: (B,S,C)."""
+    pad = jnp.pad(xbc, ((0, 0), (kernel - 1, 0), (0, 0)))
+    # depthwise: sum_k pad[:, t+k, c] * w[k, c]
+    out = sum(
+        pad[:, i : i + xbc.shape[1], :] * w[i][None, None, :] for i in range(kernel)
+    )
+    return jax.nn.silu(out + b)
+
+
+def ssd_chunked_ref(
+    xh: jnp.ndarray,   # (B,S,H,P)
+    dt: jnp.ndarray,   # (B,S,H)  (post-softplus)
+    A: jnp.ndarray,    # (H,) negative decay rates
+    Bm: jnp.ndarray,   # (B,S,G,N)
+    Cm: jnp.ndarray,   # (B,S,G,N)
+    chunk: int,
+    return_state: bool = False,
+):
+    """Chunked SSD scan (pure jnp oracle; mirrors the Pallas kernel).
+
+    Returns y: (B,S,H,P); with return_state also the final (B,H,N,P) state.
+    """
+    B_, S, H, P = xh.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    nc = S // chunk
+    rep = H // G
+
+    xc = xh.reshape(B_, nc, chunk, H, P)
+    dtc = dt.reshape(B_, nc, chunk, H)
+    Bc = Bm.reshape(B_, nc, chunk, G, N)
+    Cc = Cm.reshape(B_, nc, chunk, G, N)
+    # expand groups to heads
+    Bh = jnp.repeat(Bc, rep, axis=3)  # (B,nc,c,H,N)
+    Ch = jnp.repeat(Cc, rep, axis=3)
+
+    dA = dtc * A[None, None, None, :]           # (B,nc,c,H) negative
+    cums = jnp.cumsum(dA, axis=2)               # within-chunk cumulative
+    # within-chunk quadratic term
+    # L[i,j] = exp(cums_i - cums_j) for i>=j
+    diff = cums[:, :, :, None, :] - cums[:, :, None, :, :]  # (B,nc,i,j,H)
+    ii = jnp.arange(chunk)
+    causal = ii[:, None] >= ii[None, :]
+    L = jnp.where(causal[None, None, :, :, None], jnp.exp(diff), 0.0)
+    # scores: C_i · B_j
+    s = jnp.einsum("bnihd,bnjhd->bnijh", Ch, Bh)
+    y_diag = jnp.einsum(
+        "bnijh,bnjh,bnjhp->bnihp", s * L, dtc, xc
+    )
+
+    # chunk states: sum_j exp(cums_last - cums_j) dt_j B_j x_j
+    decay_to_end = jnp.exp(cums[:, :, -1:, :] - cums)        # (B,nc,c,H)
+    states = jnp.einsum("bnch,bnch,bnchd,bnchp->bnhdp",
+                        decay_to_end, dtc, Bh, xc).astype(jnp.float32)
+    chunk_decay = jnp.exp(cums[:, :, -1, :]).astype(jnp.float32)  # (B,nc,H)
+
+    def scan_fn(carry, t):
+        st, dec = t   # st: (B,H,N,P), dec: (B,H)
+        new = carry * dec[:, :, None, None] + st
+        return new, carry  # emit state BEFORE this chunk
+
+    # fp32 carry: the inter-chunk recurrence is the numerically sensitive
+    # (and dtype-stable) part regardless of compute dtype
+    init = jnp.zeros((B_, H, N, P), jnp.float32)
+    final_state, prev_states = jax.lax.scan(
+        scan_fn,
+        init,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)),
+    )
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)        # (B,nc,H,N,P)
+
+    # inter-chunk contribution: C_i · (decay_from_start_i * prev_state)
+    decay_from_start = jnp.exp(cums)                          # (B,nc,c,H)
+    y_off = jnp.einsum(
+        "bnchd,bnhdp,bnch->bnchp",
+        Ch.astype(jnp.float32),
+        prev_states,
+        decay_from_start.astype(jnp.float32),
+    )
+    y = (y_diag.astype(jnp.float32) + y_off).reshape(B_, S, H, P).astype(xh.dtype)
+    if return_state:
+        return y, final_state  # (B,H,N,P)
+    return y
+
+
+def mamba2_forward(p: Dict, x: jnp.ndarray, cfg: ArchConfig, return_state: bool = False):
+    s = cfg.ssm
+    cd = jnp.dtype(cfg.compute_dtype)
+    B, S, d = x.shape
+    z, xbc_raw, dt_raw, (din, G, N, H) = _split_proj(p, x, cfg)
+    xbc = _causal_conv(xbc_raw, p["conv_w"].astype(cd), p["conv_b"].astype(cd), s.conv_kernel)
+    xh = xbc[..., :din].reshape(B, S, H, s.head_dim)
+    Bm = xbc[..., din : din + G * N].reshape(B, S, G, N)
+    Cm = xbc[..., din + G * N :].reshape(B, S, G, N)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    A = -jnp.exp(p["A_log"])  # (H,)
+
+    xh = shard(xh, "batch", None, "mlp", None)
+    state = None
+    # pad the sequence to a chunk multiple (dt=0 rows are exact no-ops:
+    # decay exp(0)=1 and zero state/output contribution)
+    pad = (-S) % s.chunk
+    if pad:
+        xh_p = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt_p = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm_p = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm_p = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    else:
+        xh_p, dt_p, Bm_p, Cm_p = xh, dt, Bm, Cm
+    if cfg.use_pallas and not return_state:
+        from ..kernels.ssd.ops import ssd_scan
+
+        y = ssd_scan(xh_p, dt_p.astype(cd), A, Bm_p, Cm_p, chunk=s.chunk)
+    else:
+        y = ssd_chunked_ref(
+            xh_p, dt_p.astype(cd), A, Bm_p.astype(cd), Cm_p.astype(cd), s.chunk,
+            return_state=return_state,
+        )
+        if return_state:
+            y, state = y
+    if pad:
+        y = y[:, :S]
+    y = y + xh * p["D"][None, None, :, None].astype(cd)
+    y = y.reshape(B, S, din)
+    y = rmsnorm(p["gate_norm"], y * jax.nn.silu(z))
+    out = y @ p["out_proj"].astype(cd)
+    out = shard(out, "batch", "seq", None)
+    if return_state:
+        # conv state: the last (K-1) pre-conv channels
+        conv_state = xbc_raw[:, -(s.conv_kernel - 1) :, :].astype(jnp.float32)
+        return out, {"ssm": state.astype(jnp.float32), "conv": conv_state}
+    return out
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+
+def init_ssm_state(cfg: ArchConfig, n_layers: int, batch: int):
+    s = cfg.ssm
+    d = cfg.d_model
+    H = s.n_heads(d)
+    conv_dim = s.d_inner(d) + 2 * s.n_groups * s.d_state
+    return {
+        "ssm": jnp.zeros((n_layers, batch, H, s.d_state, s.head_dim), jnp.float32),
+        "conv": jnp.zeros((n_layers, batch, s.conv_kernel - 1, conv_dim), jnp.float32),
+    }
+
+
+def ssm_state_axes(cfg: ArchConfig) -> Dict:
+    return {
+        "ssm": ("stack", "cache_batch", "mlp", None, None),
+        "conv": ("stack", "cache_batch", None, "mlp"),
+    }
+
+
+def mamba2_decode(
+    p: Dict, x: jnp.ndarray, layer_state: Dict, cfg: ArchConfig
+) -> Tuple[jnp.ndarray, Dict]:
+    """x: (B,1,d); state['ssm']: (B,H,N,P); state['conv']: (B,K-1,C)."""
+    s = cfg.ssm
+    cd = jnp.dtype(cfg.compute_dtype)
+    B = x.shape[0]
+    z, xbc, dt_raw, (din, G, N, H) = _split_proj(p, x, cfg)
+    # conv state update
+    hist = jnp.concatenate([layer_state["conv"], xbc.astype(jnp.float32)], axis=1)
+    w = p["conv_w"].astype(jnp.float32)
+    conv_out = jnp.einsum("bkc,kc->bc", hist, w) + p["conv_b"].astype(jnp.float32)
+    xbc1 = jax.nn.silu(conv_out)[:, None, :].astype(cd)  # (B,1,C)
+    new_conv = hist[:, 1:, :]
+
+    xh = xbc1[..., :din].reshape(B, H, s.head_dim)
+    Bm = xbc1[..., din : din + G * N].reshape(B, G, N)
+    Cm = xbc1[..., din + G * N :].reshape(B, G, N)
+    rep = H // G
+    Bh = jnp.repeat(Bm, rep, axis=1)  # (B,H,N)
+    Ch = jnp.repeat(Cm, rep, axis=1)
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    A = -jnp.exp(p["A_log"])
+
+    decay = jnp.exp(dt * A[None, :])  # (B,H)
+    st = layer_state["ssm"]
+    st_new = st * decay[..., None, None] + jnp.einsum(
+        "bh,bhn,bhp->bhnp", dt, Bh.astype(jnp.float32), xh.astype(jnp.float32)
+    )
+    y = jnp.einsum("bhn,bhnp->bhp", Ch.astype(jnp.float32), st_new).astype(cd)
+    y = y + xh * p["D"][None, :, None].astype(cd)
+    y = y.reshape(B, 1, din)
+    y = rmsnorm(p["gate_norm"], y * jax.nn.silu(z))
+    out = y @ p["out_proj"].astype(cd)
+    return out, {"ssm": st_new, "conv": new_conv}

@@ -1,0 +1,52 @@
+"""Dense MLP blocks (SwiGLU / GELU) with TP sharding annotations."""
+from __future__ import annotations
+
+import math
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.sharding import shard
+from ..nn.core import truncated_normal_init
+from .config import ArchConfig
+
+__all__ = ["init_mlp", "mlp_forward", "mlp_param_axes"]
+
+
+def init_mlp(key, d_model: int, d_ff: int, act: str, param_dtype) -> Dict:
+    dt = jnp.dtype(param_dtype)
+    ks = jax.random.split(key, 3)
+    std_in = 1.0 / math.sqrt(d_model)
+    std_out = 1.0 / math.sqrt(d_ff)
+    p = {
+        "w_up": truncated_normal_init(ks[0], (d_model, d_ff), std_in, dt),
+        "w_down": truncated_normal_init(ks[1], (d_ff, d_model), std_out, dt),
+    }
+    if act == "swiglu":
+        p["w_gate"] = truncated_normal_init(ks[2], (d_model, d_ff), std_in, dt)
+    return p
+
+
+def mlp_param_axes(act: str) -> Dict:
+    ax = {"w_up": ("fsdp", "mlp"), "w_down": ("mlp", "fsdp")}
+    if act == "swiglu":
+        ax["w_gate"] = ("fsdp", "mlp")
+    return ax
+
+
+def mlp_forward(p: Dict, x: jnp.ndarray, cfg: ArchConfig, act: str) -> jnp.ndarray:
+    cd = jnp.dtype(cfg.compute_dtype)
+    x = x.astype(cd)
+    mid = (None,) * (x.ndim - 2)  # rank-general: (B,S,d) or flattened (T,d)
+    up = x @ p["w_up"].astype(cd)
+    up = shard(up, "batch", *mid, "mlp")
+    if act == "swiglu":
+        gate = x @ p["w_gate"].astype(cd)
+        h = jax.nn.silu(gate) * up
+    else:
+        h = jax.nn.gelu(up, approximate=True)
+    out = h @ p["w_down"].astype(cd)
+    if x.ndim == 3:
+        return shard(out, "batch", "seq", None)
+    return shard(out, "batch", None)

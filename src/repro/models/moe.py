@@ -1,0 +1,167 @@
+"""Mixture-of-Experts layer: top-k routing, capacity-bounded sort-based
+dispatch, expert-parallel execution, optional shared experts
+(DeepSeek-style), load-balance + router-z auxiliary losses.
+
+Dispatch design (TPU-native): token-slots are sorted by expert id PER GROUP
+(group = data shard = the all-to-all boundary, exactly as in real
+expert-parallel systems) and scattered into a per-group (E, C, d) buffer
+whose expert dim is sharded over `model` (EP); XLA lowers the cross-sharding
+scatter/gather to all-to-alls.  Expert FFNs run as one batched einsum over
+(G, E) — MXU friendly.
+
+Two alternative formulations were evaluated and REFUTED (EXPERIMENTS.md
+§Perf): a global sort (no groups) replicates the combine across the model
+axis (80-270 GiB/device at 1M tokens); a vmap-free vectorized variant with
+explicit (G, Tg*k, d) staging makes XLA replicate the inverse-permutation
+gathers (260 GiB/device).  The vmapped per-group form below lowers an order
+of magnitude leaner.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.sharding import shard
+from ..nn.core import truncated_normal_init
+from .config import ArchConfig, MoEConfig
+from .mlp import init_mlp, mlp_forward, mlp_param_axes
+
+__all__ = ["init_moe", "moe_forward", "moe_param_axes", "DISPATCH_GROUPS"]
+
+DISPATCH_GROUPS = 16  # = data shards: dispatch is local per group, like real EP
+
+
+def init_moe(key, cfg: ArchConfig) -> Dict:
+    m = cfg.moe
+    d = cfg.d_model
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 6)
+    std_in = 1.0 / math.sqrt(d)
+    std_out = 1.0 / math.sqrt(m.d_ff_expert)
+    p = {
+        "router": truncated_normal_init(ks[0], (d, m.num_experts), std_in, jnp.float32),
+        "w_gate": truncated_normal_init(ks[1], (m.num_experts, d, m.d_ff_expert), std_in, dt),
+        "w_up": truncated_normal_init(ks[2], (m.num_experts, d, m.d_ff_expert), std_in, dt),
+        "w_down": truncated_normal_init(ks[3], (m.num_experts, m.d_ff_expert, d), std_out, dt),
+    }
+    if m.num_shared:
+        d_sh = m.d_ff_shared or m.d_ff_expert * m.num_shared
+        p["shared"] = init_mlp(ks[4], d, d_sh, "swiglu", dt)
+    return p
+
+
+def moe_param_axes(cfg: ArchConfig) -> Dict:
+    ax = {
+        "router": ("fsdp", None),
+        "w_gate": ("experts", "fsdp", None),
+        "w_up": ("experts", "fsdp", None),
+        "w_down": ("experts", None, "fsdp"),
+    }
+    if cfg.moe.num_shared:
+        ax["shared"] = mlp_param_axes("swiglu")
+    return ax
+
+
+def _route(logits: jnp.ndarray, m: MoEConfig) -> Tuple[jnp.ndarray, jnp.ndarray, Dict]:
+    """logits (T, E) -> (weights (T,k), ids (T,k), aux losses)."""
+    probs = jax.nn.softmax(logits, axis=-1)
+    weights, ids = jax.lax.top_k(probs, m.top_k)
+    weights = weights / jnp.maximum(weights.sum(-1, keepdims=True), 1e-9)
+    # load-balance loss (Switch): E * sum_e f_e * p_e
+    E = logits.shape[-1]
+    pe = probs.mean(0)
+    fe = jnp.zeros((E,), jnp.float32).at[ids.reshape(-1)].add(1.0) / (
+        ids.shape[0] * m.top_k
+    )
+    aux = {
+        "load_balance": E * jnp.sum(fe * pe),
+        "router_z": jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2),
+    }
+    return weights, ids, aux
+
+
+def _dispatch_group(xt, weights, ids, *, E, k, C, cd):
+    """Sort-based dispatch for ONE token group (vmapped over groups).
+
+    xt (Tg, d); weights/ids (Tg, k).  The intra-expert position is
+    arange - segment_start after the sort (O(Tg*k), no (Tg*k, E)
+    intermediate); slots beyond the per-group capacity C are dropped.
+    """
+    Tg, d = xt.shape
+    flat_ids = ids.reshape(-1)                      # (Tg*k,)
+    order = jnp.argsort(flat_ids)
+    sorted_ids = flat_ids[order]
+    counts = jnp.zeros((E,), jnp.int32).at[sorted_ids].add(1)
+    seg_start = jnp.concatenate([jnp.zeros((1,), jnp.int32), jnp.cumsum(counts)[:-1]])
+    pos_in_expert = jnp.arange(Tg * k, dtype=jnp.int32) - seg_start[sorted_ids]
+    keep = pos_in_expert < C
+
+    token_idx = order // k
+    buf = jnp.zeros((E, C, d), cd)
+    rows = jnp.where(keep, sorted_ids, E)           # drop -> OOB row
+    cols = jnp.where(keep, pos_in_expert, 0)
+    buf = buf.at[rows, cols].set(xt[token_idx].astype(cd), mode="drop")
+    return buf, (rows, cols, keep, token_idx, order)
+
+
+def _combine_group(y, meta, weights, *, E, k, cd, Tg, d):
+    rows, cols, keep, token_idx, order = meta
+    slot_out = y[rows.clip(0, E - 1), cols]          # (Tg*k, d)
+    slot_out = jnp.where(keep[:, None], slot_out, 0.0)
+    slot_w = weights.reshape(-1)[order].astype(cd)
+    return jnp.zeros((Tg, d), cd).at[token_idx].add(slot_out * slot_w[:, None])
+
+
+def moe_forward(p: Dict, x: jnp.ndarray, cfg: ArchConfig) -> Tuple[jnp.ndarray, Dict]:
+    """x: (B,S,d) -> (B,S,d), aux losses."""
+    m = cfg.moe
+    cd = jnp.dtype(cfg.compute_dtype)
+    B, S, d = x.shape
+    T = B * S
+    xt = x.reshape(T, d)
+    xt = shard(xt, "batch", None)
+
+    logits = (xt.astype(jnp.float32)) @ p["router"]
+    weights, ids, aux = _route(logits, m)
+
+    k = m.top_k
+    E = m.num_experts
+    G = DISPATCH_GROUPS if T % DISPATCH_GROUPS == 0 else 1
+    Tg = T // G
+    C = max(1, int(m.capacity_factor * Tg * k / E))
+
+    xg = shard(xt.reshape(G, Tg, d), "batch", None, None)
+    wg = weights.reshape(G, Tg, k)
+    ig = ids.reshape(G, Tg, k)
+
+    disp = jax.vmap(
+        functools.partial(_dispatch_group, E=E, k=k, C=C, cd=cd),
+        in_axes=(0, 0, 0),
+    )
+    buf, meta = disp(xg, wg, ig)                    # buf: (G, E, C, d)
+    buf = shard(buf, "batch", "experts", None, None)
+
+    # expert FFN batched over (G, E)
+    g_ = jnp.einsum("gecd,edf->gecf", buf, p["w_gate"].astype(cd))
+    u_ = jnp.einsum("gecd,edf->gecf", buf, p["w_up"].astype(cd))
+    h = jax.nn.silu(g_) * u_
+    h = shard(h, "batch", "experts", None, None)
+    y = jnp.einsum("gecf,efd->gecd", h, p["w_down"].astype(cd))
+    y = shard(y, "batch", "experts", None, None)
+
+    comb = jax.vmap(
+        functools.partial(_combine_group, E=E, k=k, cd=cd, Tg=Tg, d=d),
+        in_axes=(0, 0, 0),
+    )
+    out = comb(y, meta, wg).reshape(T, d)           # (G, Tg, d) -> (T, d)
+    out = shard(out, "batch", None)
+
+    if m.num_shared:
+        out = out + mlp_forward(p["shared"], xt, cfg, "swiglu").reshape(T, d)
+
+    out = out.reshape(B, S, d)
+    return shard(out, "batch", "seq", None), aux

@@ -1,0 +1,149 @@
+"""Griffin / RecurrentGemma recurrent block (RG-LRU, arXiv:2402.19427).
+
+Block: x -> [branch1: linear -> gelu] ⊙ [branch2: linear -> causal conv ->
+RG-LRU] -> out projection.  RG-LRU recurrence (diagonal, input-gated):
+
+    r_t = sigmoid(W_r x_t);  i_t = sigmoid(W_i x_t)
+    a_t = exp(c * softplus(Λ) * (-r_t))          (0 < a_t < 1, c = 8)
+    h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t²) ⊙ (i_t ⊙ x_t)
+
+Training uses an associative scan over the sequence (O(log S) depth — this
+is the sub-quadratic path that makes the long_500k cell feasible); decode is
+the O(1) state update.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.sharding import shard
+from ..nn.core import truncated_normal_init
+from .config import ArchConfig
+
+__all__ = [
+    "init_rglru_block",
+    "rglru_block_forward",
+    "rglru_block_decode",
+    "rglru_param_axes",
+    "init_rglru_state",
+]
+
+_C = 8.0
+
+
+def init_rglru_block(key, cfg: ArchConfig) -> Dict:
+    d = cfg.d_model
+    w = cfg.hybrid.lru_width or d
+    k = cfg.hybrid.conv_kernel
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 7)
+    std = 1.0 / math.sqrt(d)
+    # Λ init so that a^c spans roughly [0.9, 0.999]
+    lam = jax.random.uniform(ks[6], (w,), minval=0.0, maxval=1.0)
+    a_init = 0.9 + 0.099 * lam
+    lambda_init = jnp.log(jnp.expm1(-jnp.log(a_init) / _C))  # inv softplus
+    return {
+        "w_x": truncated_normal_init(ks[0], (d, w), std, dt),
+        "w_gate": truncated_normal_init(ks[1], (d, w), std, dt),
+        "conv_w": truncated_normal_init(ks[2], (k, w), 0.5, dt),
+        "conv_b": jnp.zeros((w,), dt),
+        "w_r": truncated_normal_init(ks[3], (w, w), 1.0 / math.sqrt(w), dt),
+        "w_i": truncated_normal_init(ks[4], (w, w), 1.0 / math.sqrt(w), dt),
+        "lambda": lambda_init.astype(jnp.float32),
+        "out": truncated_normal_init(ks[5], (w, d), 1.0 / math.sqrt(w), dt),
+    }
+
+
+def rglru_param_axes(cfg: ArchConfig) -> Dict:
+    return {
+        "w_x": ("fsdp", "lru"),
+        "w_gate": ("fsdp", "lru"),
+        "conv_w": (None, "lru"),
+        "conv_b": ("lru",),
+        "w_r": ("fsdp", "lru"),
+        "w_i": ("fsdp", "lru"),
+        "lambda": ("lru",),
+        "out": ("lru", "fsdp"),
+    }
+
+
+def _rglru_gates(p, u, cd):
+    """u: (B,S,w) conv output -> (a, gated_input) both (B,S,w) fp32."""
+    r = jax.nn.sigmoid(u @ p["w_r"].astype(cd)).astype(jnp.float32)
+    i = jax.nn.sigmoid(u @ p["w_i"].astype(cd)).astype(jnp.float32)
+    log_a = -_C * jax.nn.softplus(p["lambda"]) * r          # (B,S,w) <= 0
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * u.astype(jnp.float32))
+    return a, gated
+
+
+def _causal_conv(x, w, b, kernel):
+    pad = jnp.pad(x, ((0, 0), (kernel - 1, 0), (0, 0)))
+    out = sum(pad[:, i : i + x.shape[1], :] * w[i][None, None, :] for i in range(kernel))
+    return out + b
+
+
+def rglru_block_forward(
+    p: Dict, x: jnp.ndarray, cfg: ArchConfig, return_state: bool = False
+):
+    cd = jnp.dtype(cfg.compute_dtype)
+    k = cfg.hybrid.conv_kernel
+    gate = jax.nn.gelu(x.astype(cd) @ p["w_gate"].astype(cd), approximate=True)
+    u_pre = x.astype(cd) @ p["w_x"].astype(cd)
+    u_pre = shard(u_pre, "batch", "seq", "lru")
+    u = _causal_conv(u_pre, p["conv_w"].astype(cd), p["conv_b"].astype(cd), k)
+    a, gated = _rglru_gates(p, u, cd)
+
+    # associative scan over the linear recurrence h_t = a_t h_{t-1} + b_t
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, b1 * a2 + b2
+
+    a_s, h = jax.lax.associative_scan(combine, (a, gated), axis=1)
+    y = h.astype(cd) * gate
+    out = y @ p["out"].astype(cd)
+    out = shard(out, "batch", "seq", None)
+    if return_state:
+        state = {
+            "h": h[:, -1].astype(jnp.float32),
+            "conv": u_pre[:, -(k - 1) :, :].astype(jnp.float32),
+        }
+        return out, state
+    return out
+
+
+def init_rglru_state(cfg: ArchConfig, n_rec_layers: int, batch: int):
+    w = cfg.hybrid.lru_width or cfg.d_model
+    k = cfg.hybrid.conv_kernel
+    return {
+        "h": jnp.zeros((n_rec_layers, batch, w), jnp.float32),
+        "conv": jnp.zeros((n_rec_layers, batch, k - 1, w), jnp.float32),
+    }
+
+
+def rglru_state_axes(cfg: ArchConfig) -> Dict:
+    return {
+        "h": ("stack", "cache_batch", "lru"),
+        "conv": ("stack", "cache_batch", None, "lru"),
+    }
+
+
+def rglru_block_decode(
+    p: Dict, x: jnp.ndarray, state: Dict, cfg: ArchConfig
+) -> Tuple[jnp.ndarray, Dict]:
+    """x: (B,1,d); state h: (B,w), conv: (B,K-1,w)."""
+    cd = jnp.dtype(cfg.compute_dtype)
+    gate = jax.nn.gelu(x.astype(cd) @ p["w_gate"].astype(cd), approximate=True)
+    u = x.astype(cd) @ p["w_x"].astype(cd)  # (B,1,w)
+    hist = jnp.concatenate([state["conv"], u.astype(jnp.float32)], axis=1)
+    conv_out = jnp.einsum("bkw,kw->bw", hist, p["conv_w"].astype(jnp.float32))
+    u1 = (conv_out + p["conv_b"].astype(jnp.float32))[:, None, :].astype(cd)
+    a, gated = _rglru_gates(p, u1, cd)
+    h_new = a[:, 0] * state["h"] + gated[:, 0]
+    y = h_new[:, None, :].astype(cd) * gate
+    out = y @ p["out"].astype(cd)
+    return out, {"h": h_new, "conv": hist[:, 1:, :]}

@@ -1,0 +1,69 @@
+"""Rotary position embeddings: standard RoPE and Qwen2-VL's M-RoPE.
+
+M-RoPE splits the head_dim/2 rotary frequencies into (temporal, height,
+width) sections with separate position ids per section; for pure-text tokens
+all three position streams coincide, which reduces exactly to RoPE.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+__all__ = ["rope_freqs", "apply_rope", "apply_mrope", "text_mrope_positions"]
+
+
+def rope_freqs(head_dim: int, theta: float = 10_000.0) -> jnp.ndarray:
+    """(head_dim/2,) inverse frequencies."""
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def _rotate(x: jnp.ndarray, angles: jnp.ndarray) -> jnp.ndarray:
+    """x: (..., S, D); angles: broadcastable (..., S, D/2)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    cos = jnp.cos(angles).astype(x.dtype)
+    sin = jnp.sin(angles).astype(x.dtype)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+def apply_rope(
+    x: jnp.ndarray,
+    positions: jnp.ndarray,
+    theta: float = 10_000.0,
+) -> jnp.ndarray:
+    """x: (B, H, S, D); positions: (B, S) or (S,)."""
+    freqs = rope_freqs(x.shape[-1], theta)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    angles = positions[:, None, :, None].astype(jnp.float32) * freqs  # (B,1,S,D/2)
+    return _rotate(x, angles)
+
+
+def text_mrope_positions(positions: jnp.ndarray) -> jnp.ndarray:
+    """(B, S) -> (3, B, S): t/h/w streams coincide for text tokens."""
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    return jnp.broadcast_to(positions[None], (3,) + positions.shape)
+
+
+def apply_mrope(
+    x: jnp.ndarray,
+    positions3: jnp.ndarray,
+    sections: Tuple[int, int, int],
+    theta: float = 10_000.0,
+) -> jnp.ndarray:
+    """x: (B, H, S, D); positions3: (3, B, S); sections sum to D/2."""
+    half = x.shape[-1] // 2
+    assert sum(sections) == half, (sections, half)
+    freqs = rope_freqs(x.shape[-1], theta)  # (D/2,)
+    # angles per stream: (3, B, S, D/2)
+    ang = positions3[..., None].astype(jnp.float32) * freqs
+    # select stream per frequency section
+    sel = jnp.concatenate(
+        [jnp.full((s,), i, dtype=jnp.int32) for i, s in enumerate(sections)]
+    )  # (D/2,)
+    angles = jnp.moveaxis(ang, 0, -1)  # (B, S, D/2, 3)
+    angles = jnp.take_along_axis(angles, sel[None, None, :, None], axis=-1)[..., 0]
+    return _rotate(x, angles[:, None, :, :])

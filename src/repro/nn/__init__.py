@@ -1,0 +1,29 @@
+from .core import (
+    dense,
+    embed,
+    gelu,
+    init_dense,
+    init_embed,
+    init_layernorm,
+    init_rmsnorm,
+    layernorm,
+    rmsnorm,
+    silu,
+    softmax_cross_entropy,
+    truncated_normal_init,
+)
+
+__all__ = [
+    "dense",
+    "embed",
+    "gelu",
+    "silu",
+    "init_dense",
+    "init_embed",
+    "init_layernorm",
+    "init_rmsnorm",
+    "layernorm",
+    "rmsnorm",
+    "softmax_cross_entropy",
+    "truncated_normal_init",
+]

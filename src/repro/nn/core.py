@@ -1,0 +1,92 @@
+"""Minimal functional NN primitives shared by the Tao model and the LM zoo.
+
+Everything is a pure function over parameter pytrees (nested dicts of
+jnp arrays).  No framework dependency: keeps the whole stack jit/pjit
+friendly and easy to shard by tree-path rules.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+
+
+def truncated_normal_init(key, shape, stddev: float, dtype=jnp.float32):
+    # 2-sigma truncation, rescaled to preserve stddev (same as jax.nn init).
+    unscaled = jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+    return (unscaled * stddev / 0.87962566103423978).astype(dtype)
+
+
+def init_dense(
+    key,
+    in_dim: int,
+    out_dim: int,
+    *,
+    use_bias: bool = True,
+    dtype=jnp.float32,
+    scale: float = 1.0,
+):
+    """Fan-in scaled initialization."""
+    std = scale / math.sqrt(in_dim)
+    p = {"w": truncated_normal_init(key, (in_dim, out_dim), std, dtype)}
+    if use_bias:
+        p["b"] = jnp.zeros((out_dim,), dtype)
+    return p
+
+
+def dense(p, x):
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+def init_embed(key, vocab: int, dim: int, dtype=jnp.float32):
+    return {"table": truncated_normal_init(key, (vocab, dim), 1.0, dtype)}
+
+
+def embed(p, ids):
+    return p["table"][ids]
+
+
+def init_layernorm(dim: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((dim,), dtype), "bias": jnp.zeros((dim,), dtype)}
+
+
+def layernorm(p, x, eps: float = 1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return y * p["scale"] + p["bias"]
+
+
+def init_rmsnorm(dim: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((dim,), dtype)}
+
+
+def rmsnorm(p, x, eps: float = 1e-6):
+    # Normalize in fp32 for stability regardless of compute dtype.
+    xf = x.astype(jnp.float32)
+    y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def gelu(x):
+    return jax.nn.gelu(x, approximate=True)
+
+
+def silu(x):
+    return jax.nn.silu(x)
+
+
+def softmax_cross_entropy(logits, labels, num_classes: Optional[int] = None):
+    """labels: int array; returns per-element CE."""
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    onehot = jax.nn.one_hot(labels, logits.shape[-1], dtype=logp.dtype)
+    return -jnp.sum(onehot * logp, axis=-1)

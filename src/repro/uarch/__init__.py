@@ -1,0 +1,30 @@
+"""µarch simulation substrate: the gem5 analogue Tao's data plane requires."""
+from .config import (
+    DESIGN_SPACE,
+    UARCH_A,
+    UARCH_B,
+    UARCH_C,
+    MicroArchConfig,
+    enumerate_design_space,
+    sample_design_space,
+)
+from .detailed import run_detailed, summarize_detailed
+from .functional import run_functional
+from .programs import ALL_BENCHMARKS, TEST_BENCHMARKS, TRAIN_BENCHMARKS, get_benchmark
+
+__all__ = [
+    "MicroArchConfig",
+    "DESIGN_SPACE",
+    "UARCH_A",
+    "UARCH_B",
+    "UARCH_C",
+    "enumerate_design_space",
+    "sample_design_space",
+    "run_functional",
+    "run_detailed",
+    "summarize_detailed",
+    "get_benchmark",
+    "ALL_BENCHMARKS",
+    "TRAIN_BENCHMARKS",
+    "TEST_BENCHMARKS",
+]

@@ -1,0 +1,41 @@
+import os
+import sys
+
+# Tests run single-device (the dry-run subprocesses set their own flags).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import pytest
+
+from repro.uarch import UARCH_A, UARCH_B, get_benchmark, run_detailed, run_functional
+
+TRACE_LEN = 6000
+
+
+@pytest.fixture(scope="session")
+def dee_traces():
+    prog = get_benchmark("dee")
+    ft = run_functional(prog, TRACE_LEN)
+    det, summ = run_detailed(prog, ft, UARCH_A)
+    return prog, ft, det, summ
+
+
+@pytest.fixture(scope="session")
+def small_tao_setup():
+    """Tiny Tao config + dataset used across model tests."""
+    from repro.core import FeatureConfig, TaoConfig, build_windows, extract_features
+    from repro.core.align import build_adjusted_trace
+
+    prog = get_benchmark("lee")
+    ft = run_functional(prog, 4000)
+    det, _ = run_detailed(prog, ft, UARCH_A)
+    al = build_adjusted_trace(det)
+    fcfg = FeatureConfig(n_buckets=64, n_queue=4, n_mem=8)
+    fs = extract_features(al.adjusted, fcfg)
+    cfg = TaoConfig(
+        window=17, d_model=32, n_heads=2, n_layers=1, d_ff=64, d_cat=16, features=fcfg
+    )
+    ds = build_windows(fs, cfg.window)
+    return cfg, ds, al, ft

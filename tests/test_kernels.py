@@ -1,0 +1,158 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode on CPU):
+shape/dtype sweeps + hypothesis property checks."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.kernels.attention.ops import flash_attention
+from repro.kernels.attention.ref import attention_ref
+from repro.kernels.ssd.ops import ssd_scan
+from repro.kernels.ssd.ref import ssd_sequential_ref
+from repro.models.attention import flash_ref
+from repro.models.mamba2 import ssd_chunked_ref
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "B,H,Sq,Sk,D,causal",
+    [
+        (1, 1, 64, 64, 32, True),
+        (2, 4, 128, 128, 64, True),
+        (1, 2, 96, 160, 32, False),   # non-square, padded blocks
+        (2, 2, 256, 256, 128, True),
+    ],
+)
+def test_flash_kernel_vs_ref(B, H, Sq, Sk, D, causal, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, H, Sq, D), dtype)
+    k = jax.random.normal(ks[1], (B, H, Sk, D), dtype)
+    v = jax.random.normal(ks[2], (B, H, Sk, D), dtype)
+    out = flash_attention(q, k, v, causal=causal, block_q=64, block_k=64)
+    ref = attention_ref(q, k, v, causal=causal)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), atol=tol, rtol=tol
+    )
+
+
+def test_flash_jnp_ref_matches_naive():
+    """The model's chunked flash_ref (used in every zoo arch) against the
+    naive oracle, including the local-window mask."""
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    B, H, S, D = 2, 2, 96, 32
+    q = jax.random.normal(ks[0], (B, H, S, D))
+    k = jax.random.normal(ks[1], (B, H, S, D))
+    v = jax.random.normal(ks[2], (B, H, S, D))
+    out = flash_ref(q, k, v, causal=True, block_q=32, block_k=32)
+    ref = attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5, rtol=2e-5)
+
+    # windowed: compare against explicit masked softmax
+    win = 16
+    outw = flash_ref(q, k, v, causal=True, window=win, block_q=32, block_k=32)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, k) / np.sqrt(D)
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(S)[None, :]
+    mask = (qpos >= kpos) & (qpos - kpos < win)
+    s = jnp.where(mask[None, None], s, -jnp.inf)
+    refw = jnp.einsum("bhqk,bhkd->bhqd", jax.nn.softmax(s, -1), v)
+    np.testing.assert_allclose(np.asarray(outw), np.asarray(refw), atol=2e-5, rtol=2e-5)
+
+
+def test_flash_q_offset_decode_semantics():
+    """q_offset: a 1-token query at position P equals full-prefix attention."""
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    B, H, S, D = 1, 2, 64, 32
+    q = jax.random.normal(ks[0], (B, H, S, D))
+    k = jax.random.normal(ks[1], (B, H, S, D))
+    v = jax.random.normal(ks[2], (B, H, S, D))
+    full = attention_ref(q, k, v, causal=True)
+    last = flash_attention(q[:, :, -1:], k, v, causal=True, q_offset=S - 1,
+                           block_q=32, block_k=32)
+    np.testing.assert_allclose(
+        np.asarray(last[:, :, 0]), np.asarray(full[:, :, -1]), atol=2e-5, rtol=2e-5
+    )
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    B=st.integers(1, 2),
+    H=st.integers(1, 3),
+    S=st.sampled_from([32, 48, 80]),
+    D=st.sampled_from([16, 32]),
+)
+def test_flash_kernel_property(B, H, S, D):
+    ks = jax.random.split(jax.random.PRNGKey(B * 100 + H * 10 + S + D), 3)
+    q = jax.random.normal(ks[0], (B, H, S, D))
+    k = jax.random.normal(ks[1], (B, H, S, D))
+    v = jax.random.normal(ks[2], (B, H, S, D))
+    out = flash_attention(q, k, v, causal=True, block_q=32, block_k=32)
+    ref = attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=3e-5, rtol=3e-5)
+
+
+# ---------------------------------------------------------------------------
+# SSD
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "B,S,H,P,G,N,c",
+    [
+        (2, 128, 4, 16, 1, 8, 32),
+        (1, 64, 2, 8, 2, 16, 16),
+        (1, 256, 8, 32, 1, 16, 64),
+    ],
+)
+def test_ssd_kernel_vs_oracles(B, S, H, P, G, N, c):
+    ks = jax.random.split(jax.random.PRNGKey(3), 5)
+    xh = jax.random.normal(ks[0], (B, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H))) * 0.1
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.3)
+    Bm = jax.random.normal(ks[3], (B, S, G, N)) * 0.5
+    Cm = jax.random.normal(ks[4], (B, S, G, N)) * 0.5
+    seq = ssd_sequential_ref(xh, dt, A, Bm, Cm)
+    chk = ssd_chunked_ref(xh, dt, A, Bm, Cm, chunk=c)
+    ker = ssd_scan(xh, dt, A, Bm, Cm, chunk=c)
+    np.testing.assert_allclose(np.asarray(chk), np.asarray(seq), atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(ker), np.asarray(seq), atol=1e-4, rtol=1e-4)
+
+
+def test_ssd_final_state_matches_sequential():
+    """Chunked scan's returned final state equals the literal recurrence's."""
+    ks = jax.random.split(jax.random.PRNGKey(4), 5)
+    B, S, H, P, G, N, c = 1, 96, 2, 8, 1, 8, 32
+    xh = jax.random.normal(ks[0], (B, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H))) * 0.1
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.3)
+    Bm = jax.random.normal(ks[3], (B, S, G, N)) * 0.5
+    Cm = jax.random.normal(ks[4], (B, S, G, N)) * 0.5
+    _, state = ssd_chunked_ref(xh, dt, A, Bm, Cm, chunk=c, return_state=True)
+
+    # sequential state
+    Bh = jnp.repeat(Bm, H // G, axis=2)
+    st = jnp.zeros((B, H, N, P))
+    for t in range(S):
+        decay = jnp.exp(dt[:, t] * A[None, :])
+        st = st * decay[..., None, None] + jnp.einsum(
+            "bh,bhn,bhp->bhnp", dt[:, t], Bh[:, t], xh[:, t]
+        )
+    np.testing.assert_allclose(np.asarray(state), np.asarray(st), atol=1e-4, rtol=1e-4)
+
+
+def test_ssd_dtype_bf16():
+    ks = jax.random.split(jax.random.PRNGKey(5), 5)
+    B, S, H, P, G, N, c = 1, 64, 2, 8, 1, 8, 32
+    xh = jax.random.normal(ks[0], (B, S, H, P), jnp.bfloat16)
+    dt = (jax.nn.softplus(jax.random.normal(ks[1], (B, S, H))) * 0.1).astype(jnp.bfloat16)
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.3)
+    Bm = (jax.random.normal(ks[3], (B, S, G, N)) * 0.5).astype(jnp.bfloat16)
+    Cm = (jax.random.normal(ks[4], (B, S, G, N)) * 0.5).astype(jnp.bfloat16)
+    ker = ssd_scan(xh, dt, A, Bm, Cm, chunk=c)
+    seq = ssd_sequential_ref(xh, dt, A, Bm, Cm)
+    np.testing.assert_allclose(
+        np.asarray(ker, np.float32), np.asarray(seq, np.float32), atol=5e-2, rtol=5e-2
+    )

@@ -1,0 +1,88 @@
+"""Mahalanobis design selection (§4.3) + transfer-learning regimes (§5.5)."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core.selection import (
+    mahalanobis_matrix,
+    measure_design_metrics,
+    select_pair_euclidean,
+    select_pair_mahalanobis,
+    select_random,
+)
+from repro.core.transfer import train_tao, transfer_finetune
+
+
+def test_mahalanobis_matrix_properties():
+    rng = np.random.default_rng(0)
+    m = rng.normal(size=(6, 4))
+    d = mahalanobis_matrix(m)
+    assert d.shape == (6, 6)
+    assert np.allclose(d, d.T)
+    assert np.allclose(np.diag(d), 0)
+    assert (d >= 0).all()
+
+
+def test_mahalanobis_picks_outlier_pair():
+    # cluster + two opposite outliers: the outlier pair is farthest
+    rng = np.random.default_rng(1)
+    pts = rng.normal(size=(8, 4)) * 0.05
+    pts[0] = [3, 3, 3, 3]
+    pts[1] = [-3, -3, -3, -3]
+    i, j = select_pair_mahalanobis(pts)
+    assert {i, j} == {0, 1}
+
+
+def test_mahalanobis_scale_invariant_euclidean_not():
+    """The paper picks Mahalanobis because it normalizes metric scales; the
+    clean statement of that property: rescaling one metric column leaves
+    the MD matrix unchanged, while Euclidean distances change arbitrarily."""
+    rng = np.random.default_rng(2)
+    pts = rng.normal(size=(6, 4))
+    scaled = pts.copy()
+    scaled[:, 0] *= 1000.0
+    d1 = mahalanobis_matrix(pts)
+    d2 = mahalanobis_matrix(scaled)
+    np.testing.assert_allclose(d1, d2, rtol=1e-6, atol=1e-8)
+    # euclidean selection generally flips to the scaled column's extremes
+    e1 = np.linalg.norm(pts[0] - pts[1])
+    e2 = np.linalg.norm(scaled[0] - scaled[1])
+    assert abs(e1 - e2) > 1.0
+
+
+def test_select_random_distinct():
+    sel = select_random(10, 4, seed=3)
+    assert len(set(sel)) == 4
+
+
+def test_measure_design_metrics_shape():
+    from repro.uarch import UARCH_A, UARCH_B
+
+    m = measure_design_metrics([UARCH_A, UARCH_B], ["lee"], instructions=800)
+    assert m.shape == (2, 4)
+    assert (m[:, 0] > 0).all()  # CPI positive
+
+
+def test_transfer_freezes_shared_embeddings(small_tao_setup):
+    cfg, ds, _, _ = small_tao_setup
+    donor = train_tao(cfg, ds.subsample(12), epochs=1, batch_size=4)
+    res = transfer_finetune(
+        cfg,
+        donor.params["embed"],
+        donor.params,
+        ds.subsample(12),
+        epochs=2,
+        batch_size=4,
+    )
+    for a, b in zip(
+        jax.tree.leaves(donor.params["embed"]), jax.tree.leaves(res.params["embed"])
+    ):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+    # prediction layers did change
+    changed = any(
+        not np.array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(
+            jax.tree.leaves(donor.params["pred"]), jax.tree.leaves(res.params["pred"])
+        )
+    )
+    assert changed

@@ -1,0 +1,81 @@
+"""Logical-axis sharding rule engine (pure spec logic, no multi-device)."""
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.sharding import LOGICAL_RULES, logical_to_spec
+
+
+class FakeMesh:
+    """Duck-typed mesh: logical_to_spec only reads .shape."""
+
+    def __init__(self, shape):
+        self.shape = shape
+
+
+SINGLE = FakeMesh({"data": 16, "model": 16})
+MULTI = FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+
+def test_batch_spans_pod_and_data():
+    spec = logical_to_spec(("batch", "seq"), shape=(256, 4096), mesh=MULTI)
+    assert spec == P(("pod", "data"), "model")
+
+
+def test_batch_prefix_fallback_when_pod_product_too_big():
+    # batch 8 < pod*data=32: falls back to the divisible prefix ("pod",)
+    spec = logical_to_spec(("batch",), shape=(8,), mesh=MULTI)
+    assert spec == P("pod")
+
+
+def test_divisibility_fallback_replicates():
+    # 14 heads on a 16-way model axis -> replicated (even-sharding mode)
+    spec = logical_to_spec((None, "heads", None), shape=(4, 14, 64), mesh=SINGLE)
+    assert spec == P()
+
+
+def test_uneven_allowed_for_activations():
+    spec = logical_to_spec(
+        (None, "heads", None), shape=(4, 14, 64), mesh=SINGLE, allow_uneven=True
+    )
+    assert spec == P(None, "model")
+
+
+def test_uneven_rejected_when_waste_too_high():
+    # 2 kv heads on 16 shards would waste 8x: stay replicated even uneven
+    spec = logical_to_spec(
+        (None, "kv_heads"), shape=(4, 2), mesh=SINGLE, allow_uneven=True
+    )
+    assert spec == P()
+
+
+def test_head_dim_picks_up_model_when_heads_cannot():
+    spec = logical_to_spec(
+        ("fsdp", "heads", "head_dim"), shape=(5120, 40, 128), mesh=SINGLE
+    )
+    assert spec == P("data", None, "model")
+
+
+def test_no_double_axis_use():
+    # heads takes model; head_dim must not reuse it
+    spec = logical_to_spec(
+        ("fsdp", "heads", "head_dim"), shape=(4096, 32, 128), mesh=SINGLE
+    )
+    assert spec == P("data", "model")  # trailing None trimmed
+
+
+def test_pod_axis_missing_on_single_pod():
+    spec = logical_to_spec(("batch",), shape=(256,), mesh=SINGLE)
+    assert spec == P("data")
+
+
+def test_experts_on_model():
+    spec = logical_to_spec(
+        ("experts", "fsdp", None), shape=(128, 4096, 1536), mesh=SINGLE
+    )
+    assert spec == P("model", "data")
+
+
+def test_vocab_sharding():
+    spec = logical_to_spec(("vocab", "fsdp"), shape=(152064, 5120), mesh=SINGLE)
+    assert spec == P("model", "data")

@@ -1,0 +1,98 @@
+"""End-to-end system test: the paper's full workflow on a reduced scale.
+
+trace generation (2 µarchs) -> §4.1 dataset construction -> §4.3 joint
+training of shared embeddings -> transfer to an unseen µarch (frozen
+embeddings + fine-tune) -> §4.2 multi-metric simulation of an unseen
+benchmark -> sanity-check the predicted metrics against the detailed
+simulator's ground truth.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    FeatureConfig,
+    TaoConfig,
+    build_windows,
+    extract_features,
+    init_multiarch,
+    make_joint_step,
+    simulate_trace,
+    transfer_finetune,
+)
+from repro.core.align import build_adjusted_trace, verify_alignment
+from repro.train.optim import AdamWConfig, adamw_init
+from repro.uarch import (
+    UARCH_A,
+    UARCH_B,
+    UARCH_C,
+    get_benchmark,
+    run_detailed,
+    run_functional,
+)
+
+N_INSTR = 8000
+
+
+@pytest.mark.slow
+def test_full_paper_pipeline():
+    fcfg = FeatureConfig(n_buckets=128, n_queue=8, n_mem=16)
+    cfg = TaoConfig(
+        window=33, d_model=48, n_heads=4, n_layers=2, d_ff=96, d_cat=24,
+        features=fcfg,
+    )
+
+    # --- trace generation + dataset construction (train benchmarks) -----
+    def dataset_for(uarch, benches, n=N_INSTR):
+        parts = []
+        from repro.core.dataset import concat_datasets
+
+        for b in benches:
+            prog = get_benchmark(b)
+            ft = run_functional(prog, n)
+            det, _ = run_detailed(prog, ft, uarch)
+            al = build_adjusted_trace(det)
+            v = verify_alignment(al, ft)
+            assert v["stream_match"] and v["cycles_match"]
+            parts.append(build_windows(extract_features(al.adjusted, fcfg), cfg.window))
+        return concat_datasets(parts)
+
+    ds_a = dataset_for(UARCH_A, ["dee", "lee"])
+    ds_b = dataset_for(UARCH_B, ["dee", "lee"])
+
+    # --- joint shared-embedding training (Algorithm 1) -------------------
+    params = init_multiarch(jax.random.PRNGKey(0), cfg)
+    opt = adamw_init(params)
+    step = make_joint_step(cfg, AdamWConfig(lr=1.5e-3), method="tao")
+    w = jnp.ones((2,))
+    il = jnp.ones((2,))
+    rng = np.random.default_rng(0)
+    first = last = None
+    for epoch in range(6):
+        for ba, bb in zip(ds_a.batches(8, rng=rng), ds_b.batches(8, rng=rng)):
+            ba["labels"] = {k: jnp.asarray(v) for k, v in ba.pop("labels").items()}
+            bb["labels"] = {k: jnp.asarray(v) for k, v in bb.pop("labels").items()}
+            params, opt, w, m = step(params, opt, w, il, ba, bb)
+            if first is None:
+                first = float(m["loss_a"] + m["loss_b"])
+            last = float(m["loss_a"] + m["loss_b"])
+    assert last < first, (first, last)
+
+    # --- transfer to unseen µArch C (frozen embeddings) ------------------
+    ds_c = dataset_for(UARCH_C, ["dee"], n=4000)
+    res = transfer_finetune(
+        cfg, params["embed"], params["A"], ds_c, epochs=4, batch_size=8, lr=1.5e-3
+    )
+    # frozen:
+    for a, b in zip(jax.tree.leaves(params["embed"]), jax.tree.leaves(res.params["embed"])):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+    # --- simulate an unseen benchmark on µArch C --------------------------
+    prog = get_benchmark("mcf")
+    ft = run_functional(prog, 4000)
+    det, truth = run_detailed(prog, ft, UARCH_C)
+    sim = simulate_trace(res.params, ft, cfg)
+    assert np.isfinite(sim.cpi) and sim.cpi > 0
+    # reduced-scale model: just require the right order of magnitude
+    assert sim.error_vs(truth["cpi"]) < 100.0, (sim.cpi, truth["cpi"])

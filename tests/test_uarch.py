@@ -1,0 +1,160 @@
+"""Substrate tests: functional/detailed simulators, predictors, caches."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.uarch import (
+    ALL_BENCHMARKS,
+    UARCH_A,
+    UARCH_B,
+    UARCH_C,
+    MicroArchConfig,
+    enumerate_design_space,
+    get_benchmark,
+    run_detailed,
+    run_functional,
+    sample_design_space,
+)
+from repro.uarch.branch import PREDICTOR_NAMES, make_predictor
+from repro.uarch.cache import TLB, Cache
+from repro.uarch.isa import KIND_NOP, KIND_REAL, KIND_SQUASHED, Op
+
+
+def test_design_space_size_matches_paper():
+    # paper: 184,320 total designs
+    assert enumerate_design_space() == 184_320
+
+
+def test_functional_trace_deterministic():
+    prog = get_benchmark("dee")
+    a = run_functional(prog, 2000)
+    b = run_functional(prog, 2000)
+    assert np.array_equal(a, b)
+
+
+def test_functional_trace_fields():
+    prog = get_benchmark("mcf")
+    ft = run_functional(prog, 3000)
+    assert len(ft) == 3000
+    branches = ft[ft["is_branch"]]
+    assert len(branches) > 0
+    mems = ft[ft["is_mem"]]
+    assert len(mems) > 0
+    assert (mems["addr"] % 8 == 0).all()  # word-aligned byte addresses
+    stores = ft[ft["is_store"]]
+    assert (stores["is_mem"]).all()
+
+
+@pytest.mark.parametrize("name", sorted(ALL_BENCHMARKS))
+def test_detailed_runs_all_benchmarks(name):
+    prog = get_benchmark(name)
+    ft = run_functional(prog, 2500)
+    det, summ = run_detailed(prog, ft, UARCH_A)
+    real = det[det["kind"] == KIND_REAL]
+    assert len(real) == 2500
+    assert summ["total_cycles"] > 0
+    assert 0.2 < summ["cpi"] < 50
+
+
+def test_detailed_invariants(dee_traces):
+    _, ft, det, summ = dee_traces
+    real = det[det["kind"] == KIND_REAL]
+    # committed stream matches functional trace exactly
+    for f in ("pc", "opcode", "dst", "src1", "src2", "addr"):
+        assert np.array_equal(real[f], ft[f][: len(real)])
+    # fetch clocks are non-decreasing over the whole fetch stream
+    assert (np.diff(det["fetch_clock"]) >= 0).all()
+    # fetch latency is the delta of fetch clocks
+    assert (det["fetch_lat"][1:] == np.diff(det["fetch_clock"])).all()
+    # retire = fetch + exec (paper's retire-clock definition; completion
+    # order is out-of-order — in-order ROB drain is modeled separately)
+    assert (
+        det["retire_clock"] == det["fetch_clock"] + det["exec_lat"]
+    ).all()
+
+
+def test_bigger_cache_fewer_misses():
+    prog = get_benchmark("mcf")
+    ft = run_functional(prog, 6000)
+    small = MicroArchConfig(l1d_size=16 * 1024, l1d_assoc=2)
+    big = MicroArchConfig(l1d_size=128 * 1024, l1d_assoc=8)
+    _, s_small = run_detailed(prog, ft, small)
+    _, s_big = run_detailed(prog, ft, big)
+    assert s_big["l1d_mpki"] <= s_small["l1d_mpki"]
+
+
+def test_better_predictor_fewer_mispredicts():
+    prog = get_benchmark("lee")
+    ft = run_functional(prog, 6000)
+    _, s_local = run_detailed(prog, ft, MicroArchConfig(branch_predictor="Local"))
+    _, s_tage = run_detailed(
+        prog, ft, MicroArchConfig(branch_predictor="TAGE_SC_L")
+    )
+    # TAGE should never be dramatically worse than Local on loopy code
+    assert s_tage["branch_mpki"] <= s_local["branch_mpki"] * 1.35
+
+
+def test_wider_machine_not_slower():
+    prog = get_benchmark("rom")
+    ft = run_functional(prog, 5000)
+    _, s_a = run_detailed(prog, ft, UARCH_A)
+    _, s_c = run_detailed(prog, ft, UARCH_C)
+    assert s_c["cpi"] <= s_a["cpi"] * 1.05
+
+
+@pytest.mark.parametrize("name", PREDICTOR_NAMES)
+def test_predictor_learns_biased_branch(name):
+    bp = make_predictor(name)
+    correct = 0
+    for i in range(500):
+        pred = bp.predict(0x400)
+        taken = True  # always-taken branch
+        correct += pred == taken
+        bp.update(0x400, taken)
+    assert correct / 500 > 0.9
+
+
+def test_predictor_alternating_pattern():
+    # local history predictors learn period-2 patterns
+    for name in ("Local", "Tournament", "TAGE_SC_L"):
+        bp = make_predictor(name)
+        correct = 0
+        for i in range(600):
+            taken = bool(i % 2)
+            pred = bp.predict(0x800)
+            if i > 100:
+                correct += pred == taken
+            bp.update(0x800, taken)
+        assert correct / 500 > 0.85, name
+
+
+def test_cache_lru_eviction():
+    c = Cache(size_bytes=2 * 64, assoc=2)  # 1 set, 2 ways
+    assert not c.access(0)        # miss
+    assert not c.access(64)       # miss (other line)
+    assert c.access(0)            # hit
+    assert not c.access(128)      # evicts LRU (line 64)
+    assert c.access(0)            # still resident
+    assert not c.access(64)       # was evicted
+
+
+def test_tlb_hits_within_page():
+    t = TLB(entries=4)
+    assert not t.access(0)
+    assert t.access(8)
+    assert t.access(4000)
+    assert not t.access(4096)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10_000))
+def test_random_design_points_simulate(seed):
+    cfg = sample_design_space(1, seed=seed)[0]
+    prog = get_benchmark("xal")
+    ft = run_functional(prog, 1200)
+    det, summ = run_detailed(prog, ft, cfg)
+    real = det[det["kind"] == KIND_REAL]
+    assert len(real) == 1200
+    assert summ["total_cycles"] == int(real["retire_clock"].max())
+    assert (det["exec_lat"] > 0).all()
