@@ -7,7 +7,8 @@ import dataclasses
 
 import numpy as np
 
-from repro.core import simulate_trace, train_tao
+from repro.core import train_tao
+from repro.engine import EngineConfig, StreamingEngine
 from repro.uarch import UARCH_B, MicroArchConfig
 
 from .common import (
@@ -21,11 +22,13 @@ from .common import (
 )
 
 
-def _model_for(uarch):
+def _engine_for(uarch):
+    """Train a model for the design point and wrap it in a streaming engine
+    (one compile, reused across every benchmark simulated on this point)."""
     cfg = tao_config()
     ds = adjusted_dataset(uarch, TRAIN_BENCHES[:2])
     res = train_tao(cfg, ds, epochs=max(3, EPOCHS // 2), batch_size=16, lr=1e-3)
-    return cfg, res.params
+    return StreamingEngine(res.params, cfg, EngineConfig(batch_size=64))
 
 
 def run() -> None:
@@ -35,11 +38,11 @@ def run() -> None:
         ua = dataclasses.replace(
             UARCH_B, l1d_size=size_kb * 1024, name=f"l1d{size_kb}"
         )
-        cfg, params = _model_for(ua)
+        engine = _engine_for(ua)
         t_mpki, p_mpki = [], []
         for bench in TEST_BENCHES[:2]:
             ft, truth = ground_truth(ua, bench)
-            sim = simulate_trace(params, ft, cfg)
+            sim = engine.simulate(ft)
             t_mpki.append(truth["l1d_mpki"])
             p_mpki.append(sim.l1d_mpki)
         truth_curve.append(float(np.mean(t_mpki)))
@@ -57,11 +60,11 @@ def run() -> None:
     # Fig 15b: branch predictor sweep
     for bp in ("Local", "BiMode", "Tournament"):
         ua = dataclasses.replace(UARCH_B, branch_predictor=bp, name=f"bp{bp}")
-        cfg, params = _model_for(ua)
+        engine = _engine_for(ua)
         t_mpki, p_mpki = [], []
         for bench in TEST_BENCHES[:2]:
             ft, truth = ground_truth(ua, bench)
-            sim = simulate_trace(params, ft, cfg)
+            sim = engine.simulate(ft)
             t_mpki.append(truth["branch_mpki"])
             p_mpki.append(sim.branch_mpki)
         emit(

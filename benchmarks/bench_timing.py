@@ -2,7 +2,9 @@
 
   * functional vs detailed trace generation throughput (Fig 10b; paper: ~25x)
   * squashed/nop composition of the detailed-trace surplus (Fig 10a)
-  * simulation (inference) throughput for Tao
+  * simulation (inference) throughput: streaming engine vs the pre-refactor
+    host batch loop (`simulate_trace_legacy`), with the engine's compile
+    count asserted to be exactly one
   * the Table-4 ratio: (trace gen + train + simulate) Tao vs SimNet, where
     SimNet is charged detailed-trace generation for every new µarch and Tao
     is charged the reusable functional trace once.
@@ -11,7 +13,9 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core import simulate_trace, train_tao
+from repro.core import train_tao
+from repro.core.simulate import simulate_trace_legacy
+from repro.engine import EngineConfig, StreamingEngine
 from repro.uarch import UARCH_A, UARCH_B, UARCH_C, get_benchmark, run_detailed, run_functional
 from repro.uarch.isa import KIND_NOP, KIND_REAL, KIND_SQUASHED
 
@@ -69,10 +73,24 @@ def run() -> None:
     with Timer() as t_train_short:
         res = train_tao(cfg, ds.subsample(max(16, len(ds) // 4)), epochs=max(2, EPOCHS // 3),
                         batch_size=16, lr=1e-3)
+    engine = StreamingEngine(res.params, cfg, EngineConfig(batch_size=64))
     with Timer() as t_sim:
         ft_test = run_functional(get_benchmark("mcf"), TRACE_LEN // 2)
-        sim = simulate_trace(res.params, ft_test, cfg)
+        sim = engine.simulate(ft_test)
     tao_total = t_func.seconds + t_train_short.seconds + t_sim.seconds
+
+    # --- engine vs pre-refactor simulate loop (the 18.06x claim's lever) --
+    legacy = simulate_trace_legacy(res.params, ft_test, cfg)
+    sim2 = engine.simulate(ft_test)  # warm engine: steady-state throughput
+    assert engine.num_compiles == 1, engine.num_compiles
+    cpi_err = abs(sim2.cpi - legacy.cpi) / max(legacy.cpi, 1e-9)
+    emit(
+        "engine/sim_throughput",
+        1e6 / max(sim2.mips * 1e6, 1e-9),
+        f"engine_mips={sim2.mips:.4f};legacy_mips={legacy.mips:.4f};"
+        f"speedup={sim2.mips / legacy.mips:.2f}x;compiles={engine.num_compiles};"
+        f"cpi_rel_err={cpi_err:.2e}",
+    )
 
     # SimNet-style: detailed trace for the new µarch + full training + sim
     with Timer() as t_det:

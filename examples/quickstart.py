@@ -16,11 +16,11 @@ from repro.core import (
     TaoConfig,
     build_windows,
     extract_features,
-    simulate_trace,
     train_tao,
 )
 from repro.core.align import build_adjusted_trace, verify_alignment
 from repro.core.dataset import concat_datasets
+from repro.engine import EngineConfig, StreamingEngine
 from repro.uarch import UARCH_A, get_benchmark, run_detailed, run_functional
 
 N = 20_000
@@ -50,7 +50,11 @@ print("== 4. simulate an unseen benchmark (functional trace only) ==")
 prog = get_benchmark("mcf")
 ft = run_functional(prog, N // 2)
 _, truth = run_detailed(prog, ft, UARCH_A)
-sim = simulate_trace(res.params, ft, cfg)
+# the streaming engine compiles its forward step once and keeps the CPI /
+# MPKI accumulators on device; per-instruction arrays stay there too unless
+# EngineConfig(collect=True) asks for them
+engine = StreamingEngine(res.params, cfg, EngineConfig(batch_size=64))
+sim = engine.simulate(ft)
 print(f"  CPI:        truth={truth['cpi']:.3f}  tao={sim.cpi:.3f} "
       f"(err {sim.error_vs(truth['cpi']):.1f}%)")
 print(f"  brMPKI:     truth={truth['branch_mpki']:.1f}  tao={sim.branch_mpki:.1f}")

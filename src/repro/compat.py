@@ -1,0 +1,41 @@
+"""Shims over jax API drift (0.4.x .. 0.6+), collected in one place.
+
+Every site that needs one of these imports it from here, so the next jax
+rename is a one-file fix.
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["shard_map", "make_mesh", "activate_mesh", "cost_analysis"]
+
+if hasattr(jax, "shard_map"):  # jax >= 0.6
+    shard_map = jax.shard_map
+else:  # jax 0.4.x
+    from jax.experimental.shard_map import shard_map  # noqa: F401
+
+
+def make_mesh(shape, axes):
+    """jax.make_mesh; newer jax wants explicit axis types, 0.4.x has none."""
+    try:
+        return jax.make_mesh(
+            tuple(shape), tuple(axes),
+            axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
+        )
+    except (AttributeError, TypeError):
+        return jax.make_mesh(tuple(shape), tuple(axes))
+
+
+def activate_mesh(mesh):
+    """Context manager activating a mesh: jax.set_mesh on >= 0.6; on 0.4.x
+    the Mesh object is itself the context manager."""
+    return jax.set_mesh(mesh) if hasattr(jax, "set_mesh") else mesh
+
+
+def cost_analysis(compiled):
+    """compiled.cost_analysis() returns a dict on recent jax, a one-element
+    list of dicts on 0.4.x."""
+    ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca

@@ -1,7 +1,20 @@
 """Tao's core contributions (paper §4) as composable modules."""
 from .align import AlignedTrace, build_adjusted_trace, verify_alignment
-from .dataset import WindowDataset, build_windows, concat_datasets
-from .features import NUM_OPCODES, FeatureConfig, FeatureSet, extract_features
+from .dataset import (
+    WindowDataset,
+    build_windows,
+    concat_datasets,
+    num_windows,
+    stream_batches,
+    window_view,
+)
+from .features import (
+    NUM_OPCODES,
+    FeatureConfig,
+    FeatureSet,
+    extract_features,
+    extract_features_reference,
+)
 from .model import (
     LOSS_WEIGHTS,
     TaoConfig,
@@ -16,7 +29,12 @@ from .selection import (
     select_pair_mahalanobis,
     select_random,
 )
-from .simulate import SimulationResult, phase_curves, simulate_trace
+from .simulate import (
+    SimulationResult,
+    phase_curves,
+    simulate_trace,
+    simulate_trace_legacy,
+)
 from .transfer import TrainResult, train_tao, transfer_finetune
 
 __all__ = [
@@ -26,9 +44,13 @@ __all__ = [
     "WindowDataset",
     "build_windows",
     "concat_datasets",
+    "num_windows",
+    "stream_batches",
+    "window_view",
     "FeatureConfig",
     "FeatureSet",
     "extract_features",
+    "extract_features_reference",
     "NUM_OPCODES",
     "TaoConfig",
     "init_tao",
@@ -44,6 +66,7 @@ __all__ = [
     "select_random",
     "SimulationResult",
     "simulate_trace",
+    "simulate_trace_legacy",
     "phase_curves",
     "TrainResult",
     "train_tao",

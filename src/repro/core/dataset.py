@@ -5,6 +5,11 @@ metrics for every position (causal attention), which is the batched
 equivalent of the paper's "current instruction + N context instructions"
 formulation.  Duplicate windows are removed (the paper de-duplicates
 samples during preprocessing).
+
+Windowing is zero-copy: `window_view` returns a strided view
+(`np.lib.stride_tricks.sliding_window_view`) so a trace of N instructions
+costs O(N) memory regardless of the window/stride combination; data is only
+materialized per-batch by `WindowDataset.batches` / the streaming engine.
 """
 from __future__ import annotations
 
@@ -16,9 +21,40 @@ import numpy as np
 
 from .features import FeatureSet
 
-__all__ = ["WindowDataset", "build_windows", "concat_datasets"]
+__all__ = [
+    "WindowDataset",
+    "build_windows",
+    "window_view",
+    "num_windows",
+    "stream_batches",
+    "concat_datasets",
+    "INPUT_KEYS",
+]
 
-_INPUT_KEYS = ("opcode", "regbits", "flags", "brhist", "memdist")
+
+def num_windows(n: int, window: int, stride: int) -> int:
+    """Number of windows the grid `range(0, max(1, n - window + 1), stride)`
+    produces — the single source of truth shared by every windowing path."""
+    return len(range(0, max(1, n - window + 1), stride))
+
+
+def window_view(arr: np.ndarray, window: int, stride: int) -> np.ndarray:
+    """(N, ...) -> zero-copy (num_windows, window, ...) strided view.
+
+    Matches the legacy copying grid exactly, including the n < window case
+    (a single truncated window, which genuinely requires a 1-row copy).
+    """
+    n = len(arr)
+    if n < window:
+        return arr[np.newaxis]
+    view = np.lib.stride_tricks.sliding_window_view(arr, window, axis=0)
+    # sliding_window_view appends the window axis last; put it after the
+    # window-count axis (still a view — only strides change).
+    view = np.moveaxis(view, -1, 1)
+    return view[::stride]
+
+INPUT_KEYS = ("opcode", "regbits", "flags", "brhist", "memdist")
+_INPUT_KEYS = INPUT_KEYS  # internal alias
 _LABEL_KEYS = (
     "fetch_lat",
     "exec_lat",
@@ -79,11 +115,9 @@ def build_windows(
     dedup: bool = True,
 ) -> WindowDataset:
     stride = stride or window
-    n = len(fs)
-    starts = list(range(0, max(1, n - window + 1), stride))
 
     def _stack(arr: np.ndarray) -> np.ndarray:
-        return np.stack([arr[s : s + window] for s in starts])
+        return window_view(arr, window, stride)
 
     inputs = {
         "opcode": _stack(fs.opcode),
@@ -103,6 +137,47 @@ def build_windows(
             labels = {k: v[keep] for k, v in labels.items()}
 
     return WindowDataset(inputs=inputs, labels=labels)
+
+
+def _pad_rows(arr: np.ndarray, rows: int) -> np.ndarray:
+    out = np.zeros((rows,) + arr.shape[1:], dtype=arr.dtype)
+    out[: len(arr)] = arr
+    return out
+
+
+def stream_batches(
+    fs: FeatureSet,
+    window: int,
+    batch_size: int,
+    stride: Optional[int] = None,
+    pad: bool = True,
+    extra: Optional[Dict[str, np.ndarray]] = None,
+) -> Iterator[Dict[str, np.ndarray]]:
+    """Stream fixed-shape window batches without materializing all windows.
+
+    Windows come from zero-copy `window_view`s; each yielded batch is the only
+    materialized copy, so peak host memory is O(trace + batch) even for
+    multi-million-instruction traces.  Every batch carries a float32 "valid"
+    mask of shape (batch_size, W); when `pad` is set the final ragged batch is
+    zero-padded to `batch_size` rows (mask rows 0) so a single jit
+    compilation covers the whole stream.  `extra` arrays (e.g. the trace's
+    is_branch/is_mem columns) are windowed on the same grid and yielded
+    alongside the feature keys.
+    """
+    stride = stride or window
+    views = {k: window_view(getattr(fs, k), window, stride) for k in _INPUT_KEYS}
+    if extra:
+        views.update({k: window_view(v, window, stride) for k, v in extra.items()})
+    nw = len(views["opcode"])
+    w_eff = views["opcode"].shape[1]
+    for lo in range(0, nw, batch_size):
+        hi = min(lo + batch_size, nw)
+        rows = batch_size if pad else hi - lo
+        batch = {k: _pad_rows(v[lo:hi], rows) for k, v in views.items()}
+        valid = np.zeros((rows, w_eff), dtype=np.float32)
+        valid[: hi - lo] = 1.0
+        batch["valid"] = valid
+        yield batch
 
 
 def _dedup_mask(inputs: Dict, labels: Optional[Dict]) -> np.ndarray:

@@ -15,6 +15,16 @@ Cross-instruction features:
 
 Defaults N_b=1024, N_q=32, N_m=64 are the paper's empirically chosen values
 (§5.4); the benchmark harness sweeps them (Fig 12).
+
+Two implementations of the cross-instruction features:
+
+  * `extract_features` — vectorized.  Branch history is computed per-bucket
+    with a grouped (sort-by-bucket) formulation; the memory-distance queue is
+    a lag-k difference.  Both loop over the queue depth (N_q / N_m, small
+    constants) instead of over the trace.
+  * `extract_features_reference` — the original per-branch / per-access
+    interpreter loops, kept as the executable specification; the test suite
+    asserts exact equivalence between the two.
 """
 from __future__ import annotations
 
@@ -25,7 +35,13 @@ import numpy as np
 
 from ..uarch.isa import NUM_REGS, Op
 
-__all__ = ["FeatureConfig", "FeatureSet", "extract_features", "NUM_OPCODES"]
+__all__ = [
+    "FeatureConfig",
+    "FeatureSet",
+    "extract_features",
+    "extract_features_reference",
+    "NUM_OPCODES",
+]
 
 NUM_OPCODES = len(Op)
 
@@ -72,15 +88,8 @@ class FeatureSet:
 _FP_OPS = (int(Op.FALU), int(Op.FMUL), int(Op.FDIV))
 
 
-def extract_features(
-    trace: np.ndarray, cfg: FeatureConfig = FeatureConfig(), with_labels: bool = True
-) -> FeatureSet:
-    """`trace` is either an adjusted trace (ADJ_DTYPE, labels available) or a
-    raw functional trace (FUNC_TRACE_DTYPE, inference path)."""
+def _per_instruction(trace: np.ndarray, opcode: np.ndarray):
     n = len(trace)
-    opcode = trace["opcode"].astype(np.int32)
-
-    # ---- per-instruction features (vectorized) -------------------------
     regbits = np.zeros((n, NUM_REGS), dtype=np.float32)
     rows = np.arange(n)
     regbits[rows, trace["src1"].astype(np.int64)] = 1.0
@@ -99,6 +108,105 @@ def extract_features(
         ],
         axis=1,
     )
+    return regbits, flags
+
+
+def _labels(trace: np.ndarray, with_labels: bool):
+    if not (with_labels and "fetch_lat" in trace.dtype.names):
+        return None
+    return {
+        "fetch_lat": trace["fetch_lat"].astype(np.float32),
+        "exec_lat": trace["exec_lat"].astype(np.float32),
+        "mispred": trace["mispred"].astype(np.float32),
+        "dlevel": trace["dlevel"].astype(np.int32),
+        "icache_miss": trace["icache_miss"].astype(np.float32),
+        "tlb_miss": trace["tlb_miss"].astype(np.float32),
+        "is_branch": trace["is_branch"].astype(np.float32),
+        "is_mem": trace["is_mem"].astype(np.float32),
+    }
+
+
+def _signed_log(d: np.ndarray) -> np.ndarray:
+    return (np.sign(d) * np.log2(1.0 + np.abs(d)) / 32.0).astype(np.float32)
+
+
+def _branch_history(trace: np.ndarray, cfg: FeatureConfig) -> np.ndarray:
+    """Grouped (per-bucket) formulation of the branch-history hash table.
+
+    The j-th branch mapping to bucket b sees that bucket's previous N_q
+    outcomes, most-recent first.  A stable sort by bucket makes every bucket's
+    branches contiguous, turning the lookup into lag-k gathers: only the queue
+    depth (N_q) is a Python loop, each iteration vectorized over all branches.
+    """
+    n = len(trace)
+    brhist = np.zeros((n, cfg.n_queue), dtype=np.float32)
+    br_idx = np.nonzero(trace["is_branch"])[0]
+    m = len(br_idx)
+    if m == 0:
+        return brhist
+    bucket = ((trace["pc"][br_idx] >> 2) % cfg.n_buckets).astype(np.int64)
+    taken = np.where(trace["taken"][br_idx], 1.0, -1.0).astype(np.float32)
+
+    order = np.argsort(bucket, kind="stable")
+    b_sorted = bucket[order]
+    t_sorted = taken[order]
+    pos = np.arange(m)
+    # start index (in sorted order) of the group each branch belongs to
+    is_head = np.empty(m, dtype=bool)
+    is_head[0] = True
+    is_head[1:] = b_sorted[1:] != b_sorted[:-1]
+    group_start = np.maximum.accumulate(np.where(is_head, pos, 0))
+
+    rows = np.zeros((m, cfg.n_queue), dtype=np.float32)
+    for k in range(cfg.n_queue):
+        src = pos - 1 - k
+        valid = src >= group_start
+        rows[valid, k] = t_sorted[src[valid]]
+    brhist[br_idx[order]] = rows
+    return brhist
+
+
+def _memory_distance(trace: np.ndarray, cfg: FeatureConfig) -> np.ndarray:
+    """Lag-k formulation of the access-distance queue: slot k of access j is
+    the signed-log delta to access j-1-k.  Loops over N_m, not the trace."""
+    n = len(trace)
+    memdist = np.zeros((n, cfg.n_mem), dtype=np.float32)
+    mem_idx = np.nonzero(trace["is_mem"])[0]
+    m = len(mem_idx)
+    if m < 2:
+        return memdist
+    addrs = trace["addr"][mem_idx].astype(np.int64)
+    for k in range(min(cfg.n_mem, m - 1)):
+        d = (addrs[k + 1 :] - addrs[: m - 1 - k]).astype(np.float64)
+        memdist[mem_idx[k + 1 :], k] = _signed_log(d)
+    return memdist
+
+
+def extract_features(
+    trace: np.ndarray, cfg: FeatureConfig = FeatureConfig(), with_labels: bool = True
+) -> FeatureSet:
+    """`trace` is either an adjusted trace (ADJ_DTYPE, labels available) or a
+    raw functional trace (FUNC_TRACE_DTYPE, inference path)."""
+    opcode = trace["opcode"].astype(np.int32)
+    regbits, flags = _per_instruction(trace, opcode)
+    return FeatureSet(
+        opcode=opcode,
+        regbits=regbits,
+        flags=flags,
+        brhist=_branch_history(trace, cfg),
+        memdist=_memory_distance(trace, cfg),
+        labels=_labels(trace, with_labels),
+    )
+
+
+def extract_features_reference(
+    trace: np.ndarray, cfg: FeatureConfig = FeatureConfig(), with_labels: bool = True
+) -> FeatureSet:
+    """Original interpreter-loop implementation (executable specification for
+    `extract_features`; quadratic-free but O(trace) Python overhead)."""
+    n = len(trace)
+    opcode = trace["opcode"].astype(np.int32)
+    regbits, flags = _per_instruction(trace, opcode)
 
     # ---- branch-history hash table (sequential over branches) ----------
     brhist = np.zeros((n, cfg.n_queue), dtype=np.float32)
@@ -124,26 +232,11 @@ def extract_features(
         a = addrs[j]
         if filled:
             d = (a - queue[:filled]).astype(np.float64)
-            memdist[mem_idx[j], :filled] = (
-                np.sign(d) * np.log2(1.0 + np.abs(d)) / 32.0
-            ).astype(np.float32)
+            memdist[mem_idx[j], :filled] = _signed_log(d)
         queue[1:] = queue[:-1]
         queue[0] = a
         if filled < cfg.n_mem:
             filled += 1
-
-    labels = None
-    if with_labels and "fetch_lat" in trace.dtype.names:
-        labels = {
-            "fetch_lat": trace["fetch_lat"].astype(np.float32),
-            "exec_lat": trace["exec_lat"].astype(np.float32),
-            "mispred": trace["mispred"].astype(np.float32),
-            "dlevel": trace["dlevel"].astype(np.int32),
-            "icache_miss": trace["icache_miss"].astype(np.float32),
-            "tlb_miss": trace["tlb_miss"].astype(np.float32),
-            "is_branch": trace["is_branch"].astype(np.float32),
-            "is_mem": trace["is_mem"].astype(np.float32),
-        }
 
     return FeatureSet(
         opcode=opcode,
@@ -151,5 +244,5 @@ def extract_features(
         flags=flags,
         brhist=brhist,
         memdist=memdist,
-        labels=labels,
+        labels=_labels(trace, with_labels),
     )

@@ -9,13 +9,15 @@ predicted performance metrics:
   L1D MPKI     = predicted accesses with level >= L2 per 1000 instructions
   phase curves = per-chunk averages (Fig. 11)
 
-Windows are simulated in parallel (the paper partitions the trace into
-subtraces — here that is simply the batch dimension, which the distributed
-runtime shards across the `data` mesh axis).
+`simulate_trace` is a compatibility wrapper over the streaming engine
+(`repro.engine`): fixed-shape padded batches, one jit compile, on-device
+metric accumulation, host->device prefetch.  The original host-side batch
+loop survives as `simulate_trace_legacy` — it is the executable
+specification the engine is tested against, and the baseline
+`benchmarks/bench_timing.py` measures the engine's speedup over.
 """
 from __future__ import annotations
 
-import dataclasses
 import time
 from typing import Dict, Optional
 
@@ -23,31 +25,18 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..engine.runner import SimulationResult, simulate_trace_engine
 from ..uarch.isa import DLEVEL_L2
 from .dataset import build_windows
-from .features import FeatureConfig, FeatureSet, extract_features
-from .model import LAT_SCALE, TaoConfig, tao_forward
+from .features import FeatureSet, extract_features_reference
+from .model import TaoConfig, tao_forward
 
-__all__ = ["SimulationResult", "simulate_trace", "phase_curves"]
-
-
-@dataclasses.dataclass
-class SimulationResult:
-    cpi: float
-    total_cycles: float
-    branch_mpki: float
-    l1d_mpki: float
-    num_instructions: int
-    seconds: float
-    mips: float
-    # per-instruction predictions (for phase plots / DSE)
-    fetch_lat: np.ndarray
-    exec_lat: np.ndarray
-    mispred_prob: np.ndarray
-    dlevel: np.ndarray
-
-    def error_vs(self, truth_cpi: float) -> float:
-        return abs(self.cpi - truth_cpi) / truth_cpi * 100.0
+__all__ = [
+    "SimulationResult",
+    "simulate_trace",
+    "simulate_trace_legacy",
+    "phase_curves",
+]
 
 
 def simulate_trace(
@@ -56,9 +45,37 @@ def simulate_trace(
     cfg: TaoConfig,
     batch_size: int = 64,
     features: Optional[FeatureSet] = None,
+    collect: bool = True,
 ) -> SimulationResult:
+    """Engine-backed simulation.  `collect=False` keeps all metrics on
+    device (fastest; per-instruction arrays in the result stay None)."""
+    return simulate_trace_engine(
+        params,
+        func_trace,
+        cfg,
+        batch_size=batch_size,
+        features=features,
+        collect=collect,
+    )
+
+
+def simulate_trace_legacy(
+    params: Dict,
+    func_trace: np.ndarray,
+    cfg: TaoConfig,
+    batch_size: int = 64,
+    features: Optional[FeatureSet] = None,
+) -> SimulationResult:
+    """Pre-engine host batch loop (reference implementation).
+
+    Kept verbatim apart from one fix: the branch/memory masks are now taken
+    with a single length-safe slice (the old double-slice under-filled the
+    masks when the window grid overran the trace).  Uses the reference
+    (interpreter-loop) feature extractor so it stays a faithful pre-refactor
+    baseline end to end.
+    """
     t0 = time.perf_counter()
-    fs = features if features is not None else extract_features(
+    fs = features if features is not None else extract_features_reference(
         func_trace, cfg.features, with_labels=False
     )
     ds = build_windows(fs, cfg.window, stride=cfg.window, dedup=False)
@@ -81,14 +98,15 @@ def simulate_trace(
     dlev = np.concatenate(dlev).reshape(-1)
     n = len(fetch)
 
-    # Masks from the trace itself (branch/memory heads only count where valid).
-    covered = n_windows * cfg.window
+    # Masks from the trace itself (branch/memory heads only count where
+    # valid).  The window grid covers the first n trace positions, so one
+    # length-safe slice is all that is needed.
+    covered = min(n, len(func_trace))
     is_branch = np.zeros(n, bool)
     is_mem = np.zeros(n, bool)
-    is_branch[: min(covered, len(func_trace))] = func_trace["is_branch"][:covered][: n]
-    is_mem[: min(covered, len(func_trace))] = func_trace["is_mem"][:covered][: n]
+    is_branch[:covered] = func_trace["is_branch"][:covered]
+    is_mem[:covered] = func_trace["is_mem"][:covered]
 
-    fetch = np.maximum(fetch, 0.0)
     total = float(fetch.sum() + (execl[-1] if n else 0.0))
     mispred_count = float((misp > 0.5)[is_branch].sum())
     l1d_miss_count = float((dlev >= DLEVEL_L2)[is_mem].sum())
@@ -112,6 +130,11 @@ def phase_curves(
     result: SimulationResult, chunk: int = 10_000
 ) -> Dict[str, np.ndarray]:
     """Per-chunk CPI / branch MPKI / L1D MPKI curves (Fig. 11)."""
+    if result.fetch_lat is None:
+        raise ValueError(
+            "phase_curves needs per-instruction predictions: simulate with "
+            "collect=True (EngineConfig.collect)"
+        )
     n = result.num_instructions
     m = n // chunk
     cpi = np.zeros(m)

@@ -1,0 +1,19 @@
+"""Streaming simulation engine: the device-resident §4.2 inference path.
+
+See ``docs/engine.md`` for the data-flow architecture and
+``benchmarks/bench_timing.py`` for the measured speedup over the legacy
+host-loop path (``repro.core.simulate.simulate_trace_legacy``).
+"""
+from .runner import (
+    EngineConfig,
+    SimulationResult,
+    StreamingEngine,
+    simulate_trace_engine,
+)
+
+__all__ = [
+    "EngineConfig",
+    "SimulationResult",
+    "StreamingEngine",
+    "simulate_trace_engine",
+]

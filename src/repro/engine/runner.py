@@ -1,0 +1,356 @@
+"""Device-resident streaming simulation engine.
+
+The fast path behind §4.2 inference: a functional trace flows through
+
+  vectorized features  ->  zero-copy window views  ->  fixed-shape padded
+  batches (+ validity mask)  ->  one jitted forward/accumulate step  ->
+  device-resident partial sums of CPI / branch-MPKI / L1D-MPKI.
+
+Design points (each measured by ``benchmarks/bench_timing.py``):
+
+  * **One compilation.**  Every batch has shape (batch_size, W); the ragged
+    final batch is zero-padded and masked instead of retraced, so the whole
+    run — and every later trace with the same effective window — reuses a
+    single executable.
+  * **On-device accumulation.**  The step folds each batch into a carry of
+    four scalars (fetch-latency sum, exact int32 mispredict and L1D-miss
+    counts, trailing exec latency); the instruction count comes from the
+    window grid on host, and per-instruction arrays are only transferred
+    when ``EngineConfig.collect`` asks for them.
+  * **Prefetch.**  The next batch's host->device transfer is enqueued before
+    the current result is consumed, overlapping copy with compute.
+  * **Sharding.**  With a mesh, the step runs under ``jax.shard_map`` with
+    the batch dimension split over the ``data`` axis (rules from
+    ``distributed/sharding.py``) and partial sums combined with ``psum``.
+
+``core.simulate.simulate_trace`` is a thin wrapper over this engine; the
+original host-loop implementation survives as ``simulate_trace_legacy`` and
+the test suite holds the two to float32-level agreement.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..core.dataset import INPUT_KEYS, num_windows, stream_batches
+from ..core.features import FeatureSet, extract_features
+from ..core.model import TaoConfig, tao_forward
+from ..distributed.sharding import logical_to_spec
+from ..uarch.isa import DLEVEL_L2
+
+__all__ = [
+    "EngineConfig",
+    "SimulationResult",
+    "StreamingEngine",
+    "simulate_trace_engine",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    batch_size: int = 64
+    collect: bool = False        # also return per-instruction predictions
+    prefetch: bool = True        # overlap host->device copy with compute
+    mesh: Optional[Mesh] = None  # shard_map data-parallel path when set
+
+
+@dataclasses.dataclass
+class SimulationResult:
+    cpi: float
+    total_cycles: float
+    branch_mpki: float
+    l1d_mpki: float
+    num_instructions: int
+    seconds: float
+    mips: float
+    # per-instruction predictions (populated only when collected — the
+    # engine keeps metrics on device unless asked for phase plots / DSE)
+    fetch_lat: Optional[np.ndarray] = None
+    exec_lat: Optional[np.ndarray] = None
+    mispred_prob: Optional[np.ndarray] = None
+    dlevel: Optional[np.ndarray] = None
+
+    def error_vs(self, truth_cpi: float) -> float:
+        return abs(self.cpi - truth_cpi) / truth_cpi * 100.0
+
+
+def _zero_carry() -> Dict[str, jnp.ndarray]:
+    # mispred/l1d are exact int32 counts (good to 2^31 instructions per
+    # trace); the instruction count itself is computed host-side from the
+    # window grid, so only fetch_sum carries float rounding.
+    f = jnp.zeros((), jnp.float32)
+    i = jnp.zeros((), jnp.int32)
+    return {
+        "fetch_sum": f,
+        "mispred": i,
+        "l1d": i,
+        "last_exec": f,
+    }
+
+
+class _CachedStep:
+    """A jitted step shared across engines with identical (cfg, ecfg):
+    params are an argument, so design-space sweeps that train many models
+    of the same shape reuse one executable."""
+
+    __slots__ = ("fn", "compiles")
+
+    def __init__(self):
+        self.fn = None
+        self.compiles = 0
+
+
+_STEP_CACHE: Dict[tuple, _CachedStep] = {}
+
+
+class StreamingEngine:
+    """Compile once, stream any number of traces.
+
+    An engine instance owns the jitted step for a (params-structure,
+    TaoConfig, EngineConfig) triple; ``num_compiles`` counts actual traces
+    of the step function, which the test suite pins to one per effective
+    window length regardless of trace/batch geometry.
+    """
+
+    def __init__(self, params: Dict, cfg: TaoConfig, ecfg: EngineConfig = EngineConfig()):
+        if ecfg.batch_size < 1:
+            raise ValueError(f"batch_size must be >= 1, got {ecfg.batch_size}")
+        self._batch_axes: tuple = ()
+        if ecfg.mesh is not None:
+            # the rules table in distributed/sharding.py decides which mesh
+            # axes carry the "batch" logical axis (divisibility-checked)
+            spec = logical_to_spec(
+                ("batch",), shape=(ecfg.batch_size,), mesh=ecfg.mesh
+            )
+            entry = spec[0] if len(spec) else None
+            if entry is None:
+                raise ValueError(
+                    f"cannot shard batch_size={ecfg.batch_size} over mesh "
+                    f"{dict(ecfg.mesh.shape)}: no usable 'batch' mesh axes "
+                    "(see distributed.sharding.LOGICAL_RULES)"
+                )
+            self._batch_axes = (entry,) if isinstance(entry, str) else tuple(entry)
+        self.params = params
+        self.cfg = cfg
+        self.ecfg = ecfg
+        self._steps: Dict[int, _CachedStep] = {}  # effective window -> step
+
+    @property
+    def num_compiles(self) -> int:
+        """Traces of the step function across every step this engine used
+        (shared with other engines of identical config — at most one per
+        effective window and params structure either way)."""
+        return sum(e.compiles for e in self._steps.values())
+
+    # ---- jitted step ---------------------------------------------------
+
+    def _build_step(self, w_eff: int, entry: _CachedStep):
+        cfg = self.cfg
+        collect = self.ecfg.collect
+        mesh = self.ecfg.mesh
+        axes = self._batch_axes
+
+        def body(params, carry, batch):
+            entry.compiles += 1  # runs at trace time only
+            valid = batch["valid"].reshape(-1)
+            out = tao_forward(params, {k: batch[k] for k in INPUT_KEYS}, cfg)
+            fetch = jnp.maximum(out["fetch_lat"], 0.0).reshape(-1)
+            execl = jnp.maximum(out["exec_lat"], 0.0).reshape(-1)
+            misp = jax.nn.sigmoid(out["mispred_logit"]).reshape(-1)
+            dlev = jnp.argmax(out["dlevel_logits"], -1).astype(jnp.int32).reshape(-1)
+            on = valid > 0
+            br = batch["is_branch"].reshape(-1) & on
+            mem = batch["is_mem"].reshape(-1) & on
+
+            n_local = valid.shape[0]
+            if mesh is not None:
+                shard = jnp.int32(0)
+                for a in axes:  # row-major linear index over the batch axes
+                    shard = shard * mesh.shape[a] + jax.lax.axis_index(a)
+                gidx = (shard * n_local + jnp.arange(n_local)).astype(jnp.float32)
+            else:
+                gidx = jnp.arange(n_local, dtype=jnp.float32)
+            # key of the globally-last valid position (-1 when none local)
+            last_key = jnp.max(jnp.where(on, gidx, -1.0))
+
+            part = {
+                "fetch_sum": (fetch * valid).sum(dtype=jnp.float32),
+                "mispred": ((misp > 0.5) & br).sum(dtype=jnp.int32),
+                "l1d": ((dlev >= DLEVEL_L2) & mem).sum(dtype=jnp.int32),
+            }
+            if mesh is not None:
+                part = jax.lax.psum(part, axes)
+                last_key = jax.lax.pmax(last_key, axes)
+                # exec latency at the winning key lives on exactly one shard
+                exec_tail = jax.lax.psum(
+                    jnp.where(gidx == last_key, execl, 0.0).sum(dtype=jnp.float32),
+                    axes,
+                )
+            else:
+                exec_tail = execl[jnp.argmax(jnp.where(on, gidx, -1.0)).astype(jnp.int32)]
+
+            new_carry = {k: carry[k] + part[k] for k in part}
+            new_carry["last_exec"] = jnp.where(
+                last_key >= 0, exec_tail, carry["last_exec"]
+            )
+            if collect:
+                per = {
+                    "fetch_lat": fetch,
+                    "exec_lat": execl,
+                    "mispred_prob": misp,
+                    "dlevel": dlev,
+                }
+            else:
+                per = {}
+            return new_carry, per
+
+        if mesh is None:
+            return jax.jit(body)
+
+        batched = P(axes if len(axes) > 1 else axes[0])
+        batch_specs = {
+            k: batched for k in INPUT_KEYS + ("valid", "is_branch", "is_mem")
+        }
+        if hasattr(jax, "shard_map"):
+            shard_map = jax.shard_map
+        else:  # jax 0.4.x
+            from jax.experimental.shard_map import shard_map
+
+        per_specs = (
+            {k: batched for k in ("fetch_lat", "exec_lat", "mispred_prob", "dlevel")}
+            if collect
+            else {}
+        )
+        mapped = shard_map(
+            body,
+            mesh=mesh,
+            in_specs=(P(), P(), batch_specs),
+            out_specs=(P(), per_specs),
+        )
+        return jax.jit(mapped)
+
+    def _get_step(self, w_eff: int):
+        entry = self._steps.get(w_eff)
+        if entry is None:
+            # cfg/ecfg are frozen dataclasses (Mesh is hashable), so steps
+            # are shared process-wide; the cache is bounded by the number of
+            # distinct configurations a process ever uses.
+            key = (self.cfg, self.ecfg, w_eff)
+            entry = _STEP_CACHE.get(key)
+            if entry is None:
+                entry = _CachedStep()
+                entry.fn = self._build_step(w_eff, entry)
+                _STEP_CACHE[key] = entry
+            self._steps[w_eff] = entry
+        return entry.fn
+
+    # ---- streaming -----------------------------------------------------
+
+    def _device_put(self, batch: Dict[str, np.ndarray]) -> Dict:
+        if self.ecfg.mesh is not None:
+            axes = self._batch_axes
+            sh = NamedSharding(
+                self.ecfg.mesh, P(axes if len(axes) > 1 else axes[0])
+            )
+            return {k: jax.device_put(v, sh) for k, v in batch.items()}
+        return jax.device_put(batch)
+
+    def _prefetched(self, host_batches: Iterator[Dict]) -> Iterator[Dict]:
+        """Enqueue batch i+1's transfer before batch i is consumed."""
+        it = iter(host_batches)
+        try:
+            cur = self._device_put(next(it))
+        except StopIteration:
+            return
+        for nxt in it:
+            nxt_dev = self._device_put(nxt)
+            yield cur
+            cur = nxt_dev
+        yield cur
+
+    def simulate(
+        self,
+        func_trace: np.ndarray,
+        features: Optional[FeatureSet] = None,
+    ) -> SimulationResult:
+        t0 = time.perf_counter()
+        cfg = self.cfg
+        fs = features if features is not None else extract_features(
+            func_trace, cfg.features, with_labels=False
+        )
+        n = len(fs)
+        if n == 0:
+            raise ValueError("cannot simulate an empty trace")
+        w_eff = min(cfg.window, n)
+        # exact instruction count from the window grid (no float rounding)
+        count = num_windows(n, cfg.window, cfg.window) * w_eff
+        step = self._get_step(w_eff)
+
+        host_batches = stream_batches(
+            fs,
+            cfg.window,
+            self.ecfg.batch_size,
+            stride=cfg.window,
+            extra={
+                "is_branch": func_trace["is_branch"],
+                "is_mem": func_trace["is_mem"],
+            },
+        )
+        batches = (
+            self._prefetched(host_batches)
+            if self.ecfg.prefetch
+            else (self._device_put(b) for b in host_batches)
+        )
+
+        carry = _zero_carry()
+        pers = []
+        for batch in batches:
+            carry, per = step(self.params, carry, batch)
+            if self.ecfg.collect:
+                pers.append(per)
+
+        carry = jax.device_get(carry)  # single host sync for the whole trace
+        total = float(carry["fetch_sum"] + carry["last_exec"])
+        secs = time.perf_counter() - t0
+
+        arrays: Dict[str, Optional[np.ndarray]] = {
+            "fetch_lat": None, "exec_lat": None, "mispred_prob": None, "dlevel": None
+        }
+        if self.ecfg.collect and pers:
+            for k in arrays:
+                arrays[k] = np.concatenate(
+                    [np.asarray(p[k]) for p in pers]
+                )[:count]
+
+        return SimulationResult(
+            cpi=total / max(count, 1),
+            total_cycles=total,
+            branch_mpki=1000.0 * float(carry["mispred"]) / max(count, 1),
+            l1d_mpki=1000.0 * float(carry["l1d"]) / max(count, 1),
+            num_instructions=count,
+            seconds=secs,
+            mips=count / 1e6 / secs,
+            **arrays,
+        )
+
+
+def simulate_trace_engine(
+    params: Dict,
+    func_trace: np.ndarray,
+    cfg: TaoConfig,
+    batch_size: int = 64,
+    features: Optional[FeatureSet] = None,
+    collect: bool = False,
+    mesh: Optional[Mesh] = None,
+) -> SimulationResult:
+    """One-shot convenience wrapper: build an engine, stream one trace."""
+    engine = StreamingEngine(
+        params, cfg, EngineConfig(batch_size=batch_size, collect=collect, mesh=mesh)
+    )
+    return engine.simulate(func_trace, features=features)

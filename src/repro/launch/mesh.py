@@ -10,7 +10,7 @@ never touches jax device state.
 """
 from __future__ import annotations
 
-import jax
+from ..compat import make_mesh as _make
 
 __all__ = ["make_production_mesh", "make_mesh", "SINGLE_POD", "MULTI_POD"]
 
@@ -21,13 +21,9 @@ MULTI_POD = ((2, 16, 16), ("pod", "data", "model"))
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return _make(shape, axes)
 
 
 def make_mesh(shape, axes):
     """Arbitrary mesh (tests use small ones, e.g. (2,2))."""
-    return jax.make_mesh(
-        tuple(shape), tuple(axes), axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return _make(shape, axes)

@@ -426,7 +426,9 @@ def _sharded_seq_write(old: jnp.ndarray, rows: jnp.ndarray, pos) -> jnp.ndarray:
         idx = jax.lax.axis_index("model")
         return local_update(c, r, idx * c.shape[2])
 
-    return jax.shard_map(
+    from ..compat import shard_map
+
+    return shard_map(
         body, mesh=mesh, in_specs=(cache_spec, rows_spec), out_specs=cache_spec,
     )(old, rows)
 

@@ -2,8 +2,14 @@
 squashed/nop removal preserves total cycles exactly)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+
+try:  # property-based when available; example-based fallback otherwise
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
 
 from repro.core.align import build_adjusted_trace, verify_alignment
 from repro.uarch import (
@@ -63,9 +69,7 @@ def test_squashed_fraction_plausible(dee_traces):
     assert n_sq > n_nop  # branchy benchmark: speculation dominates stalls
 
 
-@settings(max_examples=8, deadline=None)
-@given(st.integers(0, 10_000))
-def test_alignment_holds_across_design_space(seed):
+def _check_alignment_at_design_point(seed):
     cfg = sample_design_space(1, seed=seed)[0]
     prog = get_benchmark("xal")
     ft = run_functional(prog, 1500)
@@ -73,3 +77,13 @@ def test_alignment_holds_across_design_space(seed):
     al = build_adjusted_trace(det)
     v = verify_alignment(al, ft)
     assert v["stream_match"] and v["cycles_match"], (cfg, v)
+
+
+if HAVE_HYPOTHESIS:
+    test_alignment_holds_across_design_space = settings(
+        max_examples=8, deadline=None
+    )(given(st.integers(0, 10_000))(_check_alignment_at_design_point))
+else:
+    test_alignment_holds_across_design_space = pytest.mark.parametrize(
+        "seed", [0, 17, 1234, 4242, 9999]
+    )(_check_alignment_at_design_point)

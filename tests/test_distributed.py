@@ -16,7 +16,11 @@ SRC = os.path.join(ROOT, "src")
 def _run(script: str, timeout=560) -> str:
     env = dict(os.environ)
     env["PYTHONPATH"] = SRC
-    env.pop("JAX_PLATFORMS", None)
+    # Force CPU: --xla_force_host_platform_device_count works with it, and
+    # leaving JAX_PLATFORMS unset would probe for a real TPU (libtpu ships in
+    # the image), which hangs on a stale /tmp/libtpu_lockfile after any
+    # killed run.
+    env["JAX_PLATFORMS"] = "cpu"
     p = subprocess.run(
         [sys.executable, "-c", script],
         capture_output=True,

@@ -1,0 +1,217 @@
+"""Streaming engine tests: vectorized features vs the reference loops,
+zero-copy windowing vs the copying grid, legacy-vs-engine metric
+equivalence, and the one-compile guarantee."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import (
+    FeatureConfig,
+    TaoConfig,
+    extract_features,
+    extract_features_reference,
+    init_tao,
+    num_windows,
+    stream_batches,
+    window_view,
+)
+from repro.core.simulate import simulate_trace, simulate_trace_legacy
+from repro.engine import EngineConfig, StreamingEngine
+from repro.uarch import get_benchmark, run_functional
+
+FCFG = FeatureConfig(n_buckets=32, n_queue=4, n_mem=8)
+CFG = TaoConfig(
+    window=17, d_model=32, n_heads=2, n_layers=1, d_ff=64, d_cat=16, features=FCFG
+)
+
+
+@pytest.fixture(scope="module")
+def trace():
+    return run_functional(get_benchmark("mcf"), 3000)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return init_tao(jax.random.PRNGKey(0), CFG)
+
+
+# ---------------------------------------------------------------------------
+# Layer 1: feature extraction
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("bench", ["mcf", "dee", "lee"])
+def test_vectorized_features_match_reference(bench):
+    ft = run_functional(get_benchmark(bench), 2500)
+    for cfg in (FCFG, FeatureConfig(n_buckets=2, n_queue=3, n_mem=2)):
+        vec = extract_features(ft, cfg, with_labels=False)
+        ref = extract_features_reference(ft, cfg, with_labels=False)
+        for f in ("opcode", "regbits", "flags", "brhist", "memdist"):
+            np.testing.assert_array_equal(
+                getattr(vec, f), getattr(ref, f), err_msg=f"{bench}/{f}"
+            )
+
+
+def test_vectorized_features_degenerate_traces():
+    from repro.uarch.isa import empty_func_trace
+
+    for n in (0, 1, 2):
+        t = empty_func_trace(n)  # no branches, no memory ops
+        vec = extract_features(t, FCFG, with_labels=False)
+        ref = extract_features_reference(t, FCFG, with_labels=False)
+        np.testing.assert_array_equal(vec.brhist, ref.brhist)
+        np.testing.assert_array_equal(vec.memdist, ref.memdist)
+
+
+# ---------------------------------------------------------------------------
+# Layer 2: windowing
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "n,window,stride",
+    [(100, 16, 16), (100, 16, 4), (100, 16, 1), (15, 16, 16), (16, 16, 16), (17, 16, 16)],
+)
+def test_window_view_matches_copying_grid(n, window, stride):
+    arr = np.arange(n * 3, dtype=np.float32).reshape(n, 3)
+    starts = list(range(0, max(1, n - window + 1), stride))
+    expect = np.stack([arr[s : s + window] for s in starts])
+    got = window_view(arr, window, stride)
+    np.testing.assert_array_equal(got, expect)
+    assert len(got) == num_windows(n, window, stride)
+    # zero-copy: the view shares memory with the source (n >= window case)
+    if n >= window:
+        assert np.shares_memory(got, arr)
+
+
+def test_stream_batches_padding_and_masks(trace):
+    fs = extract_features(trace, FCFG, with_labels=False)
+    W, B = CFG.window, 7
+    nw = num_windows(len(trace), W, W)
+    assert nw % B != 0  # exercises the ragged final batch
+    seen = 0
+    for batch in stream_batches(
+        fs, W, B, extra={"is_branch": trace["is_branch"]}
+    ):
+        assert batch["opcode"].shape == (B, W)
+        assert batch["is_branch"].shape == (B, W)
+        rows = int(batch["valid"][:, 0].sum())
+        # valid rows are a prefix; padded rows are fully zero
+        assert (batch["valid"][:rows] == 1.0).all()
+        assert (batch["valid"][rows:] == 0.0).all()
+        assert (batch["opcode"][rows:] == 0).all()
+        seen += rows
+    assert seen == nw
+
+
+# ---------------------------------------------------------------------------
+# Layer 3: engine vs legacy
+# ---------------------------------------------------------------------------
+
+
+def test_engine_matches_legacy_metrics(params, trace):
+    legacy = simulate_trace_legacy(params, trace, CFG, batch_size=64)
+    eng = simulate_trace(params, trace, CFG, batch_size=64, collect=True)
+    assert eng.num_instructions == legacy.num_instructions
+    assert np.isclose(eng.cpi, legacy.cpi, rtol=1e-5)
+    assert np.isclose(eng.total_cycles, legacy.total_cycles, rtol=1e-5)
+    # counts are integers: padding must not perturb them at all
+    assert eng.branch_mpki == legacy.branch_mpki
+    assert eng.l1d_mpki == legacy.l1d_mpki
+    np.testing.assert_allclose(eng.fetch_lat, legacy.fetch_lat, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(eng.exec_lat, legacy.exec_lat, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(
+        eng.mispred_prob, legacy.mispred_prob, rtol=1e-5, atol=1e-6
+    )
+    np.testing.assert_array_equal(eng.dlevel, legacy.dlevel)
+
+
+def test_engine_single_compile_across_uneven_batches(params, trace):
+    engine = StreamingEngine(params, CFG, EngineConfig(batch_size=13))
+    r1 = engine.simulate(trace)                                   # ragged tail
+    r2 = engine.simulate(run_functional(get_benchmark("dee"), 1000))
+    r3 = engine.simulate(run_functional(get_benchmark("lee"), 13 * 17))
+    assert engine.num_compiles == 1, engine.num_compiles
+    for r in (r1, r2, r3):
+        assert np.isfinite(r.cpi) and r.cpi > 0
+        assert r.fetch_lat is None  # metrics stayed on device
+
+
+def test_engine_collect_off_keeps_metrics_on_device(params, trace):
+    eng = simulate_trace(params, trace, CFG, collect=False)
+    assert eng.fetch_lat is None and eng.dlevel is None
+    full = simulate_trace(params, trace, CFG, collect=True)
+    assert np.isclose(eng.cpi, full.cpi, rtol=1e-6)
+    assert eng.branch_mpki == full.branch_mpki
+
+
+def test_engine_short_trace_matches_legacy(params):
+    ft = run_functional(get_benchmark("dee"), 9)  # n < window
+    legacy = simulate_trace_legacy(params, ft, CFG)
+    eng = simulate_trace(params, ft, CFG)
+    assert eng.num_instructions == legacy.num_instructions == 9
+    assert np.isclose(eng.cpi, legacy.cpi, rtol=1e-5)
+
+
+def test_engine_sharded_path_matches(params, trace):
+    mesh = jax.make_mesh((1,), ("data",))
+    plain = StreamingEngine(params, CFG, EngineConfig(batch_size=16))
+    sharded = StreamingEngine(
+        params, CFG, EngineConfig(batch_size=16, mesh=mesh, collect=True)
+    )
+    a = plain.simulate(trace)
+    b = sharded.simulate(trace)
+    assert np.isclose(a.cpi, b.cpi, rtol=1e-5)
+    assert a.branch_mpki == b.branch_mpki
+    assert a.l1d_mpki == b.l1d_mpki
+    legacy = simulate_trace_legacy(params, trace, CFG)
+    np.testing.assert_allclose(b.fetch_lat, legacy.fetch_lat, rtol=1e-5, atol=1e-5)
+
+
+def test_engine_rejects_mesh_without_data_axis(params):
+    mesh = jax.make_mesh((1,), ("model",))
+    with pytest.raises(ValueError):
+        StreamingEngine(params, CFG, EngineConfig(batch_size=16, mesh=mesh))
+
+
+def test_engine_multidevice_shard_map():
+    """8 placeholder devices: data and pod+data meshes must reproduce the
+    legacy metrics exactly (subprocess so XLA device flags apply)."""
+    import os
+    import subprocess
+    import sys
+    import textwrap
+
+    script = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import numpy as np, jax
+    from repro.core import TaoConfig, FeatureConfig, init_tao
+    from repro.core.simulate import simulate_trace_legacy
+    from repro.engine import StreamingEngine, EngineConfig
+    from repro.uarch import get_benchmark, run_functional
+
+    fcfg = FeatureConfig(n_buckets=64, n_queue=4, n_mem=8)
+    cfg = TaoConfig(window=17, d_model=32, n_heads=2, n_layers=1, d_ff=64,
+                    d_cat=16, features=fcfg)
+    params = init_tao(jax.random.PRNGKey(0), cfg)
+    ft = run_functional(get_benchmark("mcf"), 3000)
+    leg = simulate_trace_legacy(params, ft, cfg)
+    for shape, names in [((8,), ("data",)), ((2, 4), ("pod", "data"))]:
+        mesh = jax.make_mesh(shape, names)
+        e = StreamingEngine(params, cfg,
+                            EngineConfig(batch_size=32, mesh=mesh))
+        r = e.simulate(ft)
+        assert abs(r.cpi - leg.cpi) / leg.cpi < 1e-5, (names, r.cpi, leg.cpi)
+        assert r.branch_mpki == leg.branch_mpki
+        assert r.l1d_mpki == leg.l1d_mpki
+        assert e.num_compiles == 1
+    print("SHARD_OK")
+    """)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    env["JAX_PLATFORMS"] = "cpu"  # placeholder devices; avoid TPU probing
+    p = subprocess.run([sys.executable, "-c", script], capture_output=True,
+                       text=True, timeout=560, env=env)
+    assert p.returncode == 0, p.stderr[-3000:]
+    assert "SHARD_OK" in p.stdout

@@ -4,8 +4,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+
+try:  # property-based when available; example-based fallback otherwise
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
 
 from repro.kernels.attention.ops import flash_attention
 from repro.kernels.attention.ref import attention_ref
@@ -77,14 +83,7 @@ def test_flash_q_offset_decode_semantics():
     )
 
 
-@settings(max_examples=8, deadline=None)
-@given(
-    B=st.integers(1, 2),
-    H=st.integers(1, 3),
-    S=st.sampled_from([32, 48, 80]),
-    D=st.sampled_from([16, 32]),
-)
-def test_flash_kernel_property(B, H, S, D):
+def _check_flash_kernel(B, H, S, D):
     ks = jax.random.split(jax.random.PRNGKey(B * 100 + H * 10 + S + D), 3)
     q = jax.random.normal(ks[0], (B, H, S, D))
     k = jax.random.normal(ks[1], (B, H, S, D))
@@ -92,6 +91,22 @@ def test_flash_kernel_property(B, H, S, D):
     out = flash_attention(q, k, v, causal=True, block_q=32, block_k=32)
     ref = attention_ref(q, k, v, causal=True)
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=3e-5, rtol=3e-5)
+
+
+if HAVE_HYPOTHESIS:
+    test_flash_kernel_property = settings(max_examples=8, deadline=None)(
+        given(
+            B=st.integers(1, 2),
+            H=st.integers(1, 3),
+            S=st.sampled_from([32, 48, 80]),
+            D=st.sampled_from([16, 32]),
+        )(_check_flash_kernel)
+    )
+else:
+    test_flash_kernel_property = pytest.mark.parametrize(
+        "B,H,S,D",
+        [(1, 1, 32, 16), (2, 3, 48, 32), (1, 2, 80, 16), (2, 1, 80, 32)],
+    )(_check_flash_kernel)
 
 
 # ---------------------------------------------------------------------------

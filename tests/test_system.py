@@ -35,6 +35,31 @@ from repro.uarch import (
 N_INSTR = 8000
 
 
+def test_pipeline_smoke():
+    """Fast tier-1 stand-in for the full pipeline: trace -> adjusted dataset
+    -> (untrained) model -> engine simulation produces finite metrics."""
+    from repro.core import init_tao, simulate_trace
+
+    fcfg = FeatureConfig(n_buckets=64, n_queue=4, n_mem=8)
+    cfg = TaoConfig(
+        window=17, d_model=32, n_heads=2, n_layers=1, d_ff=64, d_cat=16,
+        features=fcfg,
+    )
+    prog = get_benchmark("dee")
+    ft = run_functional(prog, 2000)
+    det, _ = run_detailed(prog, ft, UARCH_A)
+    al = build_adjusted_trace(det)
+    assert verify_alignment(al, ft)["cycles_match"]
+    ds = build_windows(extract_features(al.adjusted, fcfg), cfg.window)
+    assert len(ds) > 0
+
+    params = init_tao(jax.random.PRNGKey(0), cfg)
+    sim = simulate_trace(params, ft, cfg, collect=False)
+    assert np.isfinite(sim.cpi) and sim.cpi > 0
+    assert np.isfinite(sim.branch_mpki) and np.isfinite(sim.l1d_mpki)
+    assert sim.num_instructions == (2000 // cfg.window) * cfg.window
+
+
 @pytest.mark.slow
 def test_full_paper_pipeline():
     fcfg = FeatureConfig(n_buckets=128, n_queue=8, n_mem=16)
