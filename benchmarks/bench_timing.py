@@ -5,6 +5,9 @@
   * simulation (inference) throughput: streaming engine vs the pre-refactor
     host batch loop (`simulate_trace_legacy`), with the engine's compile
     count asserted to be exactly one
+  * §4.2 feature-extraction throughput: host NumPy (`extract_features`) vs
+    the device Pallas scan kernels (`extract_features_device`), plus the
+    fused engine (`feature_backend="pallas"`) vs the host pre-pass
   * the Table-4 ratio: (trace gen + train + simulate) Tao vs SimNet, where
     SimNet is charged detailed-trace generation for every new µarch and Tao
     is charged the reusable functional trace once.
@@ -13,9 +16,10 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core import train_tao
+from repro.core import extract_features, train_tao
 from repro.core.simulate import simulate_trace_legacy
 from repro.engine import EngineConfig, StreamingEngine
+from repro.kernels.features.ops import extract_features_device
 from repro.uarch import UARCH_A, UARCH_B, UARCH_C, get_benchmark, run_detailed, run_functional
 from repro.uarch.isa import KIND_NOP, KIND_REAL, KIND_SQUASHED
 
@@ -90,6 +94,37 @@ def run() -> None:
         f"engine_mips={sim2.mips:.4f};legacy_mips={legacy.mips:.4f};"
         f"speedup={sim2.mips / legacy.mips:.2f}x;compiles={engine.num_compiles};"
         f"cpi_rel_err={cpi_err:.2e}",
+    )
+
+    # --- host vs device feature extraction (Pallas feature kernels) -------
+    fcfg = cfg.features
+    extract_features_device(ft_test, fcfg)  # warm-up: compile the scans
+    with Timer() as t_host:
+        extract_features(ft_test, fcfg, with_labels=False)
+    with Timer() as t_dev:
+        extract_features_device(ft_test, fcfg)  # includes device->host copy
+    n_ft = len(ft_test)
+    host_mips = n_ft / 1e6 / t_host.seconds
+    dev_mips = n_ft / 1e6 / t_dev.seconds
+    # fused engine: features computed on device inside the streaming step
+    fused = StreamingEngine(
+        res.params, cfg, EngineConfig(batch_size=64, feature_backend="pallas")
+    )
+    fused.simulate(ft_test)       # warm-up
+    sim_fused = fused.simulate(ft_test)
+    # host->device traffic: the numpy backend ships the materialized
+    # FeatureSet (+ masks); the pallas backend ships raw int32/bool columns.
+    host_bpi = 4 * (1 + 32 + 5 + fcfg.n_queue + fcfg.n_mem) + 2
+    dev_bpi = 4 * 6 + 4  # 6 int32 columns + 4 bool columns (trace_columns)
+    emit(
+        "features/extraction",
+        1e6 / max(dev_mips * 1e6, 1e-9),
+        f"host_mips={host_mips:.4f};device_mips={dev_mips:.4f};"
+        f"device_speedup={dev_mips / host_mips:.2f}x;"
+        f"fused_engine_mips={sim_fused.mips:.4f};"
+        f"host_prepass_engine_mips={sim2.mips:.4f};"
+        f"transfer_bytes_per_instr={host_bpi}->{dev_bpi}"
+        f"({host_bpi / dev_bpi:.1f}x less)",
     )
 
     # SimNet-style: detailed trace for the new µarch + full training + sim

@@ -28,7 +28,13 @@ from repro.uarch import (
 
 SCALE = os.environ.get("BENCH_SCALE", "small")
 
-if SCALE == "small":
+if SCALE == "tiny":  # CI smoke: seconds, not minutes; trends only
+    TRACE_LEN = 2_000
+    TEST_LEN = 1_000
+    EPOCHS = 2
+    WINDOW = 17
+    D_MODEL, N_HEADS, N_LAYERS, D_FF, D_CAT = 32, 2, 1, 64, 16
+elif SCALE == "small":
     TRACE_LEN = 12_000
     TEST_LEN = 6_000
     EPOCHS = 6

@@ -7,13 +7,17 @@
   bench_dse        Fig 15    design-space exploration
   bench_kernels    (systems) chunked attention / SSD formulations
 
-Prints ``name,us_per_call,derived`` CSV.  BENCH_SCALE=small|full controls
-trace lengths / epochs (CPU container defaults to small).
-Run a subset: ``python -m benchmarks.run --only fig9,table4``.
+Prints ``name,us_per_call,derived`` CSV.  BENCH_SCALE=tiny|small|full
+controls trace lengths / epochs (CPU container defaults to small; CI smoke
+uses tiny).  Run a subset: ``python -m benchmarks.run --only fig9,table4``.
+``--json PATH`` additionally writes the rows as structured JSON (the CI
+bench-smoke job uploads ``BENCH_timing.json`` as an artifact so the perf
+trajectory is tracked per PR).
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 import traceback
@@ -26,7 +30,7 @@ from . import (
     bench_timing,
     bench_transfer,
 )
-from .common import emit, rows
+from .common import SCALE, emit, rows
 
 SUITES = {
     "fig9": bench_accuracy.run,
@@ -38,9 +42,22 @@ SUITES = {
 }
 
 
+def _write_json(path: str) -> None:
+    records = []
+    for row in rows():
+        name, us, derived = row.split(",", 2)
+        records.append(
+            {"name": name, "us_per_call": float(us), "derived": derived}
+        )
+    with open(path, "w") as f:
+        json.dump({"scale": SCALE, "rows": records}, f, indent=2)
+    print(f"wrote {path} ({len(records)} rows)", flush=True)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None, help="comma-separated suite names")
+    ap.add_argument("--json", default=None, help="also write rows to this JSON file")
     args = ap.parse_args()
     names = list(SUITES) if not args.only else args.only.split(",")
 
@@ -57,6 +74,8 @@ def main() -> None:
             emit(f"{name}/total", 0.0, f"FAILED:{type(e).__name__}:{e}")
             traceback.print_exc()
     emit("all/total", (time.time() - t0) * 1e6, f"failures={failures}")
+    if args.json:
+        _write_json(args.json)
     if failures:
         sys.exit(1)
 

@@ -7,7 +7,17 @@ from __future__ import annotations
 
 import jax
 
-__all__ = ["shard_map", "make_mesh", "activate_mesh", "cost_analysis"]
+__all__ = ["shard_map", "make_mesh", "activate_mesh", "cost_analysis", "on_tpu"]
+
+
+def on_tpu() -> bool:
+    """True when the default jax backend is a real TPU.
+
+    The kernel wrappers in ``repro.kernels`` use this to pick native Mosaic
+    lowering on TPU and ``interpret=True`` everywhere else, so CPU CI runs
+    the same Pallas programs.
+    """
+    return jax.default_backend() == "tpu"
 
 if hasattr(jax, "shard_map"):  # jax >= 0.6
     shard_map = jax.shard_map

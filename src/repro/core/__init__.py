@@ -14,6 +14,7 @@ from .features import (
     FeatureSet,
     extract_features,
     extract_features_reference,
+    signed_log,
 )
 from .model import (
     LOSS_WEIGHTS,
@@ -51,6 +52,7 @@ __all__ = [
     "FeatureSet",
     "extract_features",
     "extract_features_reference",
+    "signed_log",
     "NUM_OPCODES",
     "TaoConfig",
     "init_tao",

@@ -29,6 +29,7 @@ Two implementations of the cross-instruction features:
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Dict, Optional
 
 import numpy as np
@@ -40,6 +41,9 @@ __all__ = [
     "FeatureSet",
     "extract_features",
     "extract_features_reference",
+    "signed_log",
+    "SIGNED_LOG_COEFFS",
+    "SIGNED_LOG_SQRT2",
     "NUM_OPCODES",
 ]
 
@@ -126,8 +130,52 @@ def _labels(trace: np.ndarray, with_labels: bool):
     }
 
 
-def _signed_log(d: np.ndarray) -> np.ndarray:
-    return (np.sign(d) * np.log2(1.0 + np.abs(d)) / 32.0).astype(np.float32)
+# ---------------------------------------------------------------------------
+# Deterministic signed-log compression.
+#
+# sign(d) * log2(1 + |d|) / 32 evaluated as a FIXED sequence of exactly
+# rounded float32 operations: exponent/mantissa split by bit manipulation,
+# then an atanh-series polynomial (Horner) for log2 of the mantissa.  Every
+# step is an individually rounded IEEE-754 float32 op, so NumPy and an
+# op-per-dispatch jax evaluation (``repro.kernels.features.ops.signed_log_device``)
+# produce bit-identical results — the property the pallas feature backend's
+# exact-equivalence tests rely on.  A fused/jitted evaluation would NOT be
+# bit-identical: XLA contracts `a*b + c` into fma, which rounds once instead
+# of twice.  Max relative error vs true log2 is ~6e-8 (≈1 ulp).
+# ---------------------------------------------------------------------------
+
+# 2/ln2 * s^(2k) atanh-series coefficients: log2(m) = (2/ln2)·atanh(s) with
+# s = (m-1)/(m+1); degree 13 keeps the error ≈1 ulp over m ∈ [√2/2, √2].
+SIGNED_LOG_COEFFS = tuple(
+    np.float32(2.0 / math.log(2.0) / k) for k in (1, 3, 5, 7, 9, 11, 13)
+)
+SIGNED_LOG_SQRT2 = np.float32(math.sqrt(2.0))
+
+
+def signed_log(d: np.ndarray) -> np.ndarray:
+    """Signed-log-compress deltas to float32, bit-reproducibly (see above)."""
+    d = np.asarray(d).astype(np.float32)
+    a = np.abs(d)
+    x = np.float32(1.0) + a
+    bits = x.view(np.int32)
+    e = ((bits >> 23) & np.int32(0xFF)) - np.int32(127)
+    m = ((bits & np.int32(0x007FFFFF)) | np.int32(0x3F800000)).view(np.float32)
+    big = m > SIGNED_LOG_SQRT2
+    m = np.where(big, m * np.float32(0.5), m)
+    e = (e + big).astype(np.float32)
+    s = (m - np.float32(1.0)) / (m + np.float32(1.0))
+    z = s * s
+    p = np.full_like(z, SIGNED_LOG_COEFFS[-1])
+    for c in SIGNED_LOG_COEFFS[-2::-1]:
+        p = p * z
+        p = p + c
+    r = p * s
+    r = r + e
+    r = r * np.float32(1.0 / 32.0)
+    return np.where(d < 0, -r, r)
+
+
+_signed_log = signed_log
 
 
 def _branch_history(trace: np.ndarray, cfg: FeatureConfig) -> np.ndarray:

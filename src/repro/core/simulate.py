@@ -46,9 +46,12 @@ def simulate_trace(
     batch_size: int = 64,
     features: Optional[FeatureSet] = None,
     collect: bool = True,
+    feature_backend: str = "numpy",
 ) -> SimulationResult:
     """Engine-backed simulation.  `collect=False` keeps all metrics on
-    device (fastest; per-instruction arrays in the result stay None)."""
+    device (fastest; per-instruction arrays in the result stay None).
+    `feature_backend="pallas"` fuses §4.2 feature extraction into the
+    device-resident stream (see docs/engine.md)."""
     return simulate_trace_engine(
         params,
         func_trace,
@@ -56,6 +59,7 @@ def simulate_trace(
         batch_size=batch_size,
         features=features,
         collect=collect,
+        feature_backend=feature_backend,
     )
 
 

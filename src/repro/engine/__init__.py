@@ -5,6 +5,7 @@ See ``docs/engine.md`` for the data-flow architecture and
 host-loop path (``repro.core.simulate.simulate_trace_legacy``).
 """
 from .runner import (
+    FEATURE_BACKENDS,
     EngineConfig,
     SimulationResult,
     StreamingEngine,
@@ -13,6 +14,7 @@ from .runner import (
 
 __all__ = [
     "EngineConfig",
+    "FEATURE_BACKENDS",
     "SimulationResult",
     "StreamingEngine",
     "simulate_trace_engine",

@@ -22,6 +22,11 @@ Design points (each measured by ``benchmarks/bench_timing.py``):
   * **Sharding.**  With a mesh, the step runs under ``jax.shard_map`` with
     the batch dimension split over the ``data`` axis (rules from
     ``distributed/sharding.py``) and partial sums combined with ``psum``.
+  * **Feature backends.**  ``feature_backend="pallas"`` replaces the host
+    NumPy feature pre-pass with the device scan kernels in
+    ``kernels/features/``: raw trace columns are shipped once, features are
+    extracted on device, and batches become device-side slices
+    (bit-identical to the NumPy path; see docs/engine.md).
 
 ``core.simulate.simulate_trace`` is a thin wrapper over this engine; the
 original host-loop implementation survives as ``simulate_trace_legacy`` and
@@ -44,12 +49,21 @@ from ..core.model import TaoConfig, tao_forward
 from ..distributed.sharding import logical_to_spec
 from ..uarch.isa import DLEVEL_L2
 
+# NOTE: repro.kernels.features.ops is imported lazily inside simulate();
+# a module-level import would close an import cycle (kernels.features.ops
+# -> repro.core package init -> core.simulate -> engine.runner) and crash
+# any consumer whose first repro import is the ops module.
+
 __all__ = [
     "EngineConfig",
+    "FEATURE_BACKENDS",
     "SimulationResult",
     "StreamingEngine",
     "simulate_trace_engine",
 ]
+
+
+FEATURE_BACKENDS = ("numpy", "pallas")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -58,6 +72,13 @@ class EngineConfig:
     collect: bool = False        # also return per-instruction predictions
     prefetch: bool = True        # overlap host->device copy with compute
     mesh: Optional[Mesh] = None  # shard_map data-parallel path when set
+    # "numpy": host NumPy pre-pass + per-batch host->device transfers.
+    # "pallas": fused device extraction — the trace's int32/bool columns are
+    # shipped once, the Pallas scan kernels compute brhist/memdist on device,
+    # and batches are device-side slices (bit-identical to the NumPy path;
+    # falls back to it when addresses exceed the int32-exact window).
+    feature_backend: str = "numpy"
+    feature_chunk: int = 512     # Pallas scan grid chunk (trace positions)
 
 
 @dataclasses.dataclass
@@ -121,6 +142,15 @@ class StreamingEngine:
     def __init__(self, params: Dict, cfg: TaoConfig, ecfg: EngineConfig = EngineConfig()):
         if ecfg.batch_size < 1:
             raise ValueError(f"batch_size must be >= 1, got {ecfg.batch_size}")
+        if ecfg.feature_backend not in FEATURE_BACKENDS:
+            raise ValueError(
+                f"feature_backend must be one of {FEATURE_BACKENDS}, "
+                f"got {ecfg.feature_backend!r}"
+            )
+        if ecfg.feature_chunk < 1:
+            raise ValueError(
+                f"feature_chunk must be >= 1, got {ecfg.feature_chunk}"
+            )
         self._batch_axes: tuple = ()
         if ecfg.mesh is not None:
             # the rules table in distributed/sharding.py decides which mesh
@@ -238,10 +268,16 @@ class StreamingEngine:
     def _get_step(self, w_eff: int):
         entry = self._steps.get(w_eff)
         if entry is None:
-            # cfg/ecfg are frozen dataclasses (Mesh is hashable), so steps
-            # are shared process-wide; the cache is bounded by the number of
-            # distinct configurations a process ever uses.
-            key = (self.cfg, self.ecfg, w_eff)
+            # Keyed on exactly what the compiled step depends on — notably
+            # NOT prefetch or feature_backend, so "numpy" and "pallas"
+            # engines of the same shape share one executable.
+            key = (
+                self.cfg,
+                self.ecfg.batch_size,
+                self.ecfg.collect,
+                self.ecfg.mesh,
+                w_eff,
+            )
             entry = _STEP_CACHE.get(key)
             if entry is None:
                 entry = _CachedStep()
@@ -274,6 +310,31 @@ class StreamingEngine:
             cur = nxt_dev
         yield cur
 
+    def _device_batches(
+        self, arrays: Dict, w_eff: int, count: int
+    ) -> Iterator[Dict]:
+        """Batch iterator over device-resident feature arrays (the "pallas"
+        backend): windows are device-side reshapes (the engine grid is
+        non-overlapping, stride == window), the ragged tail is zero-padded
+        on device, and per-batch slicing never touches the host."""
+        bsz = self.ecfg.batch_size
+        nw = count // w_eff
+        nb = -(-nw // bsz)
+        # arrays already carries the device-resident is_branch/is_mem bool
+        # columns (device_feature_arrays ships them once for the flags).
+        stacked = {}
+        for k, v in arrays.items():
+            v = v[:count].reshape((nw, w_eff) + v.shape[1:])
+            if nb * bsz > nw:
+                v = jnp.pad(v, [(0, nb * bsz - nw)] + [(0, 0)] * (v.ndim - 1))
+            stacked[k] = v.reshape((nb, bsz) + v.shape[1:])
+        valid = np.zeros((nb * bsz, w_eff), dtype=np.float32)
+        valid[:nw] = 1.0
+        stacked["valid"] = jnp.asarray(valid.reshape(nb, bsz, w_eff))
+        for i in range(nb):
+            batch = {k: v[i] for k, v in stacked.items()}
+            yield self._device_put(batch) if self.ecfg.mesh is not None else batch
+
     def simulate(
         self,
         func_trace: np.ndarray,
@@ -281,10 +342,7 @@ class StreamingEngine:
     ) -> SimulationResult:
         t0 = time.perf_counter()
         cfg = self.cfg
-        fs = features if features is not None else extract_features(
-            func_trace, cfg.features, with_labels=False
-        )
-        n = len(fs)
+        n = len(features) if features is not None else len(func_trace)
         if n == 0:
             raise ValueError("cannot simulate an empty trace")
         w_eff = min(cfg.window, n)
@@ -292,21 +350,40 @@ class StreamingEngine:
         count = num_windows(n, cfg.window, cfg.window) * w_eff
         step = self._get_step(w_eff)
 
-        host_batches = stream_batches(
-            fs,
-            cfg.window,
-            self.ecfg.batch_size,
-            stride=cfg.window,
-            extra={
-                "is_branch": func_trace["is_branch"],
-                "is_mem": func_trace["is_mem"],
-            },
-        )
-        batches = (
-            self._prefetched(host_batches)
-            if self.ecfg.prefetch
-            else (self._device_put(b) for b in host_batches)
-        )
+        dev_arrays = None
+        fs = features
+        if fs is None and self.ecfg.feature_backend == "pallas":
+            from ..kernels.features.ops import (  # lazy: see module note
+                device_feature_arrays,
+                trace_columns,
+            )
+
+            cols = trace_columns(func_trace, cfg.features)
+            if cols is not None:  # addresses fit the int32-exact window
+                dev_arrays = device_feature_arrays(
+                    cols, cfg.features, chunk=self.ecfg.feature_chunk
+                )
+        if fs is None and dev_arrays is None:
+            fs = extract_features(func_trace, cfg.features, with_labels=False)
+
+        if dev_arrays is not None:
+            batches = self._device_batches(dev_arrays, w_eff, count)
+        else:
+            host_batches = stream_batches(
+                fs,
+                cfg.window,
+                self.ecfg.batch_size,
+                stride=cfg.window,
+                extra={
+                    "is_branch": func_trace["is_branch"],
+                    "is_mem": func_trace["is_mem"],
+                },
+            )
+            batches = (
+                self._prefetched(host_batches)
+                if self.ecfg.prefetch
+                else (self._device_put(b) for b in host_batches)
+            )
 
         carry = _zero_carry()
         pers = []
@@ -348,9 +425,17 @@ def simulate_trace_engine(
     features: Optional[FeatureSet] = None,
     collect: bool = False,
     mesh: Optional[Mesh] = None,
+    feature_backend: str = "numpy",
 ) -> SimulationResult:
     """One-shot convenience wrapper: build an engine, stream one trace."""
     engine = StreamingEngine(
-        params, cfg, EngineConfig(batch_size=batch_size, collect=collect, mesh=mesh)
+        params,
+        cfg,
+        EngineConfig(
+            batch_size=batch_size,
+            collect=collect,
+            mesh=mesh,
+            feature_backend=feature_backend,
+        ),
     )
     return engine.simulate(func_trace, features=features)

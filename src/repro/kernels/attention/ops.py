@@ -11,13 +11,10 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from ...compat import on_tpu
 from .kernel import flash_attention_pallas
 
 __all__ = ["flash_attention"]
-
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
 
 
 @functools.partial(
@@ -42,5 +39,5 @@ def flash_attention(
         q_offset=q_offset,
         block_q=block_q,
         block_k=block_k,
-        interpret=not _on_tpu(),
+        interpret=not on_tpu(),
     )

@@ -1,0 +1,290 @@
+"""Public wrappers for the §4.2 feature-extraction Pallas kernels.
+
+On TPU the kernels lower natively through Mosaic; everywhere else they run
+under ``interpret=True`` so CPU CI exercises the same programs.  The
+contract — enforced by ``tests/test_feature_kernels.py`` — is that the
+device extraction is **bit-identical** to the NumPy specification
+(``core.features.extract_features`` / ``extract_features_reference``):
+
+  * branch-history rows are copies of {-1, 0, +1} values (exact);
+  * memory-distance deltas are int32 subtractions (exact) converted to
+    float32 (correctly rounded), with the signed-log compression applied by
+    ``signed_log_device`` — an op-per-dispatch jax twin of
+    ``core.features.signed_log``.  Each multiply/add runs as its own XLA
+    dispatch; fusing them into one jit would let XLA contract `a*b + c`
+    into fma (one rounding instead of two) and break bit-equality.
+
+``trace_columns`` does the cheap host-side prep (bucket hash on the int64
+pc, int32 address narrowing) and returns None when addresses fall outside
+the int32-exact window, in which case callers fall back to the NumPy path.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ...compat import on_tpu
+from ...core import features as _features
+from ...core.features import (
+    SIGNED_LOG_COEFFS,
+    SIGNED_LOG_SQRT2,
+    FeatureConfig,
+    FeatureSet,
+)
+from ...uarch.isa import NUM_REGS, Op
+from .kernel import branch_history_pallas, memdist_delta_pallas
+
+__all__ = [
+    "signed_log_device",
+    "branch_history_scan",
+    "memdist_delta_scan",
+    "trace_columns",
+    "device_feature_arrays",
+    "extract_features_device",
+    "ADDR_EXACT_LIMIT",
+]
+
+# Addresses must stay within this bound for int32 deltas to be exact (and
+# overflow-free: |a - b| < 2^31 when |a|, |b| < 2^30).
+ADDR_EXACT_LIMIT = 2**30
+
+DEFAULT_CHUNK = 512
+
+
+def signed_log_device(d: jnp.ndarray) -> jnp.ndarray:
+    """Bit-exact jax twin of ``core.features.signed_log``.
+
+    Must run EAGERLY (op per dispatch): each operation is then individually
+    rounded, matching NumPy bit for bit.  Do not wrap in ``jax.jit`` — XLA's
+    fma contraction of `a*b + c` would round once instead of twice and
+    diverge from the NumPy backend in the last ulp.
+    """
+    d = jnp.asarray(d, jnp.float32)
+    a = jnp.abs(d)
+    x = jnp.float32(1.0) + a
+    bits = jax.lax.bitcast_convert_type(x, jnp.int32)
+    e = ((bits >> 23) & jnp.int32(0xFF)) - jnp.int32(127)
+    m = jax.lax.bitcast_convert_type(
+        (bits & jnp.int32(0x007FFFFF)) | jnp.int32(0x3F800000), jnp.float32
+    )
+    big = m > SIGNED_LOG_SQRT2
+    m = jnp.where(big, m * jnp.float32(0.5), m)
+    e = (e + big).astype(jnp.float32)
+    s = (m - jnp.float32(1.0)) / (m + jnp.float32(1.0))
+    z = s * s
+    p = jnp.full_like(z, SIGNED_LOG_COEFFS[-1])
+    for c in SIGNED_LOG_COEFFS[-2::-1]:
+        p = p * z
+        p = p + jnp.float32(c)
+    r = p * s
+    r = r + e
+    r = r * jnp.float32(1.0 / 32.0)
+    return jnp.where(d < 0, -r, r)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_buckets", "n_queue", "chunk", "interpret")
+)
+def _branch_history_padded(bucket, outcome, *, n_buckets, n_queue, chunk, interpret):
+    n = bucket.shape[0]
+    nc = max(1, -(-n // chunk))
+    pad = nc * chunk - n
+    b2 = jnp.pad(bucket, (0, pad)).reshape(nc, chunk)
+    o2 = jnp.pad(outcome, (0, pad)).reshape(nc, chunk)  # pad rows: non-branch
+    out = branch_history_pallas(
+        b2, o2, n_buckets=n_buckets, n_queue=n_queue, interpret=interpret
+    )
+    return out.reshape(nc * chunk, n_queue)[:n]
+
+
+def branch_history_scan(
+    bucket,
+    outcome,
+    *,
+    n_buckets: int,
+    n_queue: int,
+    chunk: int = DEFAULT_CHUNK,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """(n,) bucket ids + outcomes -> (n, n_queue) branch-history features."""
+    if interpret is None:
+        interpret = not on_tpu()
+    bucket = jnp.asarray(bucket, jnp.int32)
+    outcome = jnp.asarray(outcome, jnp.float32)
+    if bucket.shape[0] == 0:
+        return jnp.zeros((0, n_queue), jnp.float32)
+    return _branch_history_padded(
+        bucket,
+        outcome,
+        n_buckets=n_buckets,
+        n_queue=n_queue,
+        chunk=chunk,
+        interpret=interpret,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("n_mem", "chunk", "interpret"))
+def _memdist_padded(addr, mem, *, n_mem, chunk, interpret):
+    n = addr.shape[0]
+    nc = max(1, -(-n // chunk))
+    pad = nc * chunk - n
+    a2 = jnp.pad(addr, (0, pad)).reshape(nc, chunk)
+    m2 = jnp.pad(mem, (0, pad)).reshape(nc, chunk)  # pad rows: non-mem
+    out = memdist_delta_pallas(a2, m2, n_mem=n_mem, interpret=interpret)
+    return out.reshape(nc * chunk, n_mem)[:n]
+
+
+def memdist_delta_scan(
+    addr,
+    mem,
+    *,
+    n_mem: int,
+    chunk: int = DEFAULT_CHUNK,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """(n,) int32 addresses + mem mask -> (n, n_mem) RAW float32 deltas."""
+    if interpret is None:
+        interpret = not on_tpu()
+    addr = jnp.asarray(addr, jnp.int32)
+    mem = jnp.asarray(mem, jnp.int32)
+    if addr.shape[0] == 0:
+        return jnp.zeros((0, n_mem), jnp.float32)
+    return _memdist_padded(
+        addr, mem, n_mem=n_mem, chunk=chunk, interpret=interpret
+    )
+
+
+def trace_columns(
+    trace: np.ndarray, cfg: FeatureConfig
+) -> Optional[Dict[str, np.ndarray]]:
+    """Host-side prep of the device extraction inputs.
+
+    Bucket hashing runs on the host so the int64 pc is handled exactly;
+    everything shipped to the device is int32/float32.  Returns None when
+    addresses exceed the int32-exact window (|addr| >= 2^30) — the caller
+    must then fall back to the NumPy backend.
+    """
+    addr = trace["addr"]
+    if len(addr) and int(np.abs(addr).max()) >= ADDR_EXACT_LIMIT:
+        return None
+    # Minimal payload (~28 B/instr): branch outcomes and the mem mask are
+    # derived on device from the bool columns instead of being shipped as
+    # widened duplicates.
+    return {
+        "bucket": ((trace["pc"] >> 2) % cfg.n_buckets).astype(np.int32),
+        "addr": addr.astype(np.int32),
+        "opcode": trace["opcode"].astype(np.int32),
+        "dst": trace["dst"].astype(np.int32),
+        "src1": trace["src1"].astype(np.int32),
+        "src2": trace["src2"].astype(np.int32),
+        "is_branch": trace["is_branch"],
+        "taken": trace["taken"],
+        "is_mem": trace["is_mem"],
+        "is_store": trace["is_store"],
+    }
+
+
+@jax.jit
+def _per_instruction_device(opcode, dst, src1, src2, is_branch, taken, is_mem, is_store):
+    # Exact integer/boolean -> float32 ops only: safe to fuse in one jit.
+    reg = jnp.arange(NUM_REGS, dtype=jnp.int32)[None, :]
+    regbits = (
+        (reg == dst[:, None]) | (reg == src1[:, None]) | (reg == src2[:, None])
+    ).astype(jnp.float32)
+    is_fp = (
+        (opcode == int(Op.FALU)) | (opcode == int(Op.FMUL)) | (opcode == int(Op.FDIV))
+    )
+    flags = jnp.stack(
+        [is_branch, taken, is_mem, is_store, is_fp], axis=1
+    ).astype(jnp.float32)
+    # Scan-kernel inputs derived on device (exact selects/casts): ±1/0
+    # branch outcomes and the int32 mem mask.
+    outcome = jnp.where(
+        is_branch,
+        jnp.where(taken, jnp.float32(1.0), jnp.float32(-1.0)),
+        jnp.float32(0.0),
+    )
+    mem = is_mem.astype(jnp.int32)
+    return regbits, flags, outcome, mem
+
+
+def device_feature_arrays(
+    cols: Dict[str, np.ndarray],
+    cfg: FeatureConfig,
+    *,
+    chunk: int = DEFAULT_CHUNK,
+    interpret: Optional[bool] = None,
+) -> Dict[str, jnp.ndarray]:
+    """Run the full device extraction; returns (n, ·) jnp arrays keyed like
+    ``core.dataset.INPUT_KEYS``, plus the device-resident ``is_branch`` /
+    ``is_mem`` bool columns so callers (the engine's device batch path)
+    never re-upload them.  All values stay on device."""
+    is_branch = jnp.asarray(cols["is_branch"])
+    is_mem = jnp.asarray(cols["is_mem"])
+    regbits, flags, outcome, mem = _per_instruction_device(
+        jnp.asarray(cols["opcode"]),
+        jnp.asarray(cols["dst"]),
+        jnp.asarray(cols["src1"]),
+        jnp.asarray(cols["src2"]),
+        is_branch,
+        jnp.asarray(cols["taken"]),
+        is_mem,
+        jnp.asarray(cols["is_store"]),
+    )
+    brhist = branch_history_scan(
+        cols["bucket"],
+        outcome,
+        n_buckets=cfg.n_buckets,
+        n_queue=cfg.n_queue,
+        chunk=chunk,
+        interpret=interpret,
+    )
+    deltas = memdist_delta_scan(
+        cols["addr"],
+        mem,
+        n_mem=cfg.n_mem,
+        chunk=chunk,
+        interpret=interpret,
+    )
+    memdist = signed_log_device(deltas)  # eager: keeps NumPy bit-equality
+    return {
+        "opcode": jnp.asarray(cols["opcode"], jnp.int32),
+        "regbits": regbits,
+        "flags": flags,
+        "brhist": brhist,
+        "memdist": memdist,
+        "is_branch": is_branch,
+        "is_mem": is_mem,
+    }
+
+
+def extract_features_device(
+    trace: np.ndarray,
+    cfg: FeatureConfig = FeatureConfig(),
+    with_labels: bool = True,
+    *,
+    chunk: int = DEFAULT_CHUNK,
+    interpret: Optional[bool] = None,
+) -> FeatureSet:
+    """Drop-in twin of ``core.features.extract_features`` backed by the
+    Pallas kernels; raises ValueError when addresses exceed the int32-exact
+    window (use the NumPy extractor there)."""
+    cols = trace_columns(trace, cfg)
+    if cols is None:
+        raise ValueError(
+            f"trace addresses exceed |addr| < 2^30 (= {ADDR_EXACT_LIMIT}); "
+            "int32 device deltas would be inexact — use extract_features"
+        )
+    arrays = device_feature_arrays(cols, cfg, chunk=chunk, interpret=interpret)
+    return FeatureSet(
+        opcode=np.asarray(arrays["opcode"]),
+        regbits=np.asarray(arrays["regbits"]),
+        flags=np.asarray(arrays["flags"]),
+        brhist=np.asarray(arrays["brhist"]),
+        memdist=np.asarray(arrays["memdist"]),
+        labels=_features._labels(trace, with_labels),
+    )

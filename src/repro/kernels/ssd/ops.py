@@ -6,13 +6,10 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from ...compat import on_tpu
 from .kernel import ssd_pallas
 
 __all__ = ["ssd_scan"]
-
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
 
 
 @functools.partial(jax.jit, static_argnames=("chunk",))
@@ -26,4 +23,4 @@ def ssd_scan(
     chunk: int = 256,
 ) -> jnp.ndarray:
     """Chunked SSD scan: xh (B,S,H,P), dt (B,S,H), A (H,), B/C (B,S,G,N)."""
-    return ssd_pallas(xh, dt, A, Bm, Cm, chunk=chunk, interpret=not _on_tpu())
+    return ssd_pallas(xh, dt, A, Bm, Cm, chunk=chunk, interpret=not on_tpu())

@@ -168,6 +168,116 @@ def test_engine_sharded_path_matches(params, trace):
     np.testing.assert_allclose(b.fetch_lat, legacy.fetch_lat, rtol=1e-5, atol=1e-5)
 
 
+def test_engine_feature_backends_bitwise_identical(params, trace):
+    """The "pallas" backend must reproduce the "numpy" backend exactly:
+    same FeatureSet bits in, same jitted step, same metrics out."""
+    from repro.kernels.features.ops import device_feature_arrays, trace_columns
+
+    cols = trace_columns(trace, FCFG)
+    assert cols is not None
+    dev = device_feature_arrays(cols, FCFG, chunk=256)
+    host = extract_features(trace, FCFG, with_labels=False)
+    for k in ("opcode", "regbits", "flags", "brhist", "memdist"):
+        np.testing.assert_array_equal(np.asarray(dev[k]), getattr(host, k), err_msg=k)
+
+    e_np = StreamingEngine(params, CFG, EngineConfig(batch_size=13, collect=True))
+    e_pl = StreamingEngine(
+        params,
+        CFG,
+        EngineConfig(
+            batch_size=13, collect=True, feature_backend="pallas", feature_chunk=256
+        ),
+    )
+    a = e_np.simulate(trace)
+    b = e_pl.simulate(trace)
+    assert a.num_instructions == b.num_instructions
+    assert a.cpi == b.cpi
+    assert a.total_cycles == b.total_cycles
+    assert a.branch_mpki == b.branch_mpki
+    assert a.l1d_mpki == b.l1d_mpki
+    np.testing.assert_array_equal(a.fetch_lat, b.fetch_lat)
+    np.testing.assert_array_equal(a.exec_lat, b.exec_lat)
+    np.testing.assert_array_equal(a.mispred_prob, b.mispred_prob)
+    np.testing.assert_array_equal(a.dlevel, b.dlevel)
+
+
+def test_engine_backends_share_compiled_step(params, trace):
+    """feature_backend is not part of the step-cache key: a pallas engine
+    created after a numpy one reuses the same executable (and vice versa)."""
+    e_np = StreamingEngine(params, CFG, EngineConfig(batch_size=11))
+    e_pl = StreamingEngine(
+        params, CFG, EngineConfig(batch_size=11, feature_backend="pallas")
+    )
+    e_np.simulate(trace)
+    e_pl.simulate(trace)
+    assert e_np.num_compiles == 1
+    assert e_pl.num_compiles == 1  # same shared _CachedStep entry
+
+
+def test_engine_pallas_short_and_ragged_traces(params):
+    for n in (9, 17, 18, 13 * 17 + 5):
+        ft = run_functional(get_benchmark("dee"), n)
+        a = simulate_trace(params, ft, CFG, batch_size=13)
+        b = simulate_trace(params, ft, CFG, batch_size=13, feature_backend="pallas")
+        assert a.num_instructions == b.num_instructions
+        assert a.cpi == b.cpi, n
+        assert a.branch_mpki == b.branch_mpki
+
+
+def test_engine_pallas_wide_address_fallback(params, trace):
+    """Addresses outside the int32-exact window fall back to the NumPy
+    extractor — metrics must still match the numpy backend exactly."""
+    t = trace.copy()
+    t["addr"][::7] = 2**40
+    a = simulate_trace(params, t, CFG, batch_size=16)
+    b = simulate_trace(params, t, CFG, batch_size=16, feature_backend="pallas")
+    assert a.cpi == b.cpi
+    assert a.l1d_mpki == b.l1d_mpki
+
+
+def test_engine_pallas_sharded_matches(params, trace):
+    mesh = jax.make_mesh((1,), ("data",))
+    plain = StreamingEngine(params, CFG, EngineConfig(batch_size=16))
+    sharded = StreamingEngine(
+        params,
+        CFG,
+        EngineConfig(batch_size=16, mesh=mesh, feature_backend="pallas"),
+    )
+    a = plain.simulate(trace)
+    b = sharded.simulate(trace)
+    assert np.isclose(a.cpi, b.cpi, rtol=1e-6)
+    assert a.branch_mpki == b.branch_mpki
+    assert a.l1d_mpki == b.l1d_mpki
+
+
+def test_engine_rejects_unknown_feature_backend(params):
+    with pytest.raises(ValueError):
+        StreamingEngine(params, CFG, EngineConfig(feature_backend="cuda"))
+    with pytest.raises(ValueError):
+        StreamingEngine(
+            params, CFG, EngineConfig(feature_backend="pallas", feature_chunk=0)
+        )
+
+
+def test_feature_ops_importable_first():
+    """repro.kernels.features.ops must be importable as the FIRST repro
+    import (regression: a module-level ops import in engine.runner closed
+    an import cycle through the repro.core package init)."""
+    import os
+    import subprocess
+    import sys
+
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    env["JAX_PLATFORMS"] = "cpu"
+    p = subprocess.run(
+        [sys.executable, "-c",
+         "import repro.kernels.features.ops as o; print(o.ADDR_EXACT_LIMIT)"],
+        capture_output=True, text=True, timeout=120, env=env,
+    )
+    assert p.returncode == 0, p.stderr[-2000:]
+
+
 def test_engine_rejects_mesh_without_data_axis(params):
     mesh = jax.make_mesh((1,), ("model",))
     with pytest.raises(ValueError):

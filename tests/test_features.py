@@ -91,6 +91,28 @@ def test_nonbranch_nonmem_rows_zero():
     assert not fs.memdist[0].any()
 
 
+def test_feature_backends_bitwise_identical_on_unit_traces():
+    """NumPy and Pallas backends agree bit for bit on the hand-built unit
+    traces above (collisions, empty queues, signed deltas included)."""
+    from repro.kernels.features.ops import extract_features_device
+
+    cfg = FeatureConfig(n_buckets=2, n_queue=3, n_mem=2)
+    rows = [
+        {"opcode": int(Op.BEQ), "pc": 0, "is_branch": True, "taken": True},
+        {"opcode": int(Op.BEQ), "pc": 8, "is_branch": True, "taken": False},
+        {"opcode": int(Op.LOAD), "is_mem": True, "addr": 100},
+        {"opcode": int(Op.LOAD), "is_mem": True, "addr": 108},
+        {"opcode": int(Op.STORE), "is_mem": True, "is_store": True, "addr": 100},
+        {"opcode": int(Op.FMUL), "dst": 3, "src1": 5, "src2": 7},
+        {"opcode": int(Op.BEQ), "pc": 16, "is_branch": True, "taken": True},
+    ]
+    t = _mk_trace(rows)
+    host = extract_features(t, cfg, with_labels=False)
+    dev = extract_features_device(t, cfg, with_labels=False, chunk=4)
+    for f in ("opcode", "regbits", "flags", "brhist", "memdist"):
+        np.testing.assert_array_equal(getattr(host, f), getattr(dev, f), err_msg=f)
+
+
 def test_labels_from_adjusted_trace(small_tao_setup):
     _, ds, al, _ = small_tao_setup
     assert ds.labels is not None
