@@ -12,7 +12,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import simulate_trace, train_tao
 from repro.core.align import build_adjusted_trace
 from repro.core.simnet import (
     SimNetConfig,
@@ -35,6 +34,7 @@ from .common import (
     adjusted_dataset,
     emit,
     ground_truth,
+    session,
     tao_config,
 )
 
@@ -91,12 +91,12 @@ def run() -> None:
     for uarch in (UARCH_A, UARCH_B, UARCH_C):
         ds = adjusted_dataset(uarch, TRAIN_BENCHES)
         with Timer() as t_tao:
-            res = train_tao(cfg, ds, epochs=EPOCHS, batch_size=16, lr=1e-3)
+            model = session().train(dataset=ds, epochs=EPOCHS, batch_size=16, lr=1e-3)
         with Timer() as t_sn:
             sn_cfg, sn_params = _train_simnet(uarch, cfg.window)
         for bench in TEST_BENCHES:
             ft, truth = ground_truth(uarch, bench)
-            sim = simulate_trace(res.params, ft, cfg)
+            sim = model.simulate(ft, collect=True)
             tao_err = sim.error_vs(truth["cpi"])
             sn_cpi = _simnet_cpi(sn_cfg, sn_params, uarch, bench)
             sn_err = abs(sn_cpi - truth["cpi"]) / truth["cpi"] * 100

@@ -2,9 +2,11 @@
 and branch-history table (N_b, N_q)."""
 from __future__ import annotations
 
+import dataclasses
+
 import numpy as np
 
-from repro.core import FeatureConfig, simulate_trace, train_tao
+from repro.core import FeatureConfig
 from repro.uarch import UARCH_A
 
 from .common import (
@@ -14,20 +16,21 @@ from .common import (
     adjusted_dataset,
     emit,
     ground_truth,
+    session_for,
     tao_config,
 )
 
 
 def _error_with_features(fcfg: FeatureConfig) -> float:
-    import dataclasses
-
     cfg = dataclasses.replace(tao_config(), features=fcfg)
     ds = adjusted_dataset(UARCH_A, TRAIN_BENCHES[:2], features=fcfg)
-    res = train_tao(cfg, ds, epochs=max(3, EPOCHS // 2), batch_size=16, lr=1e-3)
+    model = session_for(cfg).train(
+        dataset=ds, epochs=max(3, EPOCHS // 2), batch_size=16, lr=1e-3
+    )
     errs = []
     for bench in TEST_BENCHES[:2]:
         ft, truth = ground_truth(UARCH_A, bench)
-        sim = simulate_trace(res.params, ft, cfg)
+        sim = model.simulate(ft)
         errs.append(sim.error_vs(truth["cpi"]))
     return float(np.mean(errs))
 

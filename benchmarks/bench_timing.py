@@ -16,21 +16,20 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core import extract_features, train_tao
+from repro.core import extract_features
 from repro.core.simulate import simulate_trace_legacy
-from repro.engine import EngineConfig, StreamingEngine
 from repro.kernels.features.ops import extract_features_device
 from repro.uarch import UARCH_A, UARCH_B, UARCH_C, get_benchmark, run_detailed, run_functional
 from repro.uarch.isa import KIND_NOP, KIND_REAL, KIND_SQUASHED
 
 from .common import (
     EPOCHS,
-    TEST_BENCHES,
     TRACE_LEN,
     TRAIN_BENCHES,
     Timer,
     adjusted_dataset,
     emit,
+    session,
     tao_config,
 )
 
@@ -69,22 +68,25 @@ def run() -> None:
 
     # --- Table 4: overall time, Tao vs SimNet ---------------------------
     cfg = tao_config()
+    sess = session()
     # Tao: functional trace (once) + transfer-style short training + sim
     prog = get_benchmark("dee")
     with Timer() as t_func:
         ft = run_functional(prog, TRACE_LEN)
     ds = adjusted_dataset(UARCH_A, TRAIN_BENCHES)
     with Timer() as t_train_short:
-        res = train_tao(cfg, ds.subsample(max(16, len(ds) // 4)), epochs=max(2, EPOCHS // 3),
-                        batch_size=16, lr=1e-3)
-    engine = StreamingEngine(res.params, cfg, EngineConfig(batch_size=64))
+        model = sess.train(
+            dataset=ds.subsample(max(16, len(ds) // 4)),
+            epochs=max(2, EPOCHS // 3), batch_size=16, lr=1e-3,
+        )
+    engine = model.engine(batch_size=64)
     with Timer() as t_sim:
-        ft_test = run_functional(get_benchmark("mcf"), TRACE_LEN // 2)
+        ft_test = sess.capture("mcf", TRACE_LEN // 2).functional
         sim = engine.simulate(ft_test)
     tao_total = t_func.seconds + t_train_short.seconds + t_sim.seconds
 
     # --- engine vs pre-refactor simulate loop (the 18.06x claim's lever) --
-    legacy = simulate_trace_legacy(res.params, ft_test, cfg)
+    legacy = simulate_trace_legacy(model.params, ft_test, cfg)
     sim2 = engine.simulate(ft_test)  # warm engine: steady-state throughput
     assert engine.num_compiles == 1, engine.num_compiles
     cpi_err = abs(sim2.cpi - legacy.cpi) / max(legacy.cpi, 1e-9)
@@ -107,9 +109,7 @@ def run() -> None:
     host_mips = n_ft / 1e6 / t_host.seconds
     dev_mips = n_ft / 1e6 / t_dev.seconds
     # fused engine: features computed on device inside the streaming step
-    fused = StreamingEngine(
-        res.params, cfg, EngineConfig(batch_size=64, feature_backend="pallas")
-    )
+    fused = model.engine(batch_size=64, feature_backend="pallas")
     fused.simulate(ft_test)       # warm-up
     sim_fused = fused.simulate(ft_test)
     # host->device traffic: the numpy backend ships the materialized
@@ -131,7 +131,7 @@ def run() -> None:
     with Timer() as t_det:
         run_detailed(prog, ft, UARCH_B)
     with Timer() as t_train_full:
-        train_tao(cfg, ds, epochs=EPOCHS, batch_size=16, lr=1e-3)
+        sess.train(dataset=ds, epochs=EPOCHS, batch_size=16, lr=1e-3)
     simnet_total = t_det.seconds + t_train_full.seconds + t_sim.seconds
     emit(
         "table4/overall",

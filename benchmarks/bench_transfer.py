@@ -1,29 +1,15 @@
 """Fig. 13 + Fig. 14 + Table 5 + Table 6 — microarchitecture-agnostic
 embeddings: multi-arch training-method comparison, training-pair selection,
-and transfer-learning cost.
+and transfer-learning cost.  Driven through the ``repro.api`` facade
+(``Session.train_joint`` / ``JointModel.transfer`` / ``Session.train``).
 """
 from __future__ import annotations
 
-import time
-
-import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (
-    init_multiarch,
-    make_joint_step,
-    measure_design_metrics,
-    select_pair_euclidean,
-    select_pair_mahalanobis,
-    select_random,
-    simulate_trace,
-    train_tao,
-    transfer_finetune,
-)
-from repro.core.multiarch import eval_loss
-from repro.train.optim import AdamWConfig, adamw_init
-from repro.uarch import UARCH_A, UARCH_B, UARCH_C, sample_design_space
+from repro.api import DesignSpace
+from repro.uarch import UARCH_A, UARCH_B, UARCH_C
 
 from .common import (
     EPOCHS,
@@ -33,15 +19,8 @@ from .common import (
     adjusted_dataset,
     emit,
     ground_truth,
-    tao_config,
+    session,
 )
-
-
-def _joint_batches(uarch, rng, batch_size=16):
-    ds = adjusted_dataset(uarch, TRAIN_BENCHES[:2])
-    for b in ds.batches(batch_size, rng=rng):
-        b["labels"] = {k: jnp.asarray(v) for k, v in b.pop("labels").items()}
-        yield b
 
 
 def _eval_batches(uarch, n=6):
@@ -55,35 +34,29 @@ def _eval_batches(uarch, n=6):
     return out
 
 
+def _joint(method: str, ua, ub, *, epochs, seed=0):
+    sess = session()
+    return sess.train_joint(
+        ua, ub,
+        datasets=(
+            adjusted_dataset(ua, TRAIN_BENCHES[:2]),
+            adjusted_dataset(ub, TRAIN_BENCHES[:2]),
+        ),
+        method=method, epochs=epochs, batch_size=16, lr=1e-3, seed=seed,
+    )
+
+
 def run_fig13() -> None:
     """Convergence of the shared-embedding training methods (paper ordering:
     Tao < GradNorm < Granite test error; Tao-w/o-adapt between)."""
-    cfg = tao_config()
     eval_a = _eval_batches(UARCH_A)
     eval_b = _eval_batches(UARCH_B)
     finals = {}
     for method in ("granite", "gradnorm", "tao_no_adapt", "tao"):
-        params = init_multiarch(jax.random.PRNGKey(0), cfg)
-        opt = adamw_init(params)
-        step = make_joint_step(cfg, AdamWConfig(lr=1e-3), method=method)
-        w = jnp.ones((2,))
-        il = None
-        rng = np.random.default_rng(0)
         with Timer() as t:
-            for epoch in range(EPOCHS):
-                for ba, bb in zip(
-                    _joint_batches(UARCH_A, rng), _joint_batches(UARCH_B, rng)
-                ):
-                    params, opt, w, m = step(
-                        params, opt, w,
-                        il if il is not None else jnp.ones((2,)), ba, bb,
-                    )
-                    if il is None:
-                        il = jnp.asarray([float(m["loss_a"]), float(m["loss_b"])])
-        use_adapt = method in ("tao",)
+            joint = _joint(method, UARCH_A, UARCH_B, epochs=EPOCHS)
         te = 0.5 * (
-            eval_loss(params, eval_a, cfg, "A", use_adapt=use_adapt)
-            + eval_loss(params, eval_b, cfg, "B", use_adapt=use_adapt)
+            joint.eval_loss(eval_a, "A") + joint.eval_loss(eval_b, "B")
         )
         finals[method] = te
         emit(f"fig13/{method}", t.seconds * 1e6 / max(1, EPOCHS), f"test_loss={te:.4f}")
@@ -94,35 +67,24 @@ def run_fig13() -> None:
 def run_fig14() -> None:
     """Training-pair selection: Mahalanobis vs Euclidean vs random over a
     sampled design space (paper: MD best, ~6.3% vs 7.5% vs 8.5%)."""
-    designs = sample_design_space(8, seed=42)
-    metrics = measure_design_metrics(designs, TRAIN_BENCHES[:2], instructions=3000)
-    mi, mj = select_pair_mahalanobis(metrics)
-    ei, ej = select_pair_euclidean(metrics)
-    ri, rj = select_random(len(designs), 2, seed=7)
-
-    cfg = tao_config()
+    space = DesignSpace.sample(8, seed=42)
+    mi, mj = space.select_pair(TRAIN_BENCHES[:2], method="mahalanobis",
+                              instructions=3000)
+    ei, ej = space.select_pair(TRAIN_BENCHES[:2], method="euclidean",
+                              instructions=3000)
+    ri, rj = space.select_pair(TRAIN_BENCHES[:2], method="random", seed=7)
 
     def embed_error(i, j) -> float:
-        params = init_multiarch(jax.random.PRNGKey(1), cfg)
-        opt = adamw_init(params)
-        step = make_joint_step(cfg, AdamWConfig(lr=1e-3), method="tao")
-        w = jnp.ones((2,))
-        rng = np.random.default_rng(1)
-        dsa = adjusted_dataset(designs[i], TRAIN_BENCHES[:2])
-        dsb = adjusted_dataset(designs[j], TRAIN_BENCHES[:2])
-        for epoch in range(max(3, EPOCHS // 2)):
-            for ba, bb in zip(dsa.batches(16, rng=rng), dsb.batches(16, rng=rng)):
-                ba["labels"] = {k: jnp.asarray(v) for k, v in ba.pop("labels").items()}
-                bb["labels"] = {k: jnp.asarray(v) for k, v in bb.pop("labels").items()}
-                params, opt, w, m = step(params, opt, w, jnp.ones((2,)), ba, bb)
+        joint = _joint("tao", space[i], space[j],
+                       epochs=max(3, EPOCHS // 2), seed=1)
         # transfer to unseen µArch C with frozen embeddings, measure CPI error
         ds_c = adjusted_dataset(UARCH_C, TRAIN_BENCHES[:1])
-        res = transfer_finetune(cfg, params["embed"], params["A"], ds_c,
-                                epochs=max(2, EPOCHS // 3), batch_size=16, lr=1e-3)
+        model = joint.transfer(ds_c, epochs=max(2, EPOCHS // 3),
+                               batch_size=16, lr=1e-3)
         errs = []
         for bench in TEST_BENCHES[:2]:
             ft, truth = ground_truth(UARCH_C, bench)
-            sim = simulate_trace(res.params, ft, cfg)
+            sim = model.simulate(ft)
             errs.append(sim.error_vs(truth["cpi"]))
         return float(np.mean(errs))
 
@@ -137,34 +99,26 @@ def run_fig14() -> None:
 
 def run_table5() -> None:
     """Transfer-learning training cost to a fixed loss target."""
-    cfg = tao_config()
+    sess = session()
     ds_c = adjusted_dataset(UARCH_C, TRAIN_BENCHES[:2])
     small_c = ds_c.subsample(max(16, len(ds_c) // 5))
 
     # donor + shared embeddings from A/B joint training (reuse quick run)
-    params = init_multiarch(jax.random.PRNGKey(2), cfg)
-    opt = adamw_init(params)
-    step = make_joint_step(cfg, AdamWConfig(lr=1e-3), method="tao")
-    w = jnp.ones((2,))
-    rng = np.random.default_rng(2)
-    for epoch in range(max(3, EPOCHS // 2)):
-        for ba, bb in zip(_joint_batches(UARCH_A, rng), _joint_batches(UARCH_B, rng)):
-            params, opt, w, _ = step(params, opt, w, jnp.ones((2,)), ba, bb)
+    joint = _joint("tao", UARCH_A, UARCH_B, epochs=max(3, EPOCHS // 2), seed=2)
 
     # measure target loss = scratch's achievable loss, then time each regime
     with Timer() as t_scratch:
-        r_scratch = train_tao(cfg, ds_c, epochs=EPOCHS, batch_size=16, lr=1e-3)
-    target = r_scratch.losses[-1] * 1.1
+        scratch = sess.train(dataset=ds_c, epochs=EPOCHS, batch_size=16, lr=1e-3)
+    target = scratch.losses[-1] * 1.1
 
     with Timer() as t_direct:
-        r_direct = train_tao(
-            cfg, ds_c, epochs=EPOCHS, batch_size=16, lr=1e-3,
-            init_params=r_scratch.params, target_loss=target,
+        direct = sess.train(
+            dataset=ds_c, epochs=EPOCHS, batch_size=16, lr=1e-3,
+            init=scratch, target_loss=target,
         )
     with Timer() as t_shared:
-        r_shared = transfer_finetune(
-            cfg, params["embed"], params["A"], small_c,
-            epochs=EPOCHS, batch_size=16, lr=1e-3, target_loss=target,
+        shared = joint.transfer(
+            small_c, epochs=EPOCHS, batch_size=16, lr=1e-3, target_loss=target,
         )
     emit(
         "table5/training_time",
@@ -172,15 +126,19 @@ def run_table5() -> None:
         f"scratch_s={t_scratch.seconds:.1f};direct_ft_s={t_direct.seconds:.1f};"
         f"shared+ft_s={t_shared.seconds:.1f};"
         f"speedup={t_scratch.seconds/max(t_shared.seconds,1e-9):.1f}x(paper:29.5x);"
-        f"losses={r_scratch.losses[-1]:.3f}/{r_direct.losses[-1]:.3f}/{r_shared.losses[-1]:.3f}",
+        f"losses={scratch.losses[-1]:.3f}/{direct.losses[-1]:.3f}/{shared.losses[-1]:.3f}",
     )
 
 
 def run_table6() -> None:
     """One-time embedding-construction overhead decomposition."""
+    from repro.core import measure_design_metrics, select_pair_mahalanobis
+
     with Timer() as t_sim:
-        designs = sample_design_space(8, seed=11)
-        metrics = measure_design_metrics(designs, TRAIN_BENCHES[:1], instructions=2000)
+        space = DesignSpace.sample(8, seed=11)
+        metrics = measure_design_metrics(
+            space.designs, TRAIN_BENCHES[:1], instructions=2000
+        )
     with Timer() as t_sel:
         select_pair_mahalanobis(metrics)
     emit(

@@ -7,24 +7,15 @@ A100 wall-clock.  Emits ``name,us_per_call,derived`` CSV rows.
 """
 from __future__ import annotations
 
+import dataclasses
 import os
 import time
 from typing import Dict, List
 
-import numpy as np
-
-from repro.core import FeatureConfig, TaoConfig, build_windows, extract_features
-from repro.core.align import build_adjusted_trace
-from repro.core.dataset import WindowDataset, concat_datasets
-from repro.uarch import (
-    UARCH_A,
-    UARCH_B,
-    UARCH_C,
-    MicroArchConfig,
-    get_benchmark,
-    run_detailed,
-    run_functional,
-)
+from repro.api import Session
+from repro.core import FeatureConfig, TaoConfig
+from repro.core.dataset import WindowDataset
+from repro.uarch import MicroArchConfig
 
 SCALE = os.environ.get("BENCH_SCALE", "small")
 
@@ -77,35 +68,41 @@ def tao_config() -> TaoConfig:
     )
 
 
-_ds_cache: Dict = {}
+# Benchmarks drive everything through the repro.api facade.  One Session
+# per TaoConfig (the session caches captured traces and adjusted datasets).
+_sessions: Dict[TaoConfig, Session] = {}
+
+
+def session_for(cfg: TaoConfig) -> Session:
+    s = _sessions.get(cfg)
+    if s is None:
+        s = Session(cfg)
+        _sessions[cfg] = s
+    return s
+
+
+def session() -> Session:
+    """The bench-scale default Session (config from ``tao_config()``)."""
+    return session_for(tao_config())
 
 
 def adjusted_dataset(uarch: MicroArchConfig, benches, n=None, features=FEATURES,
                      window=None) -> WindowDataset:
-    """Trace -> §4.1 adjusted trace -> windows, cached."""
+    """Trace -> §4.1 adjusted trace -> windows (Session-cached)."""
     n = n or TRACE_LEN
-    window = window or WINDOW
-    key = (uarch.key(), tuple(benches), n, features, window)
-    if key in _ds_cache:
-        return _ds_cache[key]
-    parts = []
-    for b in benches:
-        prog = get_benchmark(b)
-        ft = run_functional(prog, n)
-        det, _ = run_detailed(prog, ft, uarch)
-        al = build_adjusted_trace(det)
-        parts.append(build_windows(extract_features(al.adjusted, features), window))
-    ds = concat_datasets(parts)
-    _ds_cache[key] = ds
-    return ds
+    cfg = tao_config()
+    if features != cfg.features or (window is not None and window != cfg.window):
+        cfg = dataclasses.replace(
+            cfg, features=features, window=window or cfg.window
+        )
+    s = session_for(cfg)
+    return s.dataset(uarch, [s.capture(b, n) for b in benches])
 
 
 def ground_truth(uarch: MicroArchConfig, bench: str, n=None):
-    n = n or TEST_LEN
-    prog = get_benchmark(bench)
-    ft = run_functional(prog, n)
-    det, summ = run_detailed(prog, ft, uarch)
-    return ft, summ
+    s = session()
+    tr = s.capture(bench, n or TEST_LEN)
+    return tr.functional, s.ground_truth(uarch, tr)
 
 
 class Timer:

@@ -5,14 +5,17 @@
   bench_sweeps     Fig 12    feature-parameter sweeps (N_m, N_b, N_q)
   bench_transfer   Fig 13/14 + Table 5/6  agnostic embeddings + transfer
   bench_dse        Fig 15    design-space exploration
+                   + "sweep": async Session.sweep scheduler stats
+                     (traces/s, compiles, queue occupancy)
   bench_kernels    (systems) chunked attention / SSD formulations
 
 Prints ``name,us_per_call,derived`` CSV.  BENCH_SCALE=tiny|small|full
 controls trace lengths / epochs (CPU container defaults to small; CI smoke
 uses tiny).  Run a subset: ``python -m benchmarks.run --only fig9,table4``.
 ``--json PATH`` additionally writes the rows as structured JSON (the CI
-bench-smoke job uploads ``BENCH_timing.json`` as an artifact so the perf
-trajectory is tracked per PR).
+bench-smoke job uploads ``BENCH_timing.json`` and ``BENCH_dse.json`` as
+artifacts so the perf trajectory — including the async sweep scheduler's
+numbers — is tracked per PR).
 """
 from __future__ import annotations
 
@@ -38,6 +41,7 @@ SUITES = {
     "fig12": bench_sweeps.run,
     "fig13_14_t5": bench_transfer.run,
     "fig15": bench_dse.run,
+    "sweep": bench_dse.run_sweep,
     "kernels": bench_kernels.run,
 }
 

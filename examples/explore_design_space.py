@@ -1,54 +1,62 @@
-"""Design-space exploration with a trained Tao model (paper §5.6 / Fig 15).
+"""Design-space exploration with the `repro.api` facade (paper §5.6 / Fig 15).
 
 Sweeps L1-D cache sizes and branch predictors, comparing Tao's predicted
 MPKI curves against detailed simulation — the use case DL-based simulators
 exist for: evaluating design points ~10-1000x faster than detailed sim.
+The L1D sweep runs through ``Session.sweep``, the async multi-trace
+scheduler that double-buffers every (design, trace) pair through ONE
+compiled step executable.
 
 Run:  PYTHONPATH=src python examples/explore_design_space.py
 """
-import dataclasses
 import time
 
-import numpy as np
-
-from repro.core import FeatureConfig, TaoConfig, build_windows, extract_features, simulate_trace, train_tao
-from repro.core.align import build_adjusted_trace
-from repro.uarch import UARCH_B, get_benchmark, run_detailed, run_functional
+from repro.api import DesignSpace, Session
+from repro.core import FeatureConfig, TaoConfig
+from repro.uarch import UARCH_B
 
 N = 12_000
-fcfg = FeatureConfig(n_buckets=256, n_queue=8, n_mem=16)
 cfg = TaoConfig(window=33, d_model=64, n_heads=4, n_layers=2, d_ff=128,
-                d_cat=32, features=fcfg)
+                d_cat=32, features=FeatureConfig(n_buckets=256, n_queue=8, n_mem=16))
+s = Session(cfg)
+train = s.capture("dee", N)
 
 
-def tao_for(uarch):
-    prog = get_benchmark("dee")
-    ft = run_functional(prog, N)
-    det, _ = run_detailed(prog, ft, uarch)
-    ds = build_windows(extract_features(build_adjusted_trace(det).adjusted, fcfg), cfg.window)
-    return train_tao(cfg, ds, epochs=4, batch_size=16, lr=1e-3).params
+def model_for(uarch):
+    return s.train(uarch, [train], epochs=4, batch_size=16, lr=1e-3,
+                   name=uarch.name)
 
 
-print(f"{'design':24s} {'truth L1D MPKI':>15s} {'tao L1D MPKI':>13s} {'sim speed':>10s}")
-for size_kb in (16, 32, 64, 128):
-    ua = dataclasses.replace(UARCH_B, l1d_size=size_kb * 1024, name=f"L1D-{size_kb}KB")
-    params = tao_for(ua)
-    prog = get_benchmark("mcf")
-    ft = run_functional(prog, N // 2)
-    t0 = time.time()
-    _, truth = run_detailed(prog, ft, ua)
-    t_detailed = time.time() - t0
-    sim = simulate_trace(params, ft, cfg)
-    print(f"{ua.name:24s} {truth['l1d_mpki']:15.2f} {sim.l1d_mpki:13.2f} "
-          f"{t_detailed/ max(sim.seconds,1e-9):9.1f}x")
+# --- L1D size sweep, all design points through one async sweep -----------
+space = DesignSpace.vary(UARCH_B, "l1d_size",
+                         [kb * 1024 for kb in (16, 32, 64, 128)],
+                         name_fmt="L1D-{value}B")
+models = {ua.name: model_for(ua) for ua in space}
+test = s.capture("mcf", N // 2)
 
+t0 = time.time()
+t_detailed = {ua.name: s.ground_truth(ua, test) for ua in space}
+detailed_s = time.time() - t0
+
+report = s.sweep(models, [test])
+print(f"{'design':24s} {'truth L1D MPKI':>15s} {'tao L1D MPKI':>13s}")
+for ua in space:
+    sim = report.results[f"{ua.name}/{test.name}"]
+    print(f"{ua.name:24s} {t_detailed[ua.name]['l1d_mpki']:15.2f} "
+          f"{sim.l1d_mpki:13.2f}")
+print(f"sweep: {report.num_traces} design-point sims in {report.seconds:.2f}s "
+      f"({report.traces_per_s:.1f} traces/s, {report.num_compiles} compile) "
+      f"vs {detailed_s:.2f}s detailed sim -> "
+      f"{detailed_s / max(report.seconds, 1e-9):.1f}x")
+
+# --- branch predictor sweep ----------------------------------------------
 print()
 print(f"{'predictor':24s} {'truth br MPKI':>15s} {'tao br MPKI':>13s}")
+test_br = s.capture("xal", N // 2)
 for bp in ("Local", "BiMode", "Tournament", "TAGE_SC_L"):
-    ua = dataclasses.replace(UARCH_B, branch_predictor=bp, name=f"BP-{bp}")
-    params = tao_for(ua)
-    prog = get_benchmark("xal")
-    ft = run_functional(prog, N // 2)
-    _, truth = run_detailed(prog, ft, ua)
-    sim = simulate_trace(params, ft, cfg)
+    ua = DesignSpace.vary(UARCH_B, "branch_predictor", [bp],
+                          name_fmt="BP-{value}")[0]
+    model = model_for(ua)
+    truth = s.ground_truth(ua, test_br)
+    sim = model.simulate(test_br)
     print(f"{ua.name:24s} {truth['branch_mpki']:15.2f} {sim.branch_mpki:13.2f}")

@@ -1,62 +1,51 @@
-"""Quickstart: the Tao workflow end to end in ~2 minutes on CPU.
+"""Quickstart: the Tao workflow end to end in ~2 minutes on CPU, written
+against the `repro.api` Session facade.
 
-1. generate functional + detailed traces for a benchmark on µArch A
-   (repro.uarch = the gem5 stand-in)
-2. build the §4.1 adjusted training dataset (squash/nop re-attribution)
-3. train a small multi-metric Tao model (§4.2)
-4. simulate an UNSEEN benchmark from its functional trace alone and compare
+1. capture a reusable functional trace per benchmark (repro.uarch = the
+   gem5 stand-in; traces are µarch-agnostic, §4.1)
+2. build the adjusted training dataset for µArch A and train a small
+   multi-metric Tao model (§4.2)
+3. simulate an UNSEEN benchmark from its functional trace alone and compare
    CPI / branch-MPKI / L1D-MPKI against the detailed simulator
 
 Run:  PYTHONPATH=src python examples/quickstart.py
+      (N=2000 EPOCHS=2 for the CI smoke run)
 """
-import numpy as np
+import os
 
-from repro.core import (
-    FeatureConfig,
-    TaoConfig,
-    build_windows,
-    extract_features,
-    train_tao,
-)
-from repro.core.align import build_adjusted_trace, verify_alignment
-from repro.core.dataset import concat_datasets
-from repro.engine import EngineConfig, StreamingEngine
-from repro.uarch import UARCH_A, get_benchmark, run_detailed, run_functional
+from repro.api import Session
+from repro.core import FeatureConfig, TaoConfig
+from repro.uarch import UARCH_A
 
-N = 20_000
+N = int(os.environ.get("N", "20000"))
+EPOCHS = int(os.environ.get("EPOCHS", "8"))
 
-print("== 1. trace generation (gem5 stand-in) ==")
-datasets = []
-fcfg = FeatureConfig(n_buckets=256, n_queue=8, n_mem=16)
 cfg = TaoConfig(window=33, d_model=64, n_heads=4, n_layers=2, d_ff=128,
-                d_cat=32, features=fcfg)
-for bench in ("dee", "lee"):
-    prog = get_benchmark(bench)
-    ft = run_functional(prog, N)
-    det, summ = run_detailed(prog, ft, UARCH_A)
-    al = build_adjusted_trace(det)
-    v = verify_alignment(al, ft)
-    print(f"  {bench}: cpi={summ['cpi']:.3f} squashed={al.num_squashed} "
-          f"nops={al.num_nops} cycles_match={v['cycles_match']}")
-    datasets.append(build_windows(extract_features(al.adjusted, fcfg), cfg.window))
+                d_cat=32, features=FeatureConfig(n_buckets=256, n_queue=8, n_mem=16))
+s = Session(cfg)
 
-print("== 2/3. dataset construction + training ==")
-ds = concat_datasets(datasets)
-res = train_tao(cfg, ds, epochs=8, batch_size=16, lr=1e-3)
-print(f"  {len(ds)} windows, loss {res.losses[0]:.3f} -> {res.losses[-1]:.3f} "
-      f"in {res.seconds:.0f}s")
+print("== 1. capture reusable functional traces (gem5 stand-in) ==")
+train_traces = [s.capture(b, N) for b in ("dee", "lee")]
+for tr in train_traces:
+    truth = s.ground_truth(UARCH_A, tr)
+    print(f"  {tr.name}: {tr.num_instructions} instrs, "
+          f"detailed cpi={truth['cpi']:.3f}")
 
-print("== 4. simulate an unseen benchmark (functional trace only) ==")
-prog = get_benchmark("mcf")
-ft = run_functional(prog, N // 2)
-_, truth = run_detailed(prog, ft, UARCH_A)
-# the streaming engine compiles its forward step once and keeps the CPI /
-# MPKI accumulators on device; per-instruction arrays stay there too unless
-# EngineConfig(collect=True) asks for them
-engine = StreamingEngine(res.params, cfg, EngineConfig(batch_size=64))
-sim = engine.simulate(ft)
+print("== 2. dataset construction + training (µArch A) ==")
+model = s.train(UARCH_A, train_traces, epochs=EPOCHS, batch_size=16, lr=1e-3)
+print(f"  loss {model.losses[0]:.3f} -> {model.losses[-1]:.3f} "
+      f"in {model.seconds:.0f}s ({model.steps} steps)")
+
+print("== 3. simulate an unseen benchmark (functional trace only) ==")
+test = s.capture("mcf", N // 2)
+truth = s.ground_truth(UARCH_A, test)
+# the engine under model.simulate compiles its step once and keeps the
+# metric accumulators on device; pass metrics=... for plug-in MetricSpecs
+# and collect=True for per-instruction arrays (phase plots)
+sim = model.simulate(test)
 print(f"  CPI:        truth={truth['cpi']:.3f}  tao={sim.cpi:.3f} "
       f"(err {sim.error_vs(truth['cpi']):.1f}%)")
 print(f"  brMPKI:     truth={truth['branch_mpki']:.1f}  tao={sim.branch_mpki:.1f}")
 print(f"  L1D MPKI:   truth={truth['l1d_mpki']:.1f}  tao={sim.l1d_mpki:.1f}")
+print(f"  metrics:    {sim.available_metrics}")
 print(f"  throughput: {sim.mips*1000:.0f} K instructions/s on CPU")

@@ -1,5 +1,5 @@
-"""End-to-end driver: the paper's FULL workflow, including the transfer-
-learning path that delivers the 18x speedup claim.
+"""End-to-end driver: the paper's FULL workflow on the `repro.api` facade,
+including the transfer-learning path that delivers the 18x speedup claim.
 
   Phase 1  design-space sampling + Mahalanobis pair selection   (§4.3)
   Phase 2  joint shared-embedding training on the selected pair (Alg. 1)
@@ -16,28 +16,10 @@ Run:  PYTHONPATH=src python examples/train_tao_e2e.py
 import os
 import time
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
+from repro.api import DesignSpace, Session
 from repro.ckpt import CheckpointManager
-from repro.core import (
-    FeatureConfig,
-    TaoConfig,
-    build_windows,
-    extract_features,
-    init_multiarch,
-    make_joint_step,
-    measure_design_metrics,
-    select_pair_mahalanobis,
-    simulate_trace,
-    train_tao,
-    transfer_finetune,
-)
-from repro.core.align import build_adjusted_trace
-from repro.core.dataset import concat_datasets
-from repro.train.optim import AdamWConfig, adamw_init
-from repro.uarch import UARCH_C, get_benchmark, run_detailed, run_functional, sample_design_space
+from repro.core import FeatureConfig, TaoConfig
+from repro.uarch import UARCH_C
 
 FULL = os.environ.get("FULL", "0") == "1"
 N = 40_000 if FULL else 15_000
@@ -46,79 +28,55 @@ TRAIN_BENCHES = ("dee", "rom", "nab", "lee") if FULL else ("dee", "lee")
 
 if FULL:
     from repro.configs.tao import CONFIG as cfg
-    fcfg = cfg.features
 else:
-    fcfg = FeatureConfig(n_buckets=256, n_queue=8, n_mem=16)
     cfg = TaoConfig(window=33, d_model=64, n_heads=4, n_layers=2, d_ff=128,
-                    d_cat=32, features=fcfg)
+                    d_cat=32,
+                    features=FeatureConfig(n_buckets=256, n_queue=8, n_mem=16))
 
-
-def dataset_for(uarch, benches, n=N):
-    parts = []
-    for b in benches:
-        prog = get_benchmark(b)
-        ft = run_functional(prog, n)
-        det, _ = run_detailed(prog, ft, uarch)
-        parts.append(
-            build_windows(extract_features(build_adjusted_trace(det).adjusted, fcfg),
-                          cfg.window)
-        )
-    return concat_datasets(parts)
-
+s = Session(cfg)
+traces = [s.capture(b, N) for b in TRAIN_BENCHES]
 
 print("== Phase 1: design sampling + Mahalanobis selection ==")
-designs = sample_design_space(8, seed=42)
-metrics = measure_design_metrics(designs, list(TRAIN_BENCHES[:1]), instructions=3000)
-i, j = select_pair_mahalanobis(metrics)
-ua, ub = designs[i], designs[j]
+space = DesignSpace.sample(8, seed=42)
+i, j = space.select_pair(list(TRAIN_BENCHES[:1]), instructions=3000)
+ua, ub = space[i], space[j]
 print(f"  selected designs #{i} and #{j} "
       f"(fetch={ua.fetch_width}/{ub.fetch_width}, rob={ua.rob_size}/{ub.rob_size}, "
       f"bp={ua.branch_predictor}/{ub.branch_predictor})")
 
 print("== Phase 2: joint shared-embedding training (Algorithm 1) ==")
-ds_a = dataset_for(ua, TRAIN_BENCHES)
-ds_b = dataset_for(ub, TRAIN_BENCHES)
-params = init_multiarch(jax.random.PRNGKey(0), cfg)
-opt = adamw_init(params)
-step = make_joint_step(cfg, AdamWConfig(lr=1e-3), method="tao")
-w = jnp.ones((2,))
-rng = np.random.default_rng(0)
 mgr = CheckpointManager("/tmp/tao_e2e_ckpt", keep=2)
 t0 = time.time()
-steps = 0
-for epoch in range(EPOCHS):
-    for ba, bb in zip(ds_a.batches(16, rng=rng), ds_b.batches(16, rng=rng)):
-        ba["labels"] = {k: jnp.asarray(v) for k, v in ba.pop("labels").items()}
-        bb["labels"] = {k: jnp.asarray(v) for k, v in bb.pop("labels").items()}
-        params, opt, w, m = step(params, opt, w, jnp.ones((2,)), ba, bb)
-        steps += 1
-    mgr.save(params, steps)
-    print(f"  epoch {epoch}: loss_a={float(m['loss_a']):.3f} "
-          f"loss_b={float(m['loss_b']):.3f} ({steps} steps)")
+# per-epoch checkpoints: keep=2 rotates, so a crash resumes from the
+# latest epoch instead of restarting the whole phase
+joint = s.train_joint(ua, ub, traces, method="tao", epochs=EPOCHS,
+                      batch_size=16, lr=1e-3,
+                      on_epoch=lambda ep, params, steps: mgr.save(params, steps))
 t_joint = time.time() - t0
 mgr.close()
+for epoch, (la, lb) in enumerate(joint.losses):
+    print(f"  epoch {epoch}: loss_a={la:.3f} loss_b={lb:.3f}")
+print(f"  {joint.steps} steps in {t_joint:.0f}s")
 
 print("== Phase 3: transfer to unseen µArch C (frozen embeddings) ==")
-small_c = dataset_for(UARCH_C, TRAIN_BENCHES[:1], n=N // 3)
+small_c = s.dataset(UARCH_C, [s.capture(TRAIN_BENCHES[0], N // 3)])
 t0 = time.time()
-res_transfer = transfer_finetune(cfg, params["embed"], params["A"], small_c,
-                                 epochs=max(2, EPOCHS // 2), batch_size=16, lr=1e-3)
+transfer = joint.transfer(small_c, epochs=max(2, EPOCHS // 2),
+                          batch_size=16, lr=1e-3, uarch=UARCH_C)
 t_transfer = time.time() - t0
 
 t0 = time.time()
-res_scratch = train_tao(cfg, dataset_for(UARCH_C, TRAIN_BENCHES), epochs=EPOCHS,
-                        batch_size=16, lr=1e-3)
+scratch = s.train(UARCH_C, traces, epochs=EPOCHS, batch_size=16, lr=1e-3)
 t_scratch = time.time() - t0
 print(f"  transfer: {t_transfer:.0f}s   scratch: {t_scratch:.0f}s   "
       f"-> speedup {t_scratch / max(t_transfer, 1e-9):.1f}x (paper: 29.5x at full scale)")
 
 print("== Phase 4: simulate unseen benchmarks on µArch C ==")
 for bench in ("mcf", "cac"):
-    prog = get_benchmark(bench)
-    ft = run_functional(prog, N // 2)
-    _, truth = run_detailed(prog, ft, UARCH_C)
-    sim_t = simulate_trace(res_transfer.params, ft, cfg)
-    sim_s = simulate_trace(res_scratch.params, ft, cfg)
+    tr = s.capture(bench, N // 2)
+    truth = s.ground_truth(UARCH_C, tr)
+    sim_t = transfer.simulate(tr)
+    sim_s = scratch.simulate(tr)
     print(f"  {bench}: truth_cpi={truth['cpi']:.3f}  "
           f"transfer_cpi={sim_t.cpi:.3f} (err {sim_t.error_vs(truth['cpi']):.1f}%)  "
           f"scratch_cpi={sim_s.cpi:.3f} (err {sim_s.error_vs(truth['cpi']):.1f}%)")

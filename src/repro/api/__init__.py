@@ -1,0 +1,46 @@
+"""Top-level facade for the Tao workflow.
+
+    Session      capture traces, build datasets, train, sweep
+    Trace        reusable functional-trace artifact
+    TrainedModel simulate / transfer-fine-tune a trained model
+    JointModel   §4.3 shared-embedding training result
+    DesignSpace  design sampling + training-pair selection
+
+plus the engine's pluggable metric surface (``MetricSpec`` /
+``register_metric``) and the sweep scheduler's report type.  See
+``docs/api.md`` for concepts and the MetricSpec authoring guide.
+"""
+from ..engine.metrics import (
+    DEFAULT_METRICS,
+    METRIC_REGISTRY,
+    MetricSpec,
+    StepContext,
+    register_metric,
+)
+from ..engine.runner import (
+    EngineConfig,
+    MetricNotCollectedError,
+    MetricNotComputedError,
+    SimulationResult,
+)
+from ..engine.scheduler import SweepJob, SweepReport
+from .session import DesignSpace, JointModel, Session, Trace, TrainedModel
+
+__all__ = [
+    "Session",
+    "Trace",
+    "TrainedModel",
+    "JointModel",
+    "DesignSpace",
+    "EngineConfig",
+    "SimulationResult",
+    "MetricSpec",
+    "StepContext",
+    "register_metric",
+    "METRIC_REGISTRY",
+    "DEFAULT_METRICS",
+    "MetricNotCollectedError",
+    "MetricNotComputedError",
+    "SweepJob",
+    "SweepReport",
+]

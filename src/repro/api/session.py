@@ -1,0 +1,703 @@
+"""The `repro.api` Session facade — Tao's paper workflow as one surface.
+
+The paper's three contributions are workflow-level: functional traces that
+are *reusable* across microarchitectures, one model that predicts *many*
+performance metrics, and *fast transfer* between µarch configs.  This
+module owns that workflow end to end:
+
+    from repro.api import Session, DesignSpace
+    from repro.uarch import UARCH_A
+
+    s = Session(cfg)                                # one model config
+    tr = s.capture("dee", 20_000)                   # reusable func trace
+    model = s.train(UARCH_A, [tr], epochs=8)        # §4.2 multi-metric model
+    res = model.simulate(s.capture("mcf", 10_000))  # CPI / MPKI on device
+    res.cpi, res.branch_mpki, res.available_metrics
+
+    joint = s.train_joint(ua, ub, [tr])             # §4.3 Algorithm 1
+    fast = joint.transfer(s.dataset(uc, [tr]))      # frozen-embed fine-tune
+
+    report = s.sweep({"a": model, "b": fast}, [tr1, tr2])   # async DSE sweep
+    report.traces_per_s, report.num_compiles        # == 1 per geometry
+
+Everything underneath is the existing machinery — ``core.transfer`` /
+``core.multiarch`` for training, the streaming engine (with its pluggable
+``MetricSpec`` registry) for simulation, and ``engine.scheduler`` for
+double-buffered multi-trace sweeps.
+"""
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.dataset import WindowDataset, build_windows, concat_datasets
+from ..core.align import build_adjusted_trace
+from ..core.features import FeatureSet, extract_features
+from ..core.model import TaoConfig, init_tao
+from ..core.multiarch import METHODS, eval_loss, init_multiarch, make_joint_step
+from ..core.selection import (
+    measure_design_metrics,
+    select_pair_euclidean,
+    select_pair_mahalanobis,
+    select_random,
+)
+from ..core.transfer import TrainResult, train_tao_impl, transfer_finetune
+from ..engine.metrics import DEFAULT_METRICS, MetricSpec
+from ..engine.runner import EngineConfig, SimulationResult, StreamingEngine
+from ..engine.scheduler import SweepJob, SweepReport, TraceSweeper
+from ..train.optim import AdamWConfig, adamw_init
+from ..uarch import (
+    MicroArchConfig,
+    get_benchmark,
+    run_detailed,
+    run_functional,
+    sample_design_space,
+)
+from ..uarch.program import Program
+
+__all__ = [
+    "Trace",
+    "TrainedModel",
+    "JointModel",
+    "DesignSpace",
+    "Session",
+]
+
+Metrics = Tuple[Union[str, MetricSpec], ...]
+
+# warn when one model accumulates this many engine configs (usually a sign
+# of per-call inline MetricSpec construction — each config = an XLA compile)
+_ENGINE_CACHE_WARN = 8
+
+
+def _named(kind: str, items, name_of) -> Dict:
+    """Sequence -> {name: item}, refusing silent collisions (a dict input
+    passes through — its keys are already unique)."""
+    if isinstance(items, dict):
+        return items
+    out: Dict = {}
+    for i, item in enumerate(items):
+        name = name_of(item) or f"{kind}{i}"
+        if name in out:
+            raise ValueError(
+                f"duplicate {kind} name {name!r}; pass a dict with unique "
+                f"keys or give each {kind} a distinct .name"
+            )
+        out[name] = item
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Artifacts
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Trace:
+    """A reusable functional-trace artifact (µarch-agnostic by §4.1): one
+    capture serves training datasets, ground truth, and simulation on every
+    design point."""
+
+    name: str
+    functional: np.ndarray                     # FUNC_TRACE_DTYPE
+    program: Program = dataclasses.field(repr=False)
+    benchmark: Optional[str] = None
+
+    def __len__(self) -> int:
+        return len(self.functional)
+
+    @property
+    def num_instructions(self) -> int:
+        return len(self.functional)
+
+
+@dataclasses.dataclass
+class TrainedModel:
+    """Trained Tao parameters bound to their config: the simulate/transfer
+    half of the workflow.  Engines are cached per EngineConfig, so repeated
+    ``simulate`` calls (and every model of the same shape, via the
+    process-wide step cache) reuse one compiled executable."""
+
+    params: Dict
+    cfg: TaoConfig
+    name: str = "tao"
+    uarch: Optional[MicroArchConfig] = None
+    losses: List[float] = dataclasses.field(default_factory=list)
+    seconds: float = 0.0
+    steps: int = 0
+    # simulate() defaults: Session.train stamps its batch_size and
+    # feature_backend here so simulate() and Session.sweep() compile the
+    # same executable and take the same feature path
+    sim_batch_size: int = 64
+    sim_feature_backend: str = "numpy"
+
+    def __post_init__(self):
+        self._engines: Dict[EngineConfig, StreamingEngine] = {}
+
+    def engine(self, ecfg: Optional[EngineConfig] = None, **kw) -> StreamingEngine:
+        """The cached StreamingEngine for an EngineConfig (or kwargs)."""
+        if ecfg is None:
+            ecfg = EngineConfig(**kw)
+        elif kw:
+            ecfg = dataclasses.replace(ecfg, **kw)
+        engine = self._engines.get(ecfg)
+        if engine is None:
+            engine = StreamingEngine(self.params, self.cfg, ecfg)
+            self._engines[ecfg] = engine
+            if len(self._engines) == _ENGINE_CACHE_WARN:
+                warnings.warn(
+                    f"{len(self._engines)} engine configurations cached on "
+                    f"model {self.name!r} — each costs an XLA compile. "
+                    "Inline-constructed MetricSpecs hash by identity; reuse "
+                    "module-level spec instances (register_metric) instead "
+                    "of building them per call.",
+                    RuntimeWarning,
+                    stacklevel=3,
+                )
+        return engine
+
+    def simulate(
+        self,
+        trace: Union[Trace, np.ndarray],
+        *,
+        metrics: Optional[Metrics] = None,
+        collect: bool = False,
+        batch_size: Optional[int] = None,
+        feature_backend: Optional[str] = None,
+        features: Optional[FeatureSet] = None,
+        mesh=None,
+    ) -> SimulationResult:
+        """Stream one functional trace through the model; ``metrics`` picks
+        the device-side ``MetricSpec``s (default CPI + branch/L1D MPKI)."""
+        engine = self.engine(
+            batch_size=batch_size if batch_size is not None else self.sim_batch_size,
+            collect=collect,
+            feature_backend=feature_backend or self.sim_feature_backend,
+            mesh=mesh,
+            metrics=tuple(metrics) if metrics is not None else DEFAULT_METRICS,
+        )
+        ft = trace.functional if isinstance(trace, Trace) else trace
+        return engine.simulate(ft, features=features)
+
+    @property
+    def num_compiles(self) -> int:
+        # engines of different feature backends share cached steps, so
+        # dedupe the underlying entries before summing
+        entries = {}
+        for engine in self._engines.values():
+            for entry in engine._steps.values():
+                entries[id(entry)] = entry
+        return sum(e.compiles for e in entries.values())
+
+    def transfer(
+        self,
+        dataset: WindowDataset,
+        *,
+        freeze_embed: bool = True,
+        epochs: int = 10,
+        batch_size: int = 16,
+        lr: float = 3e-4,
+        seed: int = 0,
+        target_loss: Optional[float] = None,
+        name: Optional[str] = None,
+        uarch: Optional[MicroArchConfig] = None,
+    ) -> "TrainedModel":
+        """Fine-tune this model onto a new µarch's (small) dataset.
+        ``freeze_embed=True`` is Tao's scheme (§4.3): the µarch-agnostic
+        embedding stays fixed, only adaptation + prediction layers train."""
+        res = train_tao_impl(
+            self.cfg,
+            dataset,
+            epochs=epochs,
+            batch_size=batch_size,
+            lr=lr,
+            init_params=self.params,
+            freeze_embed=freeze_embed,
+            seed=seed,
+            target_loss=target_loss,
+        )
+        return _model_from_result(
+            res, self.cfg, name or f"{self.name}-transfer", uarch,
+            self.sim_batch_size, self.sim_feature_backend,
+        )
+
+
+def _model_from_result(
+    res: TrainResult,
+    cfg: TaoConfig,
+    name: str,
+    uarch: Optional[MicroArchConfig],
+    sim_batch_size: int = 64,
+    sim_feature_backend: str = "numpy",
+) -> TrainedModel:
+    return TrainedModel(
+        params=res.params,
+        cfg=cfg,
+        name=name,
+        uarch=uarch,
+        losses=res.losses,
+        seconds=res.seconds,
+        steps=res.steps,
+        sim_batch_size=sim_batch_size,
+        sim_feature_backend=sim_feature_backend,
+    )
+
+
+@dataclasses.dataclass
+class JointModel:
+    """Result of §4.3 Algorithm-1 joint training over two µarchs: the
+    µarch-agnostic embedding plus per-µarch adaptation/prediction heads."""
+
+    params: Dict                      # {"embed": …, "A": {…}, "B": {…}}
+    cfg: TaoConfig
+    method: str
+    losses: List[Tuple[float, float]]  # per-epoch (loss_a, loss_b)
+    seconds: float = 0.0
+    steps: int = 0
+    sim_batch_size: int = 64          # inherited by head()/transfer() models
+    sim_feature_backend: str = "numpy"
+
+    @property
+    def embedding(self) -> Dict:
+        """The frozen, µarch-agnostic embedding parameters."""
+        return self.params["embed"]
+
+    def head(self, arch: str = "A", name: Optional[str] = None) -> TrainedModel:
+        """Assemble one µarch's full model (shared embedding + its heads)."""
+        if arch not in ("A", "B"):
+            raise ValueError(f"arch must be 'A' or 'B', got {arch!r}")
+        if self.method != "tao":
+            # only Algorithm 1 trains the adaptation layers; the other
+            # methods' heads were trained on NON-adapted embeddings, and
+            # tao_forward applies adapt unconditionally — simulating would
+            # route through random weights and silently skew predictions
+            raise ValueError(
+                f"head() needs trained adaptation layers, which method="
+                f"{self.method!r} does not produce; use transfer(...) "
+                "(which fine-tunes them) or method='tao'"
+            )
+        return TrainedModel(
+            params={"embed": self.params["embed"], **self.params[arch]},
+            cfg=self.cfg,
+            name=name or f"joint-{self.method}-{arch}",
+            sim_batch_size=self.sim_batch_size,
+            sim_feature_backend=self.sim_feature_backend,
+        )
+
+    def transfer(
+        self,
+        dataset: WindowDataset,
+        *,
+        donor: str = "A",
+        epochs: int = 10,
+        batch_size: int = 16,
+        lr: float = 3e-4,
+        seed: int = 0,
+        target_loss: Optional[float] = None,
+        name: Optional[str] = None,
+        uarch: Optional[MicroArchConfig] = None,
+    ) -> TrainedModel:
+        """Tao's fast enablement of an unseen µarch: frozen shared
+        embeddings + donor-initialized heads, fine-tuned on a small
+        dataset (paper Table 5's 29.5x-cheaper regime)."""
+        if donor not in ("A", "B"):
+            raise ValueError(f"donor must be 'A' or 'B', got {donor!r}")
+        res = transfer_finetune(
+            self.cfg,
+            self.params["embed"],
+            self.params[donor],
+            dataset,
+            epochs=epochs,
+            batch_size=batch_size,
+            lr=lr,
+            seed=seed,
+            target_loss=target_loss,
+        )
+        return _model_from_result(
+            res, self.cfg, name or f"transfer-{self.method}", uarch,
+            self.sim_batch_size, self.sim_feature_backend,
+        )
+
+    def eval_loss(self, batches, arch: str = "A") -> float:
+        # evaluation must mirror training: only method="tao" trains the
+        # adaptation layers (multiarch.use_adapt_by_method), so only it
+        # routes eval through them
+        return eval_loss(
+            self.params, batches, self.cfg, arch, use_adapt=self.method == "tao"
+        )
+
+
+# ---------------------------------------------------------------------------
+# Design space
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class DesignSpace:
+    """A set of µarch design points plus the paper's training-pair
+    selection (§4.3 Mahalanobis distance over quick detailed-sim metrics)."""
+
+    designs: List[MicroArchConfig]
+    # the detailed-sim measurement pass is the expensive half of selection;
+    # cache it so comparing selection methods measures once
+    _metrics: Dict[tuple, np.ndarray] = dataclasses.field(
+        default_factory=dict, repr=False, compare=False
+    )
+
+    @classmethod
+    def sample(cls, n: int, seed: int = 0) -> "DesignSpace":
+        return cls(designs=list(sample_design_space(n, seed=seed)))
+
+    @classmethod
+    def vary(
+        cls,
+        base: MicroArchConfig,
+        field: str,
+        values: Sequence,
+        name_fmt: str = "{field}{value}",
+    ) -> "DesignSpace":
+        """Axis sweep: replace one config field across ``values``."""
+        return cls(designs=[
+            dataclasses.replace(
+                base, **{field: v},
+                name=name_fmt.format(field=field, value=v),
+            )
+            for v in values
+        ])
+
+    def __len__(self) -> int:
+        return len(self.designs)
+
+    def __iter__(self):
+        return iter(self.designs)
+
+    def __getitem__(self, i: int) -> MicroArchConfig:
+        return self.designs[i]
+
+    def select_pair(
+        self,
+        benchmarks: Sequence[str],
+        *,
+        method: str = "mahalanobis",
+        instructions: int = 3000,
+        seed: int = 0,
+    ) -> Tuple[int, int]:
+        """Pick the joint-training pair (paper Fig. 14: MD > Euclid > rand).
+        Returns indices into ``self.designs``."""
+        if method == "random":
+            i, j = select_random(len(self.designs), 2, seed=seed)
+            return int(i), int(j)
+        mkey = (tuple(benchmarks), instructions)
+        metrics = self._metrics.get(mkey)
+        if metrics is None:
+            metrics = measure_design_metrics(
+                self.designs, benchmarks, instructions=instructions
+            )
+            self._metrics[mkey] = metrics
+        if method == "mahalanobis":
+            return select_pair_mahalanobis(metrics)
+        if method == "euclidean":
+            return select_pair_euclidean(metrics)
+        raise ValueError(
+            f"method must be mahalanobis|euclidean|random, got {method!r}"
+        )
+
+
+# ---------------------------------------------------------------------------
+# Session
+# ---------------------------------------------------------------------------
+
+
+class Session:
+    """One Tao workflow: a model configuration plus the paper's verbs.
+
+    ``capture`` -> reusable functional traces; ``dataset`` -> §4.1 adjusted
+    windows for a design point; ``train``/``train_joint`` -> models;
+    ``model.simulate``/``sweep`` -> device-resident multi-metric inference.
+    """
+
+    def __init__(
+        self,
+        cfg: Optional[TaoConfig] = None,
+        *,
+        batch_size: int = 64,
+        feature_backend: str = "numpy",
+        seed: int = 0,
+    ):
+        self.cfg = cfg if cfg is not None else TaoConfig()
+        self.batch_size = batch_size
+        self.feature_backend = feature_backend
+        self.seed = seed
+        self._traces: Dict[tuple, Trace] = {}
+        # key -> (pinned traces, dataset); see Session.dataset
+        self._datasets: Dict[tuple, Tuple[Tuple[Trace, ...], WindowDataset]] = {}
+        # (uarch key, id(trace)) -> (pinned trace, detailed trace, summary):
+        # ground_truth and dataset share one detailed-sim run per pair (the
+        # most expensive operation in the workflow)
+        self._detailed: Dict[tuple, tuple] = {}
+
+    # ---- step 1: reusable functional traces ----------------------------
+
+    def capture(
+        self,
+        benchmark: Union[str, Program],
+        n: int,
+        name: Optional[str] = None,
+    ) -> Trace:
+        """Run the functional (AtomicSimpleCPU-analogue) simulator once;
+        the artifact is reusable across every µarch (paper Fig. 10)."""
+        if isinstance(benchmark, Program):
+            # key on the object: two Programs sharing a .name must not
+            # alias (the cached Trace pins the Program, so its id is
+            # stable for the life of the entry)
+            prog, bench, source = benchmark, benchmark.name, id(benchmark)
+        else:
+            prog, bench, source = get_benchmark(benchmark), benchmark, benchmark
+        name = name or f"{bench}:{n}"
+        key = (source, n, name)  # a custom name never shadows the default
+        cached = self._traces.get(key)
+        if cached is not None:
+            return cached
+        tr = Trace(
+            name=name,
+            functional=run_functional(prog, n),
+            program=prog,
+            benchmark=bench,
+        )
+        self._traces[key] = tr
+        return tr
+
+    def _run_detailed(self, uarch: MicroArchConfig, trace: Trace):
+        key = (uarch.key(), id(trace))
+        cached = self._detailed.get(key)
+        if cached is None:
+            det, summ = run_detailed(trace.program, trace.functional, uarch)
+            cached = (trace, det, summ)  # pin the trace so id() stays valid
+            self._detailed[key] = cached
+        return cached[1], cached[2]
+
+    def ground_truth(self, uarch: MicroArchConfig, trace: Trace) -> Dict[str, float]:
+        """Detailed-simulator metrics for a trace on one design point."""
+        _, summ = self._run_detailed(uarch, trace)
+        return summ
+
+    # ---- datasets (§4.1 adjusted traces -> windows) --------------------
+
+    def dataset(
+        self,
+        uarch: MicroArchConfig,
+        traces: Union[Trace, Iterable[Trace]],
+        *,
+        dedup: bool = True,
+    ) -> WindowDataset:
+        """Detailed-sim each trace on ``uarch``, re-attribute squash/nop
+        cycles (§4.1), extract features, window, and concatenate."""
+        if isinstance(traces, Trace):
+            traces = [traces]
+        traces = list(traces)
+        # key on the trace objects themselves (captures are session-cached,
+        # so the normal path hits) — names alone could collide across
+        # different traces and hand back the wrong windows.  The cache entry
+        # pins the Trace objects so an id() is never recycled while its key
+        # is live.
+        key = (uarch.key(), tuple(id(t) for t in traces), dedup,
+               self.cfg.features, self.cfg.window)
+        cached = self._datasets.get(key)
+        if cached is not None:
+            return cached[1]
+        parts = []
+        for tr in traces:
+            det, _ = self._run_detailed(uarch, tr)
+            al = build_adjusted_trace(det)
+            parts.append(
+                build_windows(
+                    extract_features(al.adjusted, self.cfg.features),
+                    self.cfg.window,
+                    dedup=dedup,
+                )
+            )
+        ds = concat_datasets(parts)
+        self._datasets[key] = (tuple(traces), ds)
+        return ds
+
+    # ---- step 2: training ----------------------------------------------
+
+    def train(
+        self,
+        uarch: Optional[MicroArchConfig] = None,
+        traces: Optional[Union[Trace, Iterable[Trace]]] = None,
+        *,
+        dataset: Optional[WindowDataset] = None,
+        epochs: int = 10,
+        batch_size: int = 16,
+        lr: float = 3e-4,
+        init: Optional[Union[TrainedModel, Dict]] = None,
+        freeze_embed: bool = False,
+        seed: Optional[int] = None,
+        target_loss: Optional[float] = None,
+        eval_fn=None,
+        name: Optional[str] = None,
+    ) -> TrainedModel:
+        """Train (or fine-tune) a single-µarch model.  Give ``traces`` and
+        the session builds the adjusted dataset for ``uarch``; or pass a
+        prebuilt ``dataset`` directly."""
+        if dataset is None:
+            if uarch is None or traces is None:
+                raise ValueError(
+                    "train needs (uarch, traces) to build a dataset, or an "
+                    "explicit dataset="
+                )
+            dataset = self.dataset(uarch, traces)
+        init_params = init.params if isinstance(init, TrainedModel) else init
+        res = train_tao_impl(
+            self.cfg,
+            dataset,
+            epochs=epochs,
+            batch_size=batch_size,
+            lr=lr,
+            init_params=init_params,
+            freeze_embed=freeze_embed,
+            eval_fn=eval_fn,
+            seed=self.seed if seed is None else seed,
+            target_loss=target_loss,
+        )
+        return _model_from_result(
+            res, self.cfg, name or (uarch.name if uarch is not None else "tao"),
+            uarch, self.batch_size, self.feature_backend,
+        )
+
+    def init_model(self, seed: Optional[int] = None, name: str = "init") -> TrainedModel:
+        """An untrained model (random init) — engine smoke tests, sweeps."""
+        key = jax.random.PRNGKey(self.seed if seed is None else seed)
+        return TrainedModel(
+            params=init_tao(key, self.cfg), cfg=self.cfg, name=name,
+            sim_batch_size=self.batch_size,
+            sim_feature_backend=self.feature_backend,
+        )
+
+    def train_joint(
+        self,
+        uarch_a: MicroArchConfig,
+        uarch_b: MicroArchConfig,
+        traces: Optional[Union[Trace, Iterable[Trace]]] = None,
+        *,
+        datasets: Optional[Tuple[WindowDataset, WindowDataset]] = None,
+        method: str = "tao",
+        epochs: int = 6,
+        batch_size: int = 16,
+        lr: float = 1e-3,
+        seed: Optional[int] = None,
+        on_epoch=None,
+    ) -> JointModel:
+        """§4.3 Algorithm 1: jointly train the µarch-agnostic embedding
+        over two design points (``method`` picks the gradient-combination
+        rule: {'tao', 'tao_no_adapt', 'granite', 'gradnorm'}).
+        ``on_epoch(epoch, params, steps)`` runs after every epoch —
+        checkpointing hook (see examples/train_tao_e2e.py)."""
+        if method not in METHODS:
+            raise ValueError(f"method {method!r} not in {METHODS}")
+        if datasets is not None:
+            ds_a, ds_b = datasets
+        else:
+            if traces is None:
+                raise ValueError("train_joint needs traces= or datasets=")
+            ds_a = self.dataset(uarch_a, traces)
+            ds_b = self.dataset(uarch_b, traces)
+        short = min(len(ds_a), len(ds_b))
+        if short < batch_size:
+            raise ValueError(
+                f"joint datasets have {short} windows < batch_size="
+                f"{batch_size}: no full batch, training would be a no-op "
+                "(shrink batch_size or capture longer traces)"
+            )
+        seed = self.seed if seed is None else seed
+        params = init_multiarch(jax.random.PRNGKey(seed), self.cfg)
+        opt = adamw_init(params)
+        step = make_joint_step(self.cfg, AdamWConfig(lr=lr), method=method)
+        w = jnp.ones((2,))
+        initial = None
+        rng = np.random.default_rng(seed)
+        losses: List[Tuple[float, float]] = []
+        steps = 0
+        import time as _time
+
+        t0 = _time.perf_counter()
+        for ep in range(epochs):
+            m = None
+            for ba, bb in zip(
+                ds_a.batches(batch_size, rng=rng),
+                ds_b.batches(batch_size, rng=rng),
+            ):
+                ba["labels"] = {k: jnp.asarray(v) for k, v in ba.pop("labels").items()}
+                bb["labels"] = {k: jnp.asarray(v) for k, v in bb.pop("labels").items()}
+                params, opt, w, m = step(
+                    params, opt, w,
+                    initial if initial is not None else jnp.ones((2,)),
+                    ba, bb,
+                )
+                if initial is None:
+                    initial = jnp.asarray(
+                        [float(m["loss_a"]), float(m["loss_b"])]
+                    )
+                steps += 1
+            if m is not None:
+                losses.append((float(m["loss_a"]), float(m["loss_b"])))
+            if on_epoch is not None:
+                on_epoch(ep, params, steps)
+        return JointModel(
+            params=params,
+            cfg=self.cfg,
+            method=method,
+            losses=losses,
+            seconds=_time.perf_counter() - t0,
+            steps=steps,
+            sim_batch_size=self.batch_size,
+            sim_feature_backend=self.feature_backend,
+        )
+
+    # ---- step 3: multi-trace simulation --------------------------------
+
+    def sweep(
+        self,
+        models: Union[Sequence[TrainedModel], Dict[str, TrainedModel]],
+        traces: Union[Sequence[Trace], Dict[str, Trace]],
+        *,
+        metrics: Optional[Metrics] = None,
+        batch_size: Optional[int] = None,
+        feature_backend: Optional[str] = None,
+        collect: bool = False,
+        depth: int = 2,
+        async_prepare: Optional[bool] = None,
+    ) -> SweepReport:
+        """Async DSE sweep: every (model, trace) pair streams through one
+        shared compiled step; each distinct trace is prepared once (shared
+        across models) and — on accelerator backends — the next trace's
+        host-side prep is double-buffered behind the device execution of
+        the current one.  Result keys are ``model/trace``."""
+        models = _named("model", models, lambda m: m.name)
+        traces = _named("trace", traces, lambda t: t.name)
+        for name, m in models.items():
+            if m.cfg != self.cfg:
+                raise ValueError(
+                    f"model {name!r} was built for a different TaoConfig; "
+                    "sweeps share one compiled step per session config"
+                )
+        ecfg = EngineConfig(
+            batch_size=batch_size or self.batch_size,
+            feature_backend=feature_backend or self.feature_backend,
+            collect=collect,
+            metrics=tuple(metrics) if metrics is not None else DEFAULT_METRICS,
+        )
+        jobs = [
+            SweepJob(f"{mn}/{tn}", model.params, tr.functional)
+            for mn, model in models.items()
+            for tn, tr in traces.items()
+        ]
+        return TraceSweeper(
+            self.cfg, ecfg, depth=depth, async_prepare=async_prepare
+        ).run(jobs)

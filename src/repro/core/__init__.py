@@ -30,13 +30,26 @@ from .selection import (
     select_pair_mahalanobis,
     select_random,
 )
-from .simulate import (
-    SimulationResult,
-    phase_curves,
-    simulate_trace,
-    simulate_trace_legacy,
+from .transfer import TrainResult, train_tao, train_tao_impl, transfer_finetune
+
+# NOTE: .simulate imports engine.runner, and engine.runner imports this
+# package (core.dataset / core.features / core.model) — so the simulate
+# symbols are exposed lazily (PEP 562) to keep `import repro.engine` /
+# `import repro.api` working as the FIRST repro import.
+_SIMULATE_SYMBOLS = (
+    "SimulationResult",
+    "simulate_trace",
+    "simulate_trace_legacy",
+    "phase_curves",
 )
-from .transfer import TrainResult, train_tao, transfer_finetune
+
+
+def __getattr__(name):
+    if name in _SIMULATE_SYMBOLS:
+        from . import simulate as _simulate
+
+        return getattr(_simulate, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 __all__ = [
     "AlignedTrace",
@@ -72,5 +85,6 @@ __all__ = [
     "phase_curves",
     "TrainResult",
     "train_tao",
+    "train_tao_impl",
     "transfer_finetune",
 ]

@@ -9,16 +9,17 @@ predicted performance metrics:
   L1D MPKI     = predicted accesses with level >= L2 per 1000 instructions
   phase curves = per-chunk averages (Fig. 11)
 
-`simulate_trace` is a compatibility wrapper over the streaming engine
-(`repro.engine`): fixed-shape padded batches, one jit compile, on-device
-metric accumulation, host->device prefetch.  The original host-side batch
-loop survives as `simulate_trace_legacy` — it is the executable
-specification the engine is tested against, and the baseline
+`simulate_trace` is a DEPRECATED compatibility wrapper over the streaming
+engine (`repro.engine`) — new code should go through the `repro.api`
+facade (`TrainedModel.simulate` / `Session.sweep`).  The original
+host-side batch loop survives as `simulate_trace_legacy` — it is the
+executable specification the engine is tested against, and the baseline
 `benchmarks/bench_timing.py` measures the engine's speedup over.
 """
 from __future__ import annotations
 
 import time
+import warnings
 from typing import Dict, Optional
 
 import jax
@@ -48,10 +49,17 @@ def simulate_trace(
     collect: bool = True,
     feature_backend: str = "numpy",
 ) -> SimulationResult:
-    """Engine-backed simulation.  `collect=False` keeps all metrics on
-    device (fastest; per-instruction arrays in the result stay None).
-    `feature_backend="pallas"` fuses §4.2 feature extraction into the
-    device-resident stream (see docs/engine.md)."""
+    """Deprecated engine-backed simulation — use
+    ``repro.api.TrainedModel.simulate`` (same engine, same results).
+    `collect=False` keeps all metrics on device (fastest; per-instruction
+    arrays are then not collected).  `feature_backend="pallas"` fuses §4.2
+    feature extraction into the device-resident stream (docs/engine.md)."""
+    warnings.warn(
+        "repro.core.simulate_trace is deprecated; use repro.api: "
+        "TrainedModel(params, cfg).simulate(trace) or Session.sweep(...)",
+        DeprecationWarning,
+        stacklevel=2,
+    )
     return simulate_trace_engine(
         params,
         func_trace,
@@ -134,7 +142,7 @@ def phase_curves(
     result: SimulationResult, chunk: int = 10_000
 ) -> Dict[str, np.ndarray]:
     """Per-chunk CPI / branch MPKI / L1D MPKI curves (Fig. 11)."""
-    if result.fetch_lat is None:
+    if "fetch_lat" not in result.available_metrics:
         raise ValueError(
             "phase_curves needs per-instruction predictions: simulate with "
             "collect=True (EngineConfig.collect)"

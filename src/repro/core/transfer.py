@@ -11,6 +11,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
@@ -21,7 +22,7 @@ from ..train.optim import AdamWConfig, adamw_init, adamw_update
 from .dataset import WindowDataset
 from .model import TaoConfig, init_tao, multi_metric_loss, tao_forward
 
-__all__ = ["TrainResult", "train_tao", "transfer_finetune"]
+__all__ = ["TrainResult", "train_tao", "train_tao_impl", "transfer_finetune"]
 
 
 @dataclasses.dataclass
@@ -96,7 +97,7 @@ def _run_epochs(
     return params, losses, evals, steps
 
 
-def train_tao(
+def train_tao_impl(
     cfg: TaoConfig,
     dataset: WindowDataset,
     *,
@@ -114,6 +115,9 @@ def train_tao(
     scratch            -> init_params=None,  freeze_embed=False
     direct fine-tune   -> init_params=donor, freeze_embed=False
     shared + fine-tune -> init_params={'embed': shared, ...}, freeze_embed=True
+
+    Internal implementation behind ``repro.api.Session.train`` /
+    ``TrainedModel.transfer`` (and the ``train_tao`` deprecation shim).
     """
     key = jax.random.PRNGKey(seed)
     params = init_params if init_params is not None else init_tao(key, cfg)
@@ -137,6 +141,18 @@ def train_tao(
     )
 
 
+def train_tao(cfg: TaoConfig, dataset: WindowDataset, **kw) -> TrainResult:
+    """Deprecated alias for :func:`train_tao_impl` — use the
+    ``repro.api`` facade instead (``Session.train`` / ``model.transfer``)."""
+    warnings.warn(
+        "repro.core.train_tao is deprecated; use repro.api.Session.train(...) "
+        "(or TrainedModel.transfer for fine-tuning)",
+        DeprecationWarning,
+        stacklevel=2,
+    )
+    return train_tao_impl(cfg, dataset, **kw)
+
+
 def transfer_finetune(
     cfg: TaoConfig,
     shared_embed: Dict,
@@ -151,6 +167,6 @@ def transfer_finetune(
         "adapt": donor_arch_params["adapt"],
         "pred": donor_arch_params["pred"],
     }
-    return train_tao(
+    return train_tao_impl(
         cfg, small_dataset, init_params=init, freeze_embed=True, **kw
     )

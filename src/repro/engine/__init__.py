@@ -2,20 +2,47 @@
 
 See ``docs/engine.md`` for the data-flow architecture and
 ``benchmarks/bench_timing.py`` for the measured speedup over the legacy
-host-loop path (``repro.core.simulate.simulate_trace_legacy``).
+host-loop path (``repro.core.simulate.simulate_trace_legacy``).  Metric
+accumulators are pluggable (``engine.metrics``); multi-trace DSE sweeps
+run through the async scheduler (``engine.scheduler``).
 """
+from .metrics import (
+    DEFAULT_METRICS,
+    METRIC_REGISTRY,
+    MetricSpec,
+    StepContext,
+    register_metric,
+    resolve_metrics,
+)
 from .runner import (
     FEATURE_BACKENDS,
+    PER_INSTRUCTION_KEYS,
     EngineConfig,
+    MetricNotCollectedError,
+    MetricNotComputedError,
     SimulationResult,
     StreamingEngine,
     simulate_trace_engine,
 )
+from .scheduler import SweepJob, SweepReport, TraceSweeper, sweep_traces
 
 __all__ = [
     "EngineConfig",
     "FEATURE_BACKENDS",
+    "PER_INSTRUCTION_KEYS",
+    "DEFAULT_METRICS",
+    "METRIC_REGISTRY",
+    "MetricSpec",
+    "StepContext",
+    "register_metric",
+    "resolve_metrics",
+    "MetricNotCollectedError",
+    "MetricNotComputedError",
     "SimulationResult",
     "StreamingEngine",
     "simulate_trace_engine",
+    "SweepJob",
+    "SweepReport",
+    "TraceSweeper",
+    "sweep_traces",
 ]

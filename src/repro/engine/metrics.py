@@ -1,0 +1,255 @@
+"""Pluggable device-side metric accumulators for the streaming engine.
+
+The engine's jitted step used to hard-code one carry dict (CPI fetch sum,
+branch-mispredict count, L1D-miss count, trailing exec latency).  This
+module replaces that with a registry of ``MetricSpec``s: each metric
+declares its own device-side accumulator — an ``init`` pytree, an
+``update`` that folds one batch into it *inside* the jitted step, and a
+host-side ``finalize`` — and the engine composes every requested spec into
+the single compiled executable.  New metrics (phase curves, per-opcode
+CPI, cache-level histograms, ...) are plug-in code, not engine surgery:
+
+    from repro.engine.metrics import MetricSpec, register_metric
+
+    DRAM_HITS = MetricSpec(
+        name="dram_hits",
+        init=lambda: jnp.zeros((), jnp.int32),
+        update=lambda c, ctx: c + ctx.psum(
+            ((ctx.dlevel == NUM_DLEVELS - 1) & ctx.is_mem)
+            .sum(dtype=jnp.int32)),
+        finalize=lambda c, n: {"dram_hits": float(c)},
+    )
+    register_metric(DRAM_HITS)
+    engine = StreamingEngine(params, cfg, EngineConfig(
+        metrics=("cpi", "dram_hits")))
+
+Specs run on device, under jit, and — when the engine is sharded — inside
+``shard_map``; ``StepContext.psum``/``pmax`` are the cross-shard reducers
+(identity on a single device), so a spec written against the context works
+unchanged on a mesh.  ``ctx.batch`` exposes only the columns the engine
+ships (feature INPUT_KEYS, ``valid``, ``is_branch``, ``is_mem``) — a spec
+needing other trace columns must drive the step with
+``stream_batches(extra=...)`` (see tests/test_api.py for a worked
+example).  The built-in specs reproduce the legacy carry's values
+bit-for-bit (enforced by ``tests/test_api.py``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+from ..uarch.isa import DLEVEL_L2, NUM_DLEVELS
+
+__all__ = [
+    "StepContext",
+    "MetricSpec",
+    "METRIC_REGISTRY",
+    "DEFAULT_METRICS",
+    "register_metric",
+    "resolve_metrics",
+    "CPI",
+    "BRANCH_MPKI",
+    "L1D_MPKI",
+    "DLEVEL_HIST",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class StepContext:
+    """Everything a metric's ``update`` may read, for one (B, W) batch.
+
+    All arrays are flattened to ``(B * W,)`` device arrays and live inside
+    the jitted step (under ``shard_map`` they are the *local* shard).
+    ``is_branch``/``is_mem`` are already masked to valid positions; the raw
+    batch (feature columns, ``valid``, unmasked flags, ...) is in ``batch``.
+    """
+
+    valid: Any          # float32 validity mask (0.0 on padding)
+    on: Any             # bool, valid > 0
+    is_branch: Any      # bool, trace is_branch & on
+    is_mem: Any         # bool, trace is_mem & on
+    fetch_lat: Any      # float32, clamped >= 0
+    exec_lat: Any       # float32, clamped >= 0
+    mispred_prob: Any   # float32 sigmoid(mispred_logit)
+    dlevel: Any         # int32 argmax(dlevel_logits)
+    gidx: Any           # float32 global position key within the batch grid
+    last_key: Any       # scalar: key of the globally-last valid position
+                        # in this batch (-1.0 when the batch is all padding)
+    psum: Callable[[Any], Any]   # cross-shard sum (identity off-mesh)
+    pmax: Callable[[Any], Any]   # cross-shard max (identity off-mesh)
+    sharded: bool
+    batch: Dict[str, Any]
+
+    def at_last(self, x) -> Any:
+        """Value of ``x`` at the globally-last valid position of the batch
+        (meaningful only when ``last_key >= 0``)."""
+        if self.sharded:
+            # the winning position lives on exactly one shard
+            return self.psum(
+                jnp.where(self.gidx == self.last_key, x, 0.0).sum(dtype=jnp.float32)
+            )
+        return x[jnp.argmax(jnp.where(self.on, self.gidx, -1.0)).astype(jnp.int32)]
+
+
+@dataclasses.dataclass(frozen=True)
+class MetricSpec:
+    """One device-side metric accumulator.
+
+    ``init``     () -> device carry pytree (zeros)
+    ``update``   (carry, StepContext) -> carry; traced into the jitted step
+                 once per batch.  Cross-shard reductions must go through
+                 ``ctx.psum``/``ctx.pmax``/``ctx.at_last``.
+    ``finalize`` (host carry pytree, num_instructions) -> {metric: float};
+                 runs on host after the single end-of-trace sync, and may
+                 emit several named result metrics.
+    """
+
+    name: str
+    init: Callable[[], Any]
+    update: Callable[[Any, "StepContext"], Any]
+    finalize: Callable[[Any, int], Dict[str, float]]
+
+
+# ---------------------------------------------------------------------------
+# Built-in specs (bit-for-bit the legacy carry)
+# ---------------------------------------------------------------------------
+
+
+def _cpi_init():
+    # fetch_sum carries the only float rounding; the instruction count is
+    # computed host-side from the window grid.
+    return {
+        "fetch_sum": jnp.zeros((), jnp.float32),
+        "last_exec": jnp.zeros((), jnp.float32),
+    }
+
+
+def _cpi_update(carry, ctx: StepContext):
+    part = ctx.psum((ctx.fetch_lat * ctx.valid).sum(dtype=jnp.float32))
+    return {
+        "fetch_sum": carry["fetch_sum"] + part,
+        # retire-clock formulation: total cycles end at the last valid
+        # instruction's exec latency, so track it across batches
+        "last_exec": jnp.where(
+            ctx.last_key >= 0, ctx.at_last(ctx.exec_lat), carry["last_exec"]
+        ),
+    }
+
+
+def _cpi_finalize(carry, n: int) -> Dict[str, float]:
+    total = float(carry["fetch_sum"] + carry["last_exec"])
+    return {"cpi": total / max(n, 1), "total_cycles": total}
+
+
+CPI = MetricSpec("cpi", _cpi_init, _cpi_update, _cpi_finalize)
+
+
+def _int_count_init():
+    # exact int32 counts (good to 2^31 instructions per trace)
+    return jnp.zeros((), jnp.int32)
+
+
+def _branch_update(carry, ctx: StepContext):
+    return carry + ctx.psum(
+        ((ctx.mispred_prob > 0.5) & ctx.is_branch).sum(dtype=jnp.int32)
+    )
+
+
+def _branch_finalize(carry, n: int) -> Dict[str, float]:
+    return {"branch_mpki": 1000.0 * float(carry) / max(n, 1)}
+
+
+BRANCH_MPKI = MetricSpec("branch_mpki", _int_count_init, _branch_update, _branch_finalize)
+
+
+def _l1d_update(carry, ctx: StepContext):
+    return carry + ctx.psum(
+        ((ctx.dlevel >= DLEVEL_L2) & ctx.is_mem).sum(dtype=jnp.int32)
+    )
+
+
+def _l1d_finalize(carry, n: int) -> Dict[str, float]:
+    return {"l1d_mpki": 1000.0 * float(carry) / max(n, 1)}
+
+
+L1D_MPKI = MetricSpec("l1d_mpki", _int_count_init, _l1d_update, _l1d_finalize)
+
+
+# A registered non-default plug-in: predicted data-access-level histogram
+# over memory ops (cache-level composition, Fig. 11-style breakdowns).
+def _dlevel_hist_init():
+    return jnp.zeros((NUM_DLEVELS,), jnp.int32)
+
+
+def _dlevel_hist_update(carry, ctx: StepContext):
+    onehot = jax.nn.one_hot(ctx.dlevel, NUM_DLEVELS, dtype=jnp.int32)
+    return carry + ctx.psum(
+        (onehot * ctx.is_mem[:, None].astype(jnp.int32)).sum(axis=0)
+    )
+
+
+_DLEVEL_NAMES = ("none", "l1", "l2", "dram")
+
+
+def _dlevel_hist_finalize(carry, n: int) -> Dict[str, float]:
+    return {
+        f"dlevel_{_DLEVEL_NAMES[i]}": float(carry[i]) for i in range(NUM_DLEVELS)
+    }
+
+
+DLEVEL_HIST = MetricSpec(
+    "dlevel_hist", _dlevel_hist_init, _dlevel_hist_update, _dlevel_hist_finalize
+)
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+METRIC_REGISTRY: Dict[str, MetricSpec] = {}
+
+# the legacy carry's metric set — what EngineConfig requests by default
+DEFAULT_METRICS: Tuple[str, ...] = ("cpi", "branch_mpki", "l1d_mpki")
+
+
+def register_metric(spec: MetricSpec, *, overwrite: bool = False) -> MetricSpec:
+    if not overwrite and spec.name in METRIC_REGISTRY:
+        raise ValueError(
+            f"metric {spec.name!r} already registered "
+            f"(pass overwrite=True to replace it)"
+        )
+    METRIC_REGISTRY[spec.name] = spec
+    return spec
+
+
+for _spec in (CPI, BRANCH_MPKI, L1D_MPKI, DLEVEL_HIST):
+    register_metric(_spec)
+
+
+def resolve_metrics(
+    metrics: Tuple[Union[str, MetricSpec], ...],
+) -> Tuple[MetricSpec, ...]:
+    """Names -> registry lookup; MetricSpec instances pass through."""
+    specs = []
+    seen = set()
+    for m in metrics:
+        spec = m
+        if isinstance(m, str):
+            spec = METRIC_REGISTRY.get(m)
+            if spec is None:
+                raise KeyError(
+                    f"unknown metric {m!r}; registered: "
+                    f"{sorted(METRIC_REGISTRY)} (register_metric() adds more)"
+                )
+        elif not isinstance(m, MetricSpec):
+            raise TypeError(f"metrics entries must be str or MetricSpec, got {m!r}")
+        if spec.name in seen:
+            raise ValueError(f"duplicate metric {spec.name!r}")
+        seen.add(spec.name)
+        specs.append(spec)
+    if not specs:
+        raise ValueError("at least one metric is required")
+    return tuple(specs)

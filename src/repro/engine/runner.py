@@ -4,7 +4,7 @@ The fast path behind §4.2 inference: a functional trace flows through
 
   vectorized features  ->  zero-copy window views  ->  fixed-shape padded
   batches (+ validity mask)  ->  one jitted forward/accumulate step  ->
-  device-resident partial sums of CPI / branch-MPKI / L1D-MPKI.
+  device-resident metric accumulators (``MetricSpec`` registry).
 
 Design points (each measured by ``benchmarks/bench_timing.py``):
 
@@ -12,31 +12,34 @@ Design points (each measured by ``benchmarks/bench_timing.py``):
     final batch is zero-padded and masked instead of retraced, so the whole
     run — and every later trace with the same effective window — reuses a
     single executable.
-  * **On-device accumulation.**  The step folds each batch into a carry of
-    four scalars (fetch-latency sum, exact int32 mispredict and L1D-miss
-    counts, trailing exec latency); the instruction count comes from the
-    window grid on host, and per-instruction arrays are only transferred
-    when ``EngineConfig.collect`` asks for them.
+  * **On-device accumulation.**  The step folds each batch into the carry
+    pytrees declared by the requested ``MetricSpec``s (``engine.metrics``):
+    CPI / branch-MPKI / L1D-MPKI by default, anything plug-in code
+    registers otherwise.  The instruction count comes from the window grid
+    on host, and per-instruction arrays are only transferred when
+    ``EngineConfig.collect`` asks for them.
   * **Prefetch.**  The next batch's host->device transfer is enqueued before
     the current result is consumed, overlapping copy with compute.
   * **Sharding.**  With a mesh, the step runs under ``jax.shard_map`` with
     the batch dimension split over the ``data`` axis (rules from
-    ``distributed/sharding.py``) and partial sums combined with ``psum``.
+    ``distributed/sharding.py``); specs reduce across shards through
+    ``StepContext.psum``/``pmax``.
   * **Feature backends.**  ``feature_backend="pallas"`` replaces the host
     NumPy feature pre-pass with the device scan kernels in
     ``kernels/features/``: raw trace columns are shipped once, features are
     extracted on device, and batches become device-side slices
     (bit-identical to the NumPy path; see docs/engine.md).
 
-``core.simulate.simulate_trace`` is a thin wrapper over this engine; the
-original host-loop implementation survives as ``simulate_trace_legacy`` and
-the test suite holds the two to float32-level agreement.
+``repro.api.Session`` / ``TrainedModel.simulate`` are the supported entry
+points; ``core.simulate.simulate_trace`` survives as a deprecation shim and
+the original host-loop implementation as ``simulate_trace_legacy``, which
+the test suite holds the engine to.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, Iterator, Optional
+from typing import Dict, Iterator, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -47,7 +50,7 @@ from ..core.dataset import INPUT_KEYS, num_windows, stream_batches
 from ..core.features import FeatureSet, extract_features
 from ..core.model import TaoConfig, tao_forward
 from ..distributed.sharding import logical_to_spec
-from ..uarch.isa import DLEVEL_L2
+from .metrics import DEFAULT_METRICS, MetricSpec, StepContext, resolve_metrics
 
 # NOTE: repro.kernels.features.ops is imported lazily inside simulate();
 # a module-level import would close an import cycle (kernels.features.ops
@@ -57,6 +60,9 @@ from ..uarch.isa import DLEVEL_L2
 __all__ = [
     "EngineConfig",
     "FEATURE_BACKENDS",
+    "PER_INSTRUCTION_KEYS",
+    "MetricNotCollectedError",
+    "MetricNotComputedError",
     "SimulationResult",
     "StreamingEngine",
     "simulate_trace_engine",
@@ -64,6 +70,15 @@ __all__ = [
 
 
 FEATURE_BACKENDS = ("numpy", "pallas")
+
+# per-instruction prediction arrays the step can emit under collect=True
+PER_INSTRUCTION_KEYS = ("fetch_lat", "exec_lat", "mispred_prob", "dlevel")
+
+# SimulationResult instance attributes that would shadow a same-named
+# metric (instance dict wins over __getattr__)
+_RESERVED_RESULT_ATTRS = frozenset(
+    ("num_instructions", "seconds", "mips", "metrics")
+)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -79,40 +94,101 @@ class EngineConfig:
     # falls back to it when addresses exceed the int32-exact window).
     feature_backend: str = "numpy"
     feature_chunk: int = 512     # Pallas scan grid chunk (trace positions)
+    # device-side accumulators composed into the jitted step: registry names
+    # or MetricSpec instances (see engine.metrics / docs/api.md)
+    metrics: Tuple[Union[str, MetricSpec], ...] = DEFAULT_METRICS
 
 
-@dataclasses.dataclass
+class MetricNotCollectedError(AttributeError):
+    """A per-instruction array was requested but the engine kept metrics on
+    device (``EngineConfig.collect=False``)."""
+
+
+class MetricNotComputedError(AttributeError):
+    """A scalar metric was requested whose ``MetricSpec`` was not part of
+    the simulation's ``EngineConfig.metrics``."""
+
+
 class SimulationResult:
-    cpi: float
-    total_cycles: float
-    branch_mpki: float
-    l1d_mpki: float
-    num_instructions: int
-    seconds: float
-    mips: float
-    # per-instruction predictions (populated only when collected — the
-    # engine keeps metrics on device unless asked for phase plots / DSE)
-    fetch_lat: Optional[np.ndarray] = None
-    exec_lat: Optional[np.ndarray] = None
-    mispred_prob: Optional[np.ndarray] = None
-    dlevel: Optional[np.ndarray] = None
+    """Aggregated metrics of one simulated trace.
+
+    Scalar metrics (whatever the run's ``MetricSpec``s finalized — ``cpi``,
+    ``total_cycles``, ``branch_mpki``, ``l1d_mpki`` with the default set)
+    are attributes and live in ``.metrics``; per-instruction prediction
+    arrays (``fetch_lat``, ``exec_lat``, ``mispred_prob``, ``dlevel``) are
+    attributes only when the run collected them.  ``available_metrics``
+    lists everything present; accessing an uncollected array raises
+    ``MetricNotCollectedError`` and a metric that was never computed raises
+    ``MetricNotComputedError`` (both are ``AttributeError`` subclasses).
+    """
+
+    def __init__(
+        self,
+        num_instructions: int,
+        seconds: float,
+        mips: float,
+        metrics: Optional[Dict[str, float]] = None,
+        arrays: Optional[Dict[str, Optional[np.ndarray]]] = None,
+        **legacy,
+    ):
+        self.num_instructions = num_instructions
+        self.seconds = seconds
+        self.mips = mips
+        self.metrics: Dict[str, float] = dict(metrics or {})
+        self._arrays: Dict[str, Optional[np.ndarray]] = (
+            dict(arrays)
+            if arrays is not None
+            else {k: None for k in PER_INSTRUCTION_KEYS}
+        )
+        # pre-facade keyword layout (cpi=..., fetch_lat=..., ...)
+        for k, v in legacy.items():
+            if k in PER_INSTRUCTION_KEYS:
+                self._arrays[k] = v
+            else:
+                self.metrics[k] = v
+
+    @property
+    def available_metrics(self) -> Tuple[str, ...]:
+        """Scalar metric names plus whichever per-instruction arrays were
+        actually collected."""
+        return tuple(self.metrics) + tuple(
+            k for k, v in self._arrays.items() if v is not None
+        )
+
+    def __getattr__(self, name: str):
+        if name.startswith("_"):
+            raise AttributeError(name)
+        d = self.__dict__
+        metrics = d.get("metrics", {})
+        if name in metrics:
+            return metrics[name]
+        arrays = d.get("_arrays", {})
+        if name in arrays:
+            v = arrays[name]
+            if v is None:
+                raise MetricNotCollectedError(
+                    f"per-instruction array {name!r} was not collected "
+                    f"(metrics stayed on device): simulate with collect=True "
+                    f"(EngineConfig.collect). available_metrics="
+                    f"{self.available_metrics}"
+                )
+            return v
+        raise MetricNotComputedError(
+            f"metric {name!r} was not computed by this simulation; "
+            f"available_metrics={self.available_metrics} (request its "
+            f"MetricSpec via EngineConfig.metrics / simulate(metrics=...))"
+        )
 
     def error_vs(self, truth_cpi: float) -> float:
         return abs(self.cpi - truth_cpi) / truth_cpi * 100.0
 
-
-def _zero_carry() -> Dict[str, jnp.ndarray]:
-    # mispred/l1d are exact int32 counts (good to 2^31 instructions per
-    # trace); the instruction count itself is computed host-side from the
-    # window grid, so only fetch_sum carries float rounding.
-    f = jnp.zeros((), jnp.float32)
-    i = jnp.zeros((), jnp.int32)
-    return {
-        "fetch_sum": f,
-        "mispred": i,
-        "l1d": i,
-        "last_exec": f,
-    }
+    def __repr__(self) -> str:
+        scalars = ", ".join(f"{k}={v:.4g}" for k, v in self.metrics.items())
+        collected = [k for k, v in self._arrays.items() if v is not None]
+        return (
+            f"SimulationResult(n={self.num_instructions}, {scalars}, "
+            f"mips={self.mips:.4g}, collected={collected})"
+        )
 
 
 class _CachedStep:
@@ -151,6 +227,7 @@ class StreamingEngine:
             raise ValueError(
                 f"feature_chunk must be >= 1, got {ecfg.feature_chunk}"
             )
+        self._specs: Tuple[MetricSpec, ...] = resolve_metrics(ecfg.metrics)
         self._batch_axes: tuple = ()
         if ecfg.mesh is not None:
             # the rules table in distributed/sharding.py decides which mesh
@@ -185,6 +262,7 @@ class StreamingEngine:
         collect = self.ecfg.collect
         mesh = self.ecfg.mesh
         axes = self._batch_axes
+        specs = self._specs
 
         def body(params, carry, batch):
             entry.compiles += 1  # runs at trace time only
@@ -204,31 +282,40 @@ class StreamingEngine:
                 for a in axes:  # row-major linear index over the batch axes
                     shard = shard * mesh.shape[a] + jax.lax.axis_index(a)
                 gidx = (shard * n_local + jnp.arange(n_local)).astype(jnp.float32)
+
+                def psum(x):
+                    return jax.lax.psum(x, axes)
+
+                def pmax(x):
+                    return jax.lax.pmax(x, axes)
+
             else:
                 gidx = jnp.arange(n_local, dtype=jnp.float32)
+
+                def psum(x):
+                    return x
+
+                pmax = psum
             # key of the globally-last valid position (-1 when none local)
-            last_key = jnp.max(jnp.where(on, gidx, -1.0))
+            last_key = pmax(jnp.max(jnp.where(on, gidx, -1.0)))
 
-            part = {
-                "fetch_sum": (fetch * valid).sum(dtype=jnp.float32),
-                "mispred": ((misp > 0.5) & br).sum(dtype=jnp.int32),
-                "l1d": ((dlev >= DLEVEL_L2) & mem).sum(dtype=jnp.int32),
-            }
-            if mesh is not None:
-                part = jax.lax.psum(part, axes)
-                last_key = jax.lax.pmax(last_key, axes)
-                # exec latency at the winning key lives on exactly one shard
-                exec_tail = jax.lax.psum(
-                    jnp.where(gidx == last_key, execl, 0.0).sum(dtype=jnp.float32),
-                    axes,
-                )
-            else:
-                exec_tail = execl[jnp.argmax(jnp.where(on, gidx, -1.0)).astype(jnp.int32)]
-
-            new_carry = {k: carry[k] + part[k] for k in part}
-            new_carry["last_exec"] = jnp.where(
-                last_key >= 0, exec_tail, carry["last_exec"]
+            ctx = StepContext(
+                valid=valid,
+                on=on,
+                is_branch=br,
+                is_mem=mem,
+                fetch_lat=fetch,
+                exec_lat=execl,
+                mispred_prob=misp,
+                dlevel=dlev,
+                gidx=gidx,
+                last_key=last_key,
+                psum=psum,
+                pmax=pmax,
+                sharded=mesh is not None,
+                batch=batch,
             )
+            new_carry = {s.name: s.update(carry[s.name], ctx) for s in specs}
             if collect:
                 per = {
                     "fetch_lat": fetch,
@@ -253,9 +340,7 @@ class StreamingEngine:
             from jax.experimental.shard_map import shard_map
 
         per_specs = (
-            {k: batched for k in ("fetch_lat", "exec_lat", "mispred_prob", "dlevel")}
-            if collect
-            else {}
+            {k: batched for k in PER_INSTRUCTION_KEYS} if collect else {}
         )
         mapped = shard_map(
             body,
@@ -276,6 +361,7 @@ class StreamingEngine:
                 self.ecfg.batch_size,
                 self.ecfg.collect,
                 self.ecfg.mesh,
+                self._specs,
                 w_eff,
             )
             entry = _STEP_CACHE.get(key)
@@ -285,6 +371,16 @@ class StreamingEngine:
                 _STEP_CACHE[key] = entry
             self._steps[w_eff] = entry
         return entry.fn
+
+    def step_entry_for(self, n: int) -> _CachedStep:
+        """The cached step entry ``simulate`` will use for a trace of
+        length ``n`` (created lazily; its ``compiles`` counter lets callers
+        like the sweep scheduler attribute compilations precisely)."""
+        if n < 1:
+            raise ValueError("cannot simulate an empty trace")
+        w_eff = min(self.cfg.window, n)
+        self._get_step(w_eff)
+        return self._steps[w_eff]
 
     # ---- streaming -----------------------------------------------------
 
@@ -385,7 +481,7 @@ class StreamingEngine:
                 else (self._device_put(b) for b in host_batches)
             )
 
-        carry = _zero_carry()
+        carry = {s.name: s.init() for s in self._specs}
         pers = []
         for batch in batches:
             carry, per = step(self.params, carry, batch)
@@ -393,11 +489,27 @@ class StreamingEngine:
                 pers.append(per)
 
         carry = jax.device_get(carry)  # single host sync for the whole trace
-        total = float(carry["fetch_sum"] + carry["last_exec"])
+        metrics: Dict[str, float] = {}
+        for s in self._specs:
+            out = s.finalize(carry[s.name], count)
+            clash = set(out) & set(metrics)
+            if clash:
+                raise ValueError(
+                    f"metric spec {s.name!r} finalized key(s) {sorted(clash)} "
+                    "already emitted by an earlier spec in this run"
+                )
+            reserved = set(out) & _RESERVED_RESULT_ATTRS
+            if reserved:
+                raise ValueError(
+                    f"metric spec {s.name!r} finalized reserved key(s) "
+                    f"{sorted(reserved)}: SimulationResult instance "
+                    "attributes would shadow them"
+                )
+            metrics.update(out)
         secs = time.perf_counter() - t0
 
         arrays: Dict[str, Optional[np.ndarray]] = {
-            "fetch_lat": None, "exec_lat": None, "mispred_prob": None, "dlevel": None
+            k: None for k in PER_INSTRUCTION_KEYS
         }
         if self.ecfg.collect and pers:
             for k in arrays:
@@ -406,14 +518,11 @@ class StreamingEngine:
                 )[:count]
 
         return SimulationResult(
-            cpi=total / max(count, 1),
-            total_cycles=total,
-            branch_mpki=1000.0 * float(carry["mispred"]) / max(count, 1),
-            l1d_mpki=1000.0 * float(carry["l1d"]) / max(count, 1),
             num_instructions=count,
             seconds=secs,
             mips=count / 1e6 / secs,
-            **arrays,
+            metrics=metrics,
+            arrays=arrays,
         )
 
 
@@ -426,6 +535,7 @@ def simulate_trace_engine(
     collect: bool = False,
     mesh: Optional[Mesh] = None,
     feature_backend: str = "numpy",
+    metrics: Tuple[Union[str, MetricSpec], ...] = DEFAULT_METRICS,
 ) -> SimulationResult:
     """One-shot convenience wrapper: build an engine, stream one trace."""
     engine = StreamingEngine(
@@ -436,6 +546,7 @@ def simulate_trace_engine(
             collect=collect,
             mesh=mesh,
             feature_backend=feature_backend,
+            metrics=metrics,
         ),
     )
     return engine.simulate(func_trace, features=features)

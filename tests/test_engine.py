@@ -16,7 +16,7 @@ from repro.core import (
     window_view,
 )
 from repro.core.simulate import simulate_trace, simulate_trace_legacy
-from repro.engine import EngineConfig, StreamingEngine
+from repro.engine import EngineConfig, MetricNotCollectedError, StreamingEngine
 from repro.uarch import get_benchmark, run_functional
 
 FCFG = FeatureConfig(n_buckets=32, n_queue=4, n_mem=8)
@@ -134,12 +134,18 @@ def test_engine_single_compile_across_uneven_batches(params, trace):
     assert engine.num_compiles == 1, engine.num_compiles
     for r in (r1, r2, r3):
         assert np.isfinite(r.cpi) and r.cpi > 0
-        assert r.fetch_lat is None  # metrics stayed on device
+        # metrics stayed on device: per-instruction arrays not collected
+        assert "fetch_lat" not in r.available_metrics
+        with pytest.raises(MetricNotCollectedError):
+            r.fetch_lat
 
 
 def test_engine_collect_off_keeps_metrics_on_device(params, trace):
     eng = simulate_trace(params, trace, CFG, collect=False)
-    assert eng.fetch_lat is None and eng.dlevel is None
+    with pytest.raises(MetricNotCollectedError):
+        eng.fetch_lat
+    with pytest.raises(MetricNotCollectedError):
+        eng.dlevel
     full = simulate_trace(params, trace, CFG, collect=True)
     assert np.isclose(eng.cpi, full.cpi, rtol=1e-6)
     assert eng.branch_mpki == full.branch_mpki
