@@ -7,13 +7,15 @@
   bench_dse        Fig 15    design-space exploration
                    + "sweep": async Session.sweep scheduler stats
                      (traces/s, compiles, queue occupancy)
+  bench_train      (systems) streaming vs materialized training pipeline
+                     (windows/s, peak RSS, compile counts)
   bench_kernels    (systems) chunked attention / SSD formulations
 
 Prints ``name,us_per_call,derived`` CSV.  BENCH_SCALE=tiny|small|full
 controls trace lengths / epochs (CPU container defaults to small; CI smoke
 uses tiny).  Run a subset: ``python -m benchmarks.run --only fig9,table4``.
 ``--json PATH`` additionally writes the rows as structured JSON (the CI
-bench-smoke job uploads ``BENCH_timing.json`` and ``BENCH_dse.json`` as
+bench-smoke job uploads ``BENCH_timing.json``, ``BENCH_dse.json``, and ``BENCH_train.json`` as
 artifacts so the perf trajectory — including the async sweep scheduler's
 numbers — is tracked per PR).
 """
@@ -31,6 +33,7 @@ from . import (
     bench_kernels,
     bench_sweeps,
     bench_timing,
+    bench_train,
     bench_transfer,
 )
 from .common import SCALE, emit, rows
@@ -42,6 +45,7 @@ SUITES = {
     "fig13_14_t5": bench_transfer.run,
     "fig15": bench_dse.run,
     "sweep": bench_dse.run_sweep,
+    "training": bench_train.run,
     "kernels": bench_kernels.run,
 }
 

@@ -6,10 +6,15 @@
     JointModel   §4.3 shared-embedding training result
     DesignSpace  design sampling + training-pair selection
 
-plus the engine's pluggable metric surface (``MetricSpec`` /
+``Session.dataset`` returns a materialized ``WindowDataset`` or — at and
+above ``streaming_threshold`` instructions — an O(trace + batch)
+``StreamingWindowDataset`` (bit-identical training trajectories; see
+docs/api.md "Streaming training"), plus the engine's pluggable metric
+surface (``MetricSpec`` /
 ``register_metric``) and the sweep scheduler's report type.  See
 ``docs/api.md`` for concepts and the MetricSpec authoring guide.
 """
+from ..core.dataset import StreamingWindowDataset, WindowDataset
 from ..engine.metrics import (
     DEFAULT_METRICS,
     METRIC_REGISTRY,
@@ -32,6 +37,8 @@ __all__ = [
     "TrainedModel",
     "JointModel",
     "DesignSpace",
+    "WindowDataset",
+    "StreamingWindowDataset",
     "EngineConfig",
     "SimulationResult",
     "MetricSpec",

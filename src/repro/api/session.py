@@ -35,7 +35,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.dataset import WindowDataset, build_windows, concat_datasets
+from ..core.dataset import (
+    StreamingWindowDataset,
+    WindowDataset,
+    build_windows,
+    concat_datasets,
+)
 from ..core.align import build_adjusted_trace
 from ..core.features import FeatureSet, extract_features
 from ..core.model import TaoConfig, init_tao
@@ -69,6 +74,8 @@ __all__ = [
 ]
 
 Metrics = Tuple[Union[str, MetricSpec], ...]
+# Session.dataset returns either flavor; both feed train/train_joint/transfer
+Dataset = Union[WindowDataset, StreamingWindowDataset]
 
 # warn when one model accumulates this many engine configs (usually a sign
 # of per-call inline MetricSpec construction — each config = an XLA compile)
@@ -196,7 +203,7 @@ class TrainedModel:
 
     def transfer(
         self,
-        dataset: WindowDataset,
+        dataset: "Dataset",
         *,
         freeze_embed: bool = True,
         epochs: int = 10,
@@ -291,7 +298,7 @@ class JointModel:
 
     def transfer(
         self,
-        dataset: WindowDataset,
+        dataset: "Dataset",
         *,
         donor: str = "A",
         epochs: int = 10,
@@ -428,14 +435,22 @@ class Session:
         batch_size: int = 64,
         feature_backend: str = "numpy",
         seed: int = 0,
+        streaming_threshold: Optional[int] = 1_000_000,
     ):
         self.cfg = cfg if cfg is not None else TaoConfig()
         self.batch_size = batch_size
         self.feature_backend = feature_backend
         self.seed = seed
+        # dataset()/train() switch to the O(trace + batch) streaming
+        # pipeline when the traces hold at least this many instructions
+        # combined (None disables the automatic switch); pass
+        # ``streaming=True/False`` per call to override.  Below the
+        # threshold the materialized WindowDataset is kept — small runs,
+        # subsample(), and the equivalence tests rely on it.
+        self.streaming_threshold = streaming_threshold
         self._traces: Dict[tuple, Trace] = {}
         # key -> (pinned traces, dataset); see Session.dataset
-        self._datasets: Dict[tuple, Tuple[Tuple[Trace, ...], WindowDataset]] = {}
+        self._datasets: Dict[tuple, Tuple[Tuple[Trace, ...], Dataset]] = {}
         # (uarch key, id(trace)) -> (pinned trace, detailed trace, summary):
         # ground_truth and dataset share one detailed-sim run per pair (the
         # most expensive operation in the workflow)
@@ -494,34 +509,69 @@ class Session:
         traces: Union[Trace, Iterable[Trace]],
         *,
         dedup: bool = True,
-    ) -> WindowDataset:
+        streaming: Optional[bool] = None,
+        dedup_scope: str = "trace",
+    ) -> Dataset:
         """Detailed-sim each trace on ``uarch``, re-attribute squash/nop
-        cycles (§4.1), extract features, window, and concatenate."""
+        cycles (§4.1), extract features, window, and concatenate.
+
+        ``streaming=None`` (default) picks the pipeline by size: at or above
+        ``Session.streaming_threshold`` combined instructions the result is
+        a ``StreamingWindowDataset`` — zero-copy window views + streaming
+        dedup, O(trace + batch) host memory, bit-identical training
+        trajectory — otherwise a materialized ``WindowDataset``.
+        ``dedup_scope="global"`` (streaming pipeline only) shares the dedup
+        reservoir across traces; the default per-trace scope matches the
+        materialized pipeline exactly."""
         if isinstance(traces, Trace):
             traces = [traces]
         traces = list(traces)
+        if streaming is None:
+            streaming = (
+                self.streaming_threshold is not None
+                and sum(len(t) for t in traces) >= self.streaming_threshold
+            )
+        if dedup_scope != "trace" and not streaming:
+            raise ValueError(
+                "dedup_scope is a streaming-pipeline option; the "
+                "materialized pipeline always dedups per trace (pass "
+                "streaming=True for cross-trace dedup)"
+            )
         # key on the trace objects themselves (captures are session-cached,
         # so the normal path hits) — names alone could collide across
         # different traces and hand back the wrong windows.  The cache entry
         # pins the Trace objects so an id() is never recycled while its key
         # is live.
         key = (uarch.key(), tuple(id(t) for t in traces), dedup,
-               self.cfg.features, self.cfg.window)
+               bool(streaming), dedup_scope, self.cfg.features,
+               self.cfg.window)
         cached = self._datasets.get(key)
         if cached is not None:
             return cached[1]
-        parts = []
-        for tr in traces:
-            det, _ = self._run_detailed(uarch, tr)
-            al = build_adjusted_trace(det)
-            parts.append(
-                build_windows(
-                    extract_features(al.adjusted, self.cfg.features),
-                    self.cfg.window,
-                    dedup=dedup,
-                )
+        if streaming:
+            # keep only the per-trace FeatureSets (O(trace)); windowing,
+            # dedup, and batch materialization all stream from views
+            fsets = []
+            for tr in traces:
+                det, _ = self._run_detailed(uarch, tr)
+                al = build_adjusted_trace(det)
+                fsets.append(extract_features(al.adjusted, self.cfg.features))
+            ds: Dataset = StreamingWindowDataset(
+                fsets, self.cfg.window, dedup=dedup, dedup_scope=dedup_scope
             )
-        ds = concat_datasets(parts)
+        else:
+            parts = []
+            for tr in traces:
+                det, _ = self._run_detailed(uarch, tr)
+                al = build_adjusted_trace(det)
+                parts.append(
+                    build_windows(
+                        extract_features(al.adjusted, self.cfg.features),
+                        self.cfg.window,
+                        dedup=dedup,
+                    )
+                )
+            ds = concat_datasets(parts)
         self._datasets[key] = (tuple(traces), ds)
         return ds
 
@@ -532,7 +582,8 @@ class Session:
         uarch: Optional[MicroArchConfig] = None,
         traces: Optional[Union[Trace, Iterable[Trace]]] = None,
         *,
-        dataset: Optional[WindowDataset] = None,
+        dataset: Optional[Dataset] = None,
+        streaming: Optional[bool] = None,
         epochs: int = 10,
         batch_size: int = 16,
         lr: float = 3e-4,
@@ -544,15 +595,23 @@ class Session:
         name: Optional[str] = None,
     ) -> TrainedModel:
         """Train (or fine-tune) a single-µarch model.  Give ``traces`` and
-        the session builds the adjusted dataset for ``uarch``; or pass a
-        prebuilt ``dataset`` directly."""
+        the session builds the adjusted dataset for ``uarch`` — streaming
+        (O(trace + batch) memory) at or above ``streaming_threshold``
+        combined instructions, materialized below; ``streaming=`` forces
+        either pipeline.  Or pass a prebuilt ``dataset`` directly."""
+        if dataset is not None and streaming is not None:
+            raise ValueError(
+                "streaming= only controls how the session builds a dataset "
+                "from traces; it cannot change an explicit dataset= (pass "
+                "the right flavor directly)"
+            )
         if dataset is None:
             if uarch is None or traces is None:
                 raise ValueError(
                     "train needs (uarch, traces) to build a dataset, or an "
                     "explicit dataset="
                 )
-            dataset = self.dataset(uarch, traces)
+            dataset = self.dataset(uarch, traces, streaming=streaming)
         init_params = init.params if isinstance(init, TrainedModel) else init
         res = train_tao_impl(
             self.cfg,
@@ -586,7 +645,8 @@ class Session:
         uarch_b: MicroArchConfig,
         traces: Optional[Union[Trace, Iterable[Trace]]] = None,
         *,
-        datasets: Optional[Tuple[WindowDataset, WindowDataset]] = None,
+        datasets: Optional[Tuple[Dataset, Dataset]] = None,
+        streaming: Optional[bool] = None,
         method: str = "tao",
         epochs: int = 6,
         batch_size: int = 16,
@@ -602,12 +662,18 @@ class Session:
         if method not in METHODS:
             raise ValueError(f"method {method!r} not in {METHODS}")
         if datasets is not None:
+            if streaming is not None:
+                raise ValueError(
+                    "streaming= only controls how the session builds "
+                    "datasets from traces; it cannot change explicit "
+                    "datasets= (pass the right flavor directly)"
+                )
             ds_a, ds_b = datasets
         else:
             if traces is None:
                 raise ValueError("train_joint needs traces= or datasets=")
-            ds_a = self.dataset(uarch_a, traces)
-            ds_b = self.dataset(uarch_b, traces)
+            ds_a = self.dataset(uarch_a, traces, streaming=streaming)
+            ds_b = self.dataset(uarch_b, traces, streaming=streaming)
         short = min(len(ds_a), len(ds_b))
         if short < batch_size:
             raise ValueError(
@@ -626,12 +692,25 @@ class Session:
         steps = 0
         import time as _time
 
+        from ..engine.runner import prefetch_to_device
+
         t0 = _time.perf_counter()
         for ep in range(epochs):
             m = None
+            # inline (depth-1) prefetch for BOTH datasets: batch i+1's
+            # host gather + transfer is enqueued while step(i) runs.
+            # Deliberately not the threaded mode: the two generators share
+            # one rng (shuffle drawn lazily at first next, A then B), and
+            # producer threads would race on it — inline wrapping consumes
+            # the rng in exactly the pre-prefetch order, keeping the batch
+            # streams bit-identical.
             for ba, bb in zip(
-                ds_a.batches(batch_size, rng=rng),
-                ds_b.batches(batch_size, rng=rng),
+                prefetch_to_device(
+                    ds_a.batches(batch_size, rng=rng), threaded=False
+                ),
+                prefetch_to_device(
+                    ds_b.batches(batch_size, rng=rng), threaded=False
+                ),
             ):
                 ba["labels"] = {k: jnp.asarray(v) for k, v in ba.pop("labels").items()}
                 bb["labels"] = {k: jnp.asarray(v) for k, v in bb.pop("labels").items()}

@@ -1,9 +1,11 @@
 """Tao's core contributions (paper §4) as composable modules."""
 from .align import AlignedTrace, build_adjusted_trace, verify_alignment
 from .dataset import (
+    StreamingWindowDataset,
     WindowDataset,
     build_windows,
     concat_datasets,
+    iter_window_digests,
     num_windows,
     stream_batches,
     window_view,
@@ -55,9 +57,11 @@ __all__ = [
     "AlignedTrace",
     "build_adjusted_trace",
     "verify_alignment",
+    "StreamingWindowDataset",
     "WindowDataset",
     "build_windows",
     "concat_datasets",
+    "iter_window_digests",
     "num_windows",
     "stream_batches",
     "window_view",

@@ -28,7 +28,7 @@ import numpy as np
 
 from ..engine.runner import SimulationResult, simulate_trace_engine
 from ..uarch.isa import DLEVEL_L2
-from .dataset import build_windows
+from .dataset import stream_batches
 from .features import FeatureSet, extract_features_reference
 from .model import TaoConfig, tao_forward
 
@@ -80,24 +80,28 @@ def simulate_trace_legacy(
 ) -> SimulationResult:
     """Pre-engine host batch loop (reference implementation).
 
-    Kept verbatim apart from one fix: the branch/memory masks are now taken
-    with a single length-safe slice (the old double-slice under-filled the
-    masks when the window grid overran the trace).  Uses the reference
-    (interpreter-loop) feature extractor so it stays a faithful pre-refactor
-    baseline end to end.
+    Kept numerically verbatim apart from one fix: the branch/memory masks
+    are taken with a single length-safe slice (the old double-slice
+    under-filled the masks when the window grid overran the trace).  Uses
+    the reference (interpreter-loop) feature extractor so it stays a
+    faithful pre-refactor baseline end to end.  The windows now come from
+    ``stream_batches`` over zero-copy views (``pad=False`` reproduces the
+    old ragged batch slicing exactly) instead of a ``build_windows``
+    materialization, so this labeling-side path no longer makes a full
+    window copy of the trace — identical batch contents, O(batch) memory.
     """
     t0 = time.perf_counter()
     fs = features if features is not None else extract_features_reference(
         func_trace, cfg.features, with_labels=False
     )
-    ds = build_windows(fs, cfg.window, stride=cfg.window, dedup=False)
-    n_windows = len(ds)
 
     fwd = jax.jit(lambda p, b: tao_forward(p, b, cfg))
 
     fetch, execl, misp, dlev = [], [], [], []
-    for lo in range(0, n_windows, batch_size):
-        batch = {k: v[lo : lo + batch_size] for k, v in ds.inputs.items()}
+    for batch in stream_batches(
+        fs, cfg.window, batch_size, stride=cfg.window, pad=False
+    ):
+        batch.pop("valid")  # the legacy loop never padded: batches are ragged
         out = fwd(params, batch)
         fetch.append(np.asarray(out["fetch_lat"], np.float32))
         execl.append(np.asarray(out["exec_lat"], np.float32))

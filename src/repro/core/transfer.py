@@ -12,17 +12,23 @@ from __future__ import annotations
 import dataclasses
 import time
 import warnings
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from ..train.optim import AdamWConfig, adamw_init, adamw_update
-from .dataset import WindowDataset
+from ..train.trainer import cached_train_step
+from .dataset import StreamingWindowDataset, WindowDataset
 from .model import TaoConfig, init_tao, multi_metric_loss, tao_forward
 
 __all__ = ["TrainResult", "train_tao", "train_tao_impl", "transfer_finetune"]
+
+# Both dataset flavors expose the same ``batches(batch_size, rng=...)``
+# contract (bit-identical streams for the same rng); everything below is
+# agnostic to which one it is handed.
+TrainData = Union[WindowDataset, StreamingWindowDataset]
 
 
 @dataclasses.dataclass
@@ -35,55 +41,77 @@ class TrainResult:
 
 
 def _make_step(cfg: TaoConfig, opt_cfg: AdamWConfig, trainable: str):
-    """trainable: 'all' or 'headonly' (freeze shared embeddings)."""
+    """trainable: 'all' or 'headonly' (freeze shared embeddings).
 
-    def loss_fn(params, batch):
-        preds = tao_forward(params, batch, cfg)
-        loss, _ = multi_metric_loss(preds, batch["labels"])
-        return loss
+    The step is cached process-wide (``train.trainer.cached_train_step``):
+    params and optimizer state are arguments, so every trainer invocation
+    with the same (config, optimizer, trainable set) shares one executable,
+    and — because batches are fixed-shape — it traces exactly once per
+    (batch, window) geometry."""
 
-    if trainable == "all":
+    def build(entry):
+        def loss_fn(params, batch):
+            preds = tao_forward(params, batch, cfg)
+            loss, _ = multi_metric_loss(preds, batch["labels"])
+            return loss
+
+        if trainable == "all":
+
+            @jax.jit
+            def step(params, opt, batch):
+                entry.compiles += 1  # runs at trace time only
+                loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+                params, opt, _ = adamw_update(params, grads, opt, opt_cfg)
+                return params, opt, loss
+
+            return step
 
         @jax.jit
         def step(params, opt, batch):
-            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
-            params, opt, _ = adamw_update(params, grads, opt, opt_cfg)
-            return params, opt, loss
+            entry.compiles += 1  # runs at trace time only
+            # Freeze the shared embedding group: grads only for adapt+pred.
+            def loss_head(head_params, embed_params, batch):
+                full = {"embed": embed_params, **head_params}
+                return loss_fn(full, batch)
+
+            head = {"adapt": params["adapt"], "pred": params["pred"]}
+            loss, grads = jax.value_and_grad(loss_head)(head, params["embed"], batch)
+            head, opt, _ = adamw_update(head, grads, opt, opt_cfg)
+            return {"embed": params["embed"], **head}, opt, loss
 
         return step
 
-    @jax.jit
-    def step(params, opt, batch):
-        # Freeze the shared embedding group: grads only for adapt+pred.
-        def loss_head(head_params, embed_params, batch):
-            full = {"embed": embed_params, **head_params}
-            return loss_fn(full, batch)
-
-        head = {"adapt": params["adapt"], "pred": params["pred"]}
-        loss, grads = jax.value_and_grad(loss_head)(head, params["embed"], batch)
-        head, opt, _ = adamw_update(head, grads, opt, opt_cfg)
-        return {"embed": params["embed"], **head}, opt, loss
-
-    return step
+    return cached_train_step(("tao", cfg, opt_cfg, trainable), build).fn
 
 
 def _run_epochs(
     params,
     step,
-    dataset: WindowDataset,
+    dataset: TrainData,
     epochs: int,
     batch_size: int,
     opt,
     eval_fn: Optional[Callable] = None,
     seed: int = 0,
     target_loss: Optional[float] = None,
+    prefetch: bool = True,
 ) -> Tuple[Dict, List[float], List[float], int]:
+    # lazy: engine.runner imports core.dataset — a module-level import here
+    # would close the cycle through the repro.core package init
+    from ..engine.runner import prefetch_to_device
+
     rng = np.random.default_rng(seed)
     losses, evals = [], []
     steps = 0
     for ep in range(epochs):
         ep_loss, nb = 0.0, 0
-        for batch in dataset.batches(batch_size, rng=rng):
+        batches = dataset.batches(batch_size, rng=rng)
+        if prefetch:
+            # double-buffered host→device transfer (and, on accelerator
+            # backends, threaded batch gather) — numerics are unchanged:
+            # the step sees the same arrays, just already device-resident
+            batches = prefetch_to_device(batches)
+        for batch in batches:
             params, opt, loss = step(params, opt, batch)
             ep_loss += float(loss)
             nb += 1
@@ -99,7 +127,7 @@ def _run_epochs(
 
 def train_tao_impl(
     cfg: TaoConfig,
-    dataset: WindowDataset,
+    dataset: TrainData,
     *,
     epochs: int = 10,
     batch_size: int = 16,
@@ -115,6 +143,10 @@ def train_tao_impl(
     scratch            -> init_params=None,  freeze_embed=False
     direct fine-tune   -> init_params=donor, freeze_embed=False
     shared + fine-tune -> init_params={'embed': shared, ...}, freeze_embed=True
+
+    ``dataset`` may be a materialized ``WindowDataset`` or a
+    ``StreamingWindowDataset`` (O(trace + batch) host memory); both produce
+    bit-identical loss trajectories for the same seed and keep-set.
 
     Internal implementation behind ``repro.api.Session.train`` /
     ``TrainedModel.transfer`` (and the ``train_tao`` deprecation shim).
@@ -141,7 +173,7 @@ def train_tao_impl(
     )
 
 
-def train_tao(cfg: TaoConfig, dataset: WindowDataset, **kw) -> TrainResult:
+def train_tao(cfg: TaoConfig, dataset: TrainData, **kw) -> TrainResult:
     """Deprecated alias for :func:`train_tao_impl` — use the
     ``repro.api`` facade instead (``Session.train`` / ``model.transfer``)."""
     warnings.warn(
@@ -157,7 +189,7 @@ def transfer_finetune(
     cfg: TaoConfig,
     shared_embed: Dict,
     donor_arch_params: Dict,
-    small_dataset: WindowDataset,
+    small_dataset: TrainData,
     **kw,
 ) -> TrainResult:
     """Tao's fast path: frozen shared embeddings + donor-initialized heads,

@@ -38,6 +38,8 @@ the test suite holds the engine to.
 from __future__ import annotations
 
 import dataclasses
+import queue
+import threading
 import time
 from typing import Dict, Iterator, Optional, Tuple, Union
 
@@ -65,8 +67,120 @@ __all__ = [
     "MetricNotComputedError",
     "SimulationResult",
     "StreamingEngine",
+    "prefetch_to_device",
     "simulate_trace_engine",
 ]
+
+
+# ---------------------------------------------------------------------------
+# Host→device prefetch, shared by the simulation engine and the streaming
+# training pipeline (core/transfer.py).
+# ---------------------------------------------------------------------------
+
+_PREFETCH_STOP = object()
+
+
+def _threaded_prefetch(host_batches, put, depth: int) -> Iterator:
+    q: "queue.Queue" = queue.Queue(maxsize=depth)
+    stop = threading.Event()
+    error: list = []
+
+    def produce():
+        try:
+            for b in host_batches:
+                dev = put(b)
+                while not stop.is_set():
+                    try:
+                        q.put(dev, timeout=0.1)
+                        break
+                    except queue.Full:
+                        continue
+                if stop.is_set():
+                    return
+        except BaseException as e:  # re-raised in the consumer
+            error.append(e)
+        finally:
+            while not stop.is_set():
+                try:
+                    q.put(_PREFETCH_STOP, timeout=0.1)
+                    break
+                except queue.Full:
+                    continue
+
+    producer = threading.Thread(
+        target=produce, name="batch-prefetch", daemon=True
+    )
+    producer.start()
+    try:
+        while True:
+            item = q.get()
+            if item is _PREFETCH_STOP:
+                break
+            yield item
+    finally:
+        # normal exhaustion, consumer error, or an abandoned generator:
+        # unpark the producer and drop prepared-but-unconsumed batches
+        stop.set()
+        while True:
+            try:
+                q.get_nowait()
+            except queue.Empty:
+                break
+        producer.join()
+        if error:
+            raise error[0]
+
+
+def prefetch_to_device(
+    host_batches: Iterator,
+    device_put=None,
+    *,
+    threaded: Optional[bool] = None,
+    depth: int = 2,
+) -> Iterator:
+    """Double-buffered host→device prefetch over a batch iterator.
+
+    Two modes, following the sweep scheduler's measured policy
+    (``engine/scheduler.py``):
+
+    * **inline** (CPU default): batch i+1's transfer is enqueued before
+      batch i is yielded — copy overlaps compute with zero thread overhead.
+      On a CPU-only backend a producer thread would contend with the
+      consumer's own compute for the same cores.
+    * **threaded** (accelerator default): a daemon producer thread pushes
+      transfers into a bounded queue ``depth`` deep, so the *host-side*
+      work of producing batch i+1 (window gather, padding) also overlaps
+      device execution of batch i.
+
+    ``depth`` only shapes the threaded queue; inline mode is inherently
+    one-ahead (depth 1) — a deeper inline buffer would just hold more
+    host batches alive without adding overlap, since the consumer and
+    producer share one thread.
+
+    Producer errors re-raise in the consumer; abandoning the generator
+    (``close()`` / early break) stops the producer thread.
+    """
+    if depth < 1:
+        raise ValueError(f"prefetch depth must be >= 1, got {depth}")
+    put = device_put if device_put is not None else jax.device_put
+    if threaded is None:
+        threaded = jax.default_backend() != "cpu"
+    if threaded:
+        return _threaded_prefetch(host_batches, put, depth)
+
+    def inline():
+        it = iter(host_batches)
+        try:
+            cur = put(next(it))
+        except StopIteration:
+            return
+        for nxt in it:
+            nxt_dev = put(nxt)
+            yield cur
+            cur = nxt_dev
+        yield cur
+
+    return inline()
 
 
 FEATURE_BACKENDS = ("numpy", "pallas")
@@ -394,17 +508,9 @@ class StreamingEngine:
         return jax.device_put(batch)
 
     def _prefetched(self, host_batches: Iterator[Dict]) -> Iterator[Dict]:
-        """Enqueue batch i+1's transfer before batch i is consumed."""
-        it = iter(host_batches)
-        try:
-            cur = self._device_put(next(it))
-        except StopIteration:
-            return
-        for nxt in it:
-            nxt_dev = self._device_put(nxt)
-            yield cur
-            cur = nxt_dev
-        yield cur
+        """Enqueue batch i+1's transfer before batch i is consumed (inline
+        on CPU, threaded producer on accelerator backends)."""
+        return prefetch_to_device(host_batches, self._device_put)
 
     def _device_batches(
         self, arrays: Dict, w_eff: int, count: int

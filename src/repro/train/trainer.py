@@ -25,7 +25,82 @@ from ..distributed.sharding import logical_to_spec, shard
 from ..models.backbone import Model
 from .optim import AdamWConfig, AdamWState, adamw_init, adamw_update, make_lr_schedule
 
-__all__ = ["TrainConfig", "TrainState", "make_train_step", "init_state", "state_axes"]
+__all__ = [
+    "TrainConfig",
+    "TrainState",
+    "make_train_step",
+    "init_state",
+    "state_axes",
+    "CachedTrainStep",
+    "cached_train_step",
+    "train_step_compiles",
+]
+
+
+# ---------------------------------------------------------------------------
+# Process-wide train-step cache (mirrors the simulation engine's step cache
+# in engine/runner.py).  Parameters and optimizer state are *arguments* of
+# every step built through here, so trainer invocations with an identical
+# (model config, optimizer config, trainable set) key — and every model of
+# the same shape — share one executable instead of re-jitting per call.
+# ---------------------------------------------------------------------------
+
+
+class CachedTrainStep:
+    """A jitted train step plus its trace counter.
+
+    ``compiles`` is bumped inside the traced body (trace time only), so it
+    counts actual XLA compilations: with fixed-shape batches that is exactly
+    one per (batch, window) geometry — the invariant the streaming training
+    pipeline's tests and ``benchmarks/bench_train.py`` pin.
+    """
+
+    __slots__ = ("fn", "compiles")
+
+    def __init__(self):
+        self.fn = None
+        self.compiles = 0
+
+
+_TRAIN_STEP_CACHE: Dict[tuple, CachedTrainStep] = {}
+
+# warn when the cache accumulates this many entries: each one pins a jitted
+# step (and its XLA executables) for process lifetime — usually a sign of a
+# hyperparameter sweep varying the optimizer config per call
+_TRAIN_CACHE_WARN = 16
+
+
+def cached_train_step(key: tuple, build) -> CachedTrainStep:
+    """The cached step entry for ``key``, built once via ``build(entry)``.
+
+    ``build`` receives the entry so the step body can bump
+    ``entry.compiles`` when traced; the key must cover everything the built
+    closure depends on (configs, trainable set, method — NOT params, which
+    are arguments).
+    """
+    entry = _TRAIN_STEP_CACHE.get(key)
+    if entry is None:
+        entry = CachedTrainStep()
+        entry.fn = build(entry)
+        _TRAIN_STEP_CACHE[key] = entry
+        if len(_TRAIN_STEP_CACHE) == _TRAIN_CACHE_WARN:
+            import warnings
+
+            warnings.warn(
+                f"{len(_TRAIN_STEP_CACHE)} train-step configurations cached "
+                "process-wide — each pins a compiled executable for process "
+                "lifetime. Sweeping lr/optimizer settings per call creates "
+                "one entry each; reuse configs where possible.",
+                RuntimeWarning,
+                stacklevel=3,
+            )
+    return entry
+
+
+def train_step_compiles() -> int:
+    """Total train-step traces across the process — snapshot before/after a
+    training run to attribute the compiles it triggered."""
+    return sum(e.compiles for e in _TRAIN_STEP_CACHE.values())
 
 
 @dataclasses.dataclass(frozen=True)

@@ -1,0 +1,327 @@
+"""Streaming training pipeline tests: chunked window digests vs the
+per-row reference, streaming dedup vs the materialized keep-set, seeded
+shuffle determinism, bit-for-bit loss trajectories, the one-compile-per-
+geometry guarantee, and the 1M-instruction memory cap (slow)."""
+import hashlib
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+from repro.api import Session
+from repro.core import FeatureConfig, TaoConfig
+from repro.core.dataset import (
+    StreamingWindowDataset,
+    WindowDataset,
+    build_windows,
+    concat_datasets,
+    iter_window_digests,
+    num_windows,
+    window_view,
+)
+from repro.core.features import NUM_OPCODES, FeatureSet
+from repro.core.transfer import train_tao_impl
+from repro.train.trainer import train_step_compiles
+from repro.uarch import UARCH_A
+from repro.uarch.isa import NUM_REGS
+
+FCFG = FeatureConfig(n_buckets=32, n_queue=4, n_mem=6)
+CFG = TaoConfig(
+    window=17, d_model=32, n_heads=2, n_layers=1, d_ff=64, d_cat=16, features=FCFG
+)
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def make_fs(n, seed=0, with_labels=True, dup_block=None):
+    """Random FeatureSet; ``dup_block=(window, every)`` copies window-aligned
+    block 0 over every ``every``-th block so windows collide byte-for-byte."""
+    rng = np.random.default_rng(seed)
+    labels = None
+    if with_labels:
+        labels = {
+            "fetch_lat": rng.integers(0, 8, n).astype(np.float32),
+            "exec_lat": rng.integers(1, 12, n).astype(np.float32),
+            "mispred": (rng.random(n) < 0.1).astype(np.float32),
+            "dlevel": rng.integers(0, 4, n).astype(np.int32),
+            "icache_miss": (rng.random(n) < 0.05).astype(np.float32),
+            "tlb_miss": (rng.random(n) < 0.02).astype(np.float32),
+            "is_branch": (rng.random(n) < 0.2).astype(np.float32),
+            "is_mem": (rng.random(n) < 0.3).astype(np.float32),
+        }
+    fs = FeatureSet(
+        opcode=rng.integers(0, NUM_OPCODES, n).astype(np.int32),
+        regbits=(rng.random((n, NUM_REGS)) < 0.1).astype(np.float32),
+        flags=(rng.random((n, 5)) < 0.3).astype(np.float32),
+        brhist=rng.integers(-1, 2, (n, FCFG.n_queue)).astype(np.float32),
+        memdist=rng.standard_normal((n, FCFG.n_mem)).astype(np.float32),
+        labels=labels,
+    )
+    if dup_block:
+        w, every = dup_block
+        for k in range(every, n // w, every):
+            lo = k * w
+            arrs = [fs.opcode, fs.regbits, fs.flags, fs.brhist, fs.memdist]
+            if labels:
+                arrs += list(labels.values())
+            for arr in arrs:
+                arr[lo : lo + w] = arr[:w]
+    return fs
+
+
+def assert_datasets_equal(a: WindowDataset, b: WindowDataset):
+    assert len(a) == len(b)
+    for k in a.inputs:
+        np.testing.assert_array_equal(a.inputs[k], b.inputs[k], err_msg=k)
+    assert (a.labels is None) == (b.labels is None)
+    if a.labels is not None:
+        for k in a.labels:
+            np.testing.assert_array_equal(a.labels[k], b.labels[k], err_msg=k)
+
+
+# ---------------------------------------------------------------------------
+# Digests
+# ---------------------------------------------------------------------------
+
+
+def per_row_digests(inputs, labels):
+    """The pre-vectorization per-row hashing loop, verbatim."""
+    out = []
+    lat = labels["fetch_lat"] if labels is not None else None
+    for i in range(len(inputs["opcode"])):
+        h = hashlib.blake2b(digest_size=16)
+        h.update(inputs["opcode"][i].tobytes())
+        h.update(inputs["memdist"][i].tobytes())
+        h.update(inputs["brhist"][i].tobytes())
+        if lat is not None:
+            h.update(lat[i].tobytes())
+            h.update(labels["exec_lat"][i].tobytes())
+        out.append(h.digest())
+    return out
+
+
+@pytest.mark.parametrize("with_labels", [True, False])
+@pytest.mark.parametrize("chunk", [1, 3, 64, 2048])
+def test_chunked_digests_match_per_row_reference(with_labels, chunk):
+    fs = make_fs(700, seed=3, with_labels=with_labels, dup_block=(17, 4))
+    views = {
+        k: window_view(getattr(fs, k), 17, 17)
+        for k in ("opcode", "memdist", "brhist")
+    }
+    labs = None
+    if with_labels:
+        labs = {
+            k: window_view(fs.labels[k], 17, 17)
+            for k in ("fetch_lat", "exec_lat")
+        }
+    got = list(iter_window_digests(views, labs, chunk=chunk))
+    assert got == per_row_digests(views, labs)
+
+
+# ---------------------------------------------------------------------------
+# Streaming dedup vs the materialized keep-set
+# ---------------------------------------------------------------------------
+
+
+def test_streaming_dedup_matches_materialized_collision_heavy():
+    fs = make_fs(3000, seed=1, dup_block=(17, 3))  # every 3rd window collides
+    ds_m = build_windows(fs, 17)
+    ds_s = StreamingWindowDataset(fs, 17)
+    assert ds_s.num_dropped > 0  # the collisions are real
+    assert len(ds_s) < num_windows(3000, 17, 17)
+    assert_datasets_equal(ds_s.materialize(), ds_m)
+
+
+def test_streaming_multi_trace_matches_concat():
+    parts = [
+        make_fs(2000, seed=1, dup_block=(17, 4)),
+        make_fs(1500, seed=2),
+        make_fs(2000, seed=1, dup_block=(17, 4)),  # identical to part 0
+    ]
+    ds_m = concat_datasets([build_windows(p, 17) for p in parts])
+    ds_s = StreamingWindowDataset(parts, 17)
+    assert_datasets_equal(ds_s.materialize(), ds_m)
+    # "trace" scope keeps cross-trace duplicates (like the materialized
+    # pipeline); "global" shares the digest reservoir and drops them
+    ds_g = StreamingWindowDataset(parts, 17, dedup_scope="global")
+    assert len(ds_g) == len(StreamingWindowDataset(parts[:2], 17))
+
+
+def test_streaming_dedup_disabled_and_no_labels():
+    fs = make_fs(1200, seed=4, with_labels=False, dup_block=(17, 2))
+    ds = StreamingWindowDataset(fs, 17, dedup=False)
+    assert len(ds) == num_windows(1200, 17, 17)
+    batch = next(ds.batches(8))
+    assert "labels" not in batch
+    assert batch["opcode"].shape == (8, 17)
+
+
+def test_streaming_rejects_mixed_geometry_and_bad_scope():
+    long, short = make_fs(400, seed=0), make_fs(9, seed=1)  # 9 < window
+    with pytest.raises(ValueError, match="mixed effective windows"):
+        StreamingWindowDataset([long, short], 17)
+    with pytest.raises(ValueError, match="dedup_scope"):
+        StreamingWindowDataset(long, 17, dedup_scope="session")
+    with pytest.raises(ValueError, match=">= 1 FeatureSet"):
+        StreamingWindowDataset([], 17)
+
+
+def test_streaming_subsample_matches_materialized():
+    """subsample() draws the same windows as WindowDataset.subsample (same
+    rng over the same length) but only shrinks the index lookup."""
+    fs = make_fs(2500, seed=7, dup_block=(17, 4))
+    ds_m = build_windows(fs, 17)
+    ds_s = StreamingWindowDataset(fs, 17)
+    sub_m = ds_m.subsample(24, seed=9)
+    sub_s = ds_s.subsample(24, seed=9)
+    assert isinstance(sub_s, StreamingWindowDataset)
+    assert_datasets_equal(sub_s.materialize(), sub_m)
+    assert ds_s.subsample(10**9) is ds_s  # n >= len: same object
+
+
+# ---------------------------------------------------------------------------
+# Seeded shuffle
+# ---------------------------------------------------------------------------
+
+
+def test_seeded_shuffle_bitwise_matches_materialized():
+    fs = make_fs(2500, seed=5, dup_block=(17, 5))
+    ds_m = build_windows(fs, 17)
+    ds_s = StreamingWindowDataset(fs, 17)
+    r_m, r_s = np.random.default_rng(11), np.random.default_rng(11)
+    n_batches = 0
+    for bm, bs in zip(ds_m.batches(16, rng=r_m), ds_s.batches(16, rng=r_s)):
+        for k in ("opcode", "regbits", "flags", "brhist", "memdist"):
+            np.testing.assert_array_equal(bm[k], bs[k], err_msg=k)
+        for k in bm["labels"]:
+            np.testing.assert_array_equal(bm["labels"][k], bs["labels"][k])
+        n_batches += 1
+    assert n_batches == len(ds_m) // 16
+
+
+def test_seeded_shuffle_deterministic_and_seed_sensitive():
+    fs = make_fs(2000, seed=6)
+    ds = StreamingWindowDataset(fs, 17)
+    first = [b["opcode"] for b in ds.batches(8, rng=np.random.default_rng(3))]
+    again = [b["opcode"] for b in ds.batches(8, rng=np.random.default_rng(3))]
+    other = [b["opcode"] for b in ds.batches(8, rng=np.random.default_rng(4))]
+    for a, b in zip(first, again):
+        np.testing.assert_array_equal(a, b)
+    assert any(not np.array_equal(a, o) for a, o in zip(first, other))
+
+
+# ---------------------------------------------------------------------------
+# Training: bit-for-bit trajectory + one compile per geometry
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def session_and_trace():
+    s = Session(CFG, streaming_threshold=1000)
+    return s, s.capture("lee", 3500)
+
+
+def test_session_streaming_threshold_and_types(session_and_trace):
+    s, tr = session_and_trace
+    auto = s.dataset(UARCH_A, [tr])  # 3500 >= threshold -> streaming
+    assert isinstance(auto, StreamingWindowDataset)
+    assert auto is s.dataset(UARCH_A, [tr])  # cache hit
+    mat = s.dataset(UARCH_A, [tr], streaming=False)
+    assert isinstance(mat, WindowDataset)
+    big = Session(CFG)  # default threshold: 1M instructions
+    tr2 = big.capture("lee", 3500)
+    assert isinstance(big.dataset(UARCH_A, [tr2]), WindowDataset)
+    # cross-trace dedup reaches the facade (streaming pipeline only)
+    dup = s.dataset(UARCH_A, [tr, tr], streaming=True, dedup_scope="global")
+    assert len(dup) == len(auto)
+    with pytest.raises(ValueError, match="streaming-pipeline option"):
+        s.dataset(UARCH_A, [tr], streaming=False, dedup_scope="global")
+
+
+def test_streaming_train_bitwise_matches_materialized(session_and_trace):
+    s, tr = session_and_trace
+    ds_s = s.dataset(UARCH_A, [tr])
+    ds_m = s.dataset(UARCH_A, [tr], streaming=False)
+    assert len(ds_s) == len(ds_m)  # same dedup keep-set
+    res_s = train_tao_impl(CFG, ds_s, epochs=2, batch_size=16, seed=0)
+    res_m = train_tao_impl(CFG, ds_m, epochs=2, batch_size=16, seed=0)
+    assert res_s.losses == res_m.losses  # bit-for-bit, not approx
+    assert res_s.steps == res_m.steps
+    jax.tree.map(
+        lambda a, b: np.testing.assert_array_equal(np.asarray(a), np.asarray(b)),
+        res_s.params,
+        res_m.params,
+    )
+
+
+def test_one_compile_per_geometry_across_streaming_epochs(session_and_trace):
+    s, tr = session_and_trace
+    ds = s.dataset(UARCH_A, [tr])
+    # a distinctive lr keys a fresh cached step regardless of test order
+    before = train_step_compiles()
+    train_tao_impl(CFG, ds, epochs=3, batch_size=8, seed=1, lr=2.625e-4)
+    assert train_step_compiles() - before == 1
+    # same geometry + config again: zero new compiles
+    before = train_step_compiles()
+    train_tao_impl(CFG, ds, epochs=1, batch_size=8, seed=2, lr=2.625e-4)
+    assert train_step_compiles() - before == 0
+
+
+def test_streaming_train_via_session_facade(session_and_trace):
+    s, tr = session_and_trace
+    model = s.train(UARCH_A, [tr], epochs=1, batch_size=16, streaming=True)
+    assert len(model.losses) == 1 and np.isfinite(model.losses[0])
+    res = model.simulate(tr)
+    assert np.isfinite(res.cpi)
+
+
+def test_streaming_flag_rejected_with_explicit_dataset(session_and_trace):
+    """streaming= cannot silently apply to a prebuilt dataset= — it only
+    controls how the session builds one from traces."""
+    s, tr = session_and_trace
+    ds = s.dataset(UARCH_A, [tr], streaming=False)
+    with pytest.raises(ValueError, match="explicit dataset"):
+        s.train(dataset=ds, streaming=True, epochs=1)
+    from repro.uarch import UARCH_B
+
+    with pytest.raises(ValueError, match="explicit"):
+        s.train_joint(UARCH_A, UARCH_B, datasets=(ds, ds), streaming=False)
+
+
+# ---------------------------------------------------------------------------
+# Memory cap (slow): 1M-instruction synthetic trace
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_streaming_memory_cap_1m_instructions():
+    """Train on a ~1M-instruction synthetic trace: the streaming data path
+    must stay under a constant RSS cap and beat the materialized path's
+    peak by >= 5x (the acceptance target; recorded by BENCH_train.json)."""
+
+    def measure(mode):
+        env = dict(os.environ)
+        env["JAX_PLATFORMS"] = "cpu"  # subprocess must never probe TPU
+        env["PYTHONPATH"] = os.pathsep.join(
+            [os.path.join(ROOT, "src")]
+            + ([env["PYTHONPATH"]] if env.get("PYTHONPATH") else [])
+        )
+        env["BENCH_SCALE"] = "tiny"
+        p = subprocess.run(
+            [sys.executable, "-m", "benchmarks.bench_train",
+             "--measure", mode, "--n", "1000000"],
+            capture_output=True, text=True, timeout=2400, env=env, cwd=ROOT,
+        )
+        assert p.returncode == 0, p.stderr[-3000:]
+        return json.loads(p.stdout.strip().splitlines()[-1])
+
+    stream = measure("stream")
+    mat = measure("materialized")
+    assert stream["loss0"] == mat["loss0"]  # same keep-set, same batches
+    assert stream["train_compiles_total"] == 1  # one compile per geometry
+    ratio = mat["peak_rss_delta_mb"] / max(stream["peak_rss_delta_mb"], 1e-9)
+    assert ratio >= 5.0, (stream, mat)
+    assert stream["peak_rss_delta_mb"] < 128.0, stream

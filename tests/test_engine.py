@@ -284,6 +284,35 @@ def test_feature_ops_importable_first():
     assert p.returncode == 0, p.stderr[-2000:]
 
 
+def test_prefetch_helper_inline_and_threaded():
+    """The shared prefetch helper must preserve order in both modes,
+    propagate producer errors, and survive an abandoned consumer."""
+    from repro.engine.runner import prefetch_to_device
+
+    items = [{"i": np.full((3,), i)} for i in range(25)]
+    for threaded in (False, True):
+        out = list(
+            prefetch_to_device(iter(items), device_put=lambda b: b,
+                               threaded=threaded)
+        )
+        assert [int(o["i"][0]) for o in out] == list(range(25)), threaded
+    assert list(prefetch_to_device(iter(()), threaded=True)) == []
+
+    def bad():
+        yield {"i": np.zeros(1)}
+        raise RuntimeError("producer boom")
+
+    with pytest.raises(RuntimeError, match="producer boom"):
+        list(prefetch_to_device(bad(), device_put=lambda b: b, threaded=True))
+
+    gen = prefetch_to_device(iter(items), device_put=lambda b: b, threaded=True)
+    assert int(next(gen)["i"][0]) == 0
+    gen.close()  # abandoning the consumer must stop the producer thread
+
+    with pytest.raises(ValueError):
+        next(prefetch_to_device(iter(items), depth=0, threaded=True))
+
+
 def test_engine_rejects_mesh_without_data_axis(params):
     mesh = jax.make_mesh((1,), ("model",))
     with pytest.raises(ValueError):
