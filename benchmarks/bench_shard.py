@@ -1,0 +1,108 @@
+"""(systems) ExecutionPlan sharding benchmark: the engine and the sweep
+scheduler under an N-device ``data`` mesh vs the single-device plan.
+
+Run under virtual CPU devices for the CI smoke
+(``XLA_FLAGS=--xla_force_host_platform_device_count=8 JAX_PLATFORMS=cpu
+python -m benchmarks.run --only shard --json BENCH_shard.json``) — on a
+2-core container the 8-way shard_map is pure scheduling overhead, so the
+tracked claim is *equivalence + compile counts* (plus the overhead
+trend); re-measure throughput on real TPU hardware.  Emits rows either
+way: a single-device host just records the ``plan=single`` baseline.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.distributed import data_mesh, topology_info
+from repro.engine.metrics import DEFAULT_PHASE_CHUNKS
+
+from .common import TEST_BENCHES, TEST_LEN, Timer, emit, session
+
+# phase curves ride along to show windowed metrics stay device-resident
+METRICS = ("cpi", "branch_mpki", "l1d_mpki", "cpi_phase")
+REPS = 3
+
+
+def _best_of(fn, reps=REPS) -> float:
+    best = float("inf")
+    for _ in range(reps):
+        with Timer() as t:
+            fn()
+        best = min(best, t.seconds)
+    return best
+
+
+def run() -> None:
+    topo = topology_info()
+    n_dev = topo["device_count"]
+    sess = session()
+    bsz = sess.batch_size
+    traces = {b: sess.capture(b, TEST_LEN) for b in TEST_BENCHES[:2]}
+    models = {f"m{i}": sess.init_model(seed=i, name=f"m{i}") for i in range(2)}
+    first = next(iter(models.values()))
+    n_instr = sum(
+        first.simulate(tr, metrics=METRICS).num_instructions
+        for tr in traces.values()
+    )  # also warms the single-device executable
+
+    def sim_all(**kw):
+        for tr in traces.values():
+            first.simulate(tr, metrics=METRICS, **kw)
+
+    single_secs = _best_of(sim_all)
+    single_mips = n_instr / 1e6 / single_secs
+    emit(
+        "shard/engine_single",
+        1e6 * single_secs,
+        f"mips={single_mips:.4f};plan=single;devices={n_dev};batch={bsz}",
+    )
+
+    if n_dev < 2 or bsz % n_dev:
+        emit(
+            "shard/engine_sharded",
+            0.0,
+            f"skipped=single_device;devices={n_dev};plan=single",
+        )
+        return
+
+    mesh = data_mesh()
+    base = {tn: first.simulate(tr, metrics=METRICS) for tn, tr in traces.items()}
+    shard_res = {
+        tn: first.simulate(tr, metrics=METRICS, mesh=mesh)
+        for tn, tr in traces.items()
+    }  # warms the sharded executable
+    # the sharded plan must reproduce the single-device metrics exactly
+    # (CPU: bitwise in practice — the tier-1 suite pins this; here we
+    # guard the bench itself against drift)
+    for tn in traces:
+        a, b = base[tn], shard_res[tn]
+        assert a.branch_mpki == b.branch_mpki and a.l1d_mpki == b.l1d_mpki, tn
+        assert np.allclose(a.cpi, b.cpi, rtol=1e-6), tn
+        assert np.allclose(a.cpi_phase, b.cpi_phase, rtol=1e-5), tn
+        assert b.cpi_phase.shape == (DEFAULT_PHASE_CHUNKS,)
+
+    sharded_secs = _best_of(lambda: sim_all(mesh=mesh))
+    sharded_mips = n_instr / 1e6 / sharded_secs
+    emit(
+        "shard/engine_sharded",
+        1e6 * sharded_secs,
+        f"mips={sharded_mips:.4f};plan=sharded;devices={n_dev};"
+        f"mesh=data{n_dev};speedup={sharded_mips / single_mips:.2f}x;"
+        f"metrics_equal=True;phase_chunks={DEFAULT_PHASE_CHUNKS}",
+    )
+
+    # data-sharded sweep: trace queue x data axis, one warm executable
+    report = None
+    for _ in range(REPS):
+        r = sess.sweep(models, traces, metrics=METRICS, mesh=mesh)
+        assert r.num_compiles == 0, r.num_compiles  # cache is warm
+        if report is None or r.seconds < report.seconds:
+            report = r
+    emit(
+        "shard/sweep_sharded",
+        1e6 * report.seconds / report.num_traces,
+        f"plan={report.plan_kind};shards={report.num_shards};"
+        f"traces_per_s={report.traces_per_s:.2f};mips={report.mips:.4f};"
+        f"compiles={report.num_compiles};"
+        f"prepared_async={report.prepared_async}",
+    )

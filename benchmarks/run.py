@@ -31,6 +31,7 @@ from . import (
     bench_accuracy,
     bench_dse,
     bench_kernels,
+    bench_shard,
     bench_sweeps,
     bench_timing,
     bench_train,
@@ -47,18 +48,24 @@ SUITES = {
     "sweep": bench_dse.run_sweep,
     "training": bench_train.run,
     "kernels": bench_kernels.run,
+    "shard": bench_shard.run,
 }
 
 
 def _write_json(path: str) -> None:
+    # device/mesh topology rides along so artifacts from different hosts
+    # (CI runners, TPU pods, laptops) are comparable at a glance
+    from repro.distributed import topology_info
+
     records = []
     for row in rows():
         name, us, derived = row.split(",", 2)
         records.append(
             {"name": name, "us_per_call": float(us), "derived": derived}
         )
+    payload = {"scale": SCALE, "topology": topology_info(), "rows": records}
     with open(path, "w") as f:
-        json.dump({"scale": SCALE, "rows": records}, f, indent=2)
+        json.dump(payload, f, indent=2)
     print(f"wrote {path} ({len(records)} rows)", flush=True)
 
 

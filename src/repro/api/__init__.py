@@ -21,7 +21,9 @@ from ..engine.metrics import (
     MetricSpec,
     StepContext,
     register_metric,
+    windowed_spec,
 )
+from ..engine.plan import ExecutionPlan
 from ..engine.runner import (
     EngineConfig,
     MetricNotCollectedError,
@@ -40,8 +42,10 @@ __all__ = [
     "WindowDataset",
     "StreamingWindowDataset",
     "EngineConfig",
+    "ExecutionPlan",
     "SimulationResult",
     "MetricSpec",
+    "windowed_spec",
     "StepContext",
     "register_metric",
     "METRIC_REGISTRY",

@@ -53,6 +53,7 @@ from ..core.selection import (
 )
 from ..core.transfer import TrainResult, train_tao_impl, transfer_finetune
 from ..engine.metrics import DEFAULT_METRICS, MetricSpec
+from ..engine.plan import ExecutionPlan
 from ..engine.runner import EngineConfig, SimulationResult, StreamingEngine
 from ..engine.scheduler import SweepJob, SweepReport, TraceSweeper
 from ..train.optim import AdamWConfig, adamw_init
@@ -137,11 +138,13 @@ class TrainedModel:
     losses: List[float] = dataclasses.field(default_factory=list)
     seconds: float = 0.0
     steps: int = 0
-    # simulate() defaults: Session.train stamps its batch_size and
-    # feature_backend here so simulate() and Session.sweep() compile the
-    # same executable and take the same feature path
+    # simulate() defaults: Session.train stamps its batch_size,
+    # feature_backend, and ExecutionPlan here so simulate() and
+    # Session.sweep() compile the same executable and take the same
+    # feature/partitioning path
     sim_batch_size: int = 64
     sim_feature_backend: str = "numpy"
+    sim_plan: Optional[ExecutionPlan] = None
 
     def __post_init__(self):
         self._engines: Dict[EngineConfig, StreamingEngine] = {}
@@ -178,14 +181,20 @@ class TrainedModel:
         feature_backend: Optional[str] = None,
         features: Optional[FeatureSet] = None,
         mesh=None,
+        plan: Optional[ExecutionPlan] = None,
     ) -> SimulationResult:
         """Stream one functional trace through the model; ``metrics`` picks
-        the device-side ``MetricSpec``s (default CPI + branch/L1D MPKI)."""
+        the device-side ``MetricSpec``s (default CPI + branch/L1D MPKI).
+        ``plan=``/``mesh=`` override the model's stamped ``sim_plan``
+        (inherited from ``Session(mesh=...)``)."""
+        if plan is None and mesh is None:
+            plan = self.sim_plan
         engine = self.engine(
             batch_size=batch_size if batch_size is not None else self.sim_batch_size,
             collect=collect,
             feature_backend=feature_backend or self.sim_feature_backend,
             mesh=mesh,
+            plan=plan,
             metrics=tuple(metrics) if metrics is not None else DEFAULT_METRICS,
         )
         ft = trace.functional if isinstance(trace, Trace) else trace
@@ -230,7 +239,7 @@ class TrainedModel:
         )
         return _model_from_result(
             res, self.cfg, name or f"{self.name}-transfer", uarch,
-            self.sim_batch_size, self.sim_feature_backend,
+            self.sim_batch_size, self.sim_feature_backend, self.sim_plan,
         )
 
 
@@ -241,6 +250,7 @@ def _model_from_result(
     uarch: Optional[MicroArchConfig],
     sim_batch_size: int = 64,
     sim_feature_backend: str = "numpy",
+    sim_plan: Optional[ExecutionPlan] = None,
 ) -> TrainedModel:
     return TrainedModel(
         params=res.params,
@@ -252,6 +262,7 @@ def _model_from_result(
         steps=res.steps,
         sim_batch_size=sim_batch_size,
         sim_feature_backend=sim_feature_backend,
+        sim_plan=sim_plan,
     )
 
 
@@ -268,6 +279,7 @@ class JointModel:
     steps: int = 0
     sim_batch_size: int = 64          # inherited by head()/transfer() models
     sim_feature_backend: str = "numpy"
+    sim_plan: Optional[ExecutionPlan] = None
 
     @property
     def embedding(self) -> Dict:
@@ -294,6 +306,7 @@ class JointModel:
             name=name or f"joint-{self.method}-{arch}",
             sim_batch_size=self.sim_batch_size,
             sim_feature_backend=self.sim_feature_backend,
+            sim_plan=self.sim_plan,
         )
 
     def transfer(
@@ -327,7 +340,7 @@ class JointModel:
         )
         return _model_from_result(
             res, self.cfg, name or f"transfer-{self.method}", uarch,
-            self.sim_batch_size, self.sim_feature_backend,
+            self.sim_batch_size, self.sim_feature_backend, self.sim_plan,
         )
 
     def eval_loss(self, batches, arch: str = "A") -> float:
@@ -436,11 +449,22 @@ class Session:
         feature_backend: str = "numpy",
         seed: int = 0,
         streaming_threshold: Optional[int] = 1_000_000,
+        mesh=None,
+        plan: Optional[ExecutionPlan] = None,
     ):
         self.cfg = cfg if cfg is not None else TaoConfig()
         self.batch_size = batch_size
         self.feature_backend = feature_backend
         self.seed = seed
+        # One partitioning decision for the whole workflow: models trained
+        # by this session simulate under it, and Session.sweep composes the
+        # trace queue with it.  None (the default, when no mesh/plan is
+        # given) means the single-device path.
+        self.plan: Optional[ExecutionPlan] = None
+        if mesh is not None or plan is not None:
+            self.plan = ExecutionPlan.resolve(
+                mesh, batch_size=batch_size, plan=plan
+            )
         # dataset()/train() switch to the O(trace + batch) streaming
         # pipeline when the traces hold at least this many instructions
         # combined (None disables the automatic switch); pass
@@ -593,12 +617,17 @@ class Session:
         target_loss: Optional[float] = None,
         eval_fn=None,
         name: Optional[str] = None,
+        plan: Optional[ExecutionPlan] = None,
     ) -> TrainedModel:
         """Train (or fine-tune) a single-µarch model.  Give ``traces`` and
         the session builds the adjusted dataset for ``uarch`` — streaming
         (O(trace + batch) memory) at or above ``streaming_threshold``
         combined instructions, materialized below; ``streaming=`` forces
-        either pipeline.  Or pass a prebuilt ``dataset`` directly."""
+        either pipeline.  Or pass a prebuilt ``dataset`` directly.
+        ``plan=`` runs the cached train step data-parallel over an
+        ExecutionPlan's mesh (explicit opt-in — the session's simulation
+        plan is not applied to training automatically because the train
+        ``batch_size`` must divide its shards)."""
         if dataset is not None and streaming is not None:
             raise ValueError(
                 "streaming= only controls how the session builds a dataset "
@@ -624,10 +653,11 @@ class Session:
             eval_fn=eval_fn,
             seed=self.seed if seed is None else seed,
             target_loss=target_loss,
+            plan=plan,
         )
         return _model_from_result(
             res, self.cfg, name or (uarch.name if uarch is not None else "tao"),
-            uarch, self.batch_size, self.feature_backend,
+            uarch, self.batch_size, self.feature_backend, self.plan,
         )
 
     def init_model(self, seed: Optional[int] = None, name: str = "init") -> TrainedModel:
@@ -637,6 +667,7 @@ class Session:
             params=init_tao(key, self.cfg), cfg=self.cfg, name=name,
             sim_batch_size=self.batch_size,
             sim_feature_backend=self.feature_backend,
+            sim_plan=self.plan,
         )
 
     def train_joint(
@@ -737,6 +768,7 @@ class Session:
             steps=steps,
             sim_batch_size=self.batch_size,
             sim_feature_backend=self.feature_backend,
+            sim_plan=self.plan,
         )
 
     # ---- step 3: multi-trace simulation --------------------------------
@@ -752,12 +784,20 @@ class Session:
         collect: bool = False,
         depth: int = 2,
         async_prepare: Optional[bool] = None,
+        mesh=None,
+        plan: Optional[ExecutionPlan] = None,
     ) -> SweepReport:
         """Async DSE sweep: every (model, trace) pair streams through one
         shared compiled step; each distinct trace is prepared once (shared
         across models) and — on accelerator backends — the next trace's
         host-side prep is double-buffered behind the device execution of
-        the current one.  Result keys are ``model/trace``."""
+        the current one.  Result keys are ``model/trace``.
+
+        Sharded sweeps compose the trace queue with an ``ExecutionPlan``:
+        pass ``plan=``/``mesh=`` (or construct the session with one) and
+        every job's step fans out over the plan's ``data`` axes while the
+        one-compile-per-geometry guarantee still holds
+        (``report.num_compiles``, ``report.plan_kind``)."""
         models = _named("model", models, lambda m: m.name)
         traces = _named("trace", traces, lambda t: t.name)
         for name, m in models.items():
@@ -766,10 +806,14 @@ class Session:
                     f"model {name!r} was built for a different TaoConfig; "
                     "sweeps share one compiled step per session config"
                 )
+        if plan is None and mesh is None:
+            plan = self.plan
         ecfg = EngineConfig(
             batch_size=batch_size or self.batch_size,
             feature_backend=feature_backend or self.feature_backend,
             collect=collect,
+            mesh=mesh,
+            plan=plan,
             metrics=tuple(metrics) if metrics is not None else DEFAULT_METRICS,
         )
         jobs = [

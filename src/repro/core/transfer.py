@@ -40,14 +40,18 @@ class TrainResult:
     steps: int
 
 
-def _make_step(cfg: TaoConfig, opt_cfg: AdamWConfig, trainable: str):
+def _make_step(cfg: TaoConfig, opt_cfg: AdamWConfig, trainable: str, plan=None):
     """trainable: 'all' or 'headonly' (freeze shared embeddings).
 
     The step is cached process-wide (``train.trainer.cached_train_step``):
     params and optimizer state are arguments, so every trainer invocation
-    with the same (config, optimizer, trainable set) shares one executable,
-    and — because batches are fixed-shape — it traces exactly once per
-    (batch, window) geometry."""
+    with the same (config, optimizer, trainable set, plan) shares one
+    executable, and — because batches are fixed-shape — it traces exactly
+    once per (batch, window) geometry.  ``plan`` (an ``ExecutionPlan``)
+    only keys the cache here: the step itself stays a plain jit and GSPMD
+    partitions it from the plan's input placements (batch sharded over
+    the plan's axes, params/opt replicated), so a sharded and an
+    unsharded trainer never share an executable under one trace counter."""
 
     def build(entry):
         def loss_fn(params, batch):
@@ -81,7 +85,7 @@ def _make_step(cfg: TaoConfig, opt_cfg: AdamWConfig, trainable: str):
 
         return step
 
-    return cached_train_step(("tao", cfg, opt_cfg, trainable), build).fn
+    return cached_train_step(("tao", cfg, opt_cfg, trainable, plan), build).fn
 
 
 def _run_epochs(
@@ -95,14 +99,26 @@ def _run_epochs(
     seed: int = 0,
     target_loss: Optional[float] = None,
     prefetch: bool = True,
+    plan=None,
 ) -> Tuple[Dict, List[float], List[float], int]:
     # lazy: engine.runner imports core.dataset — a module-level import here
     # would close the cycle through the repro.core package init
     from ..engine.runner import prefetch_to_device
 
+    if plan is not None and plan.sharded:
+        # data-parallel training under the same ExecutionPlan the engine
+        # uses: batches shard over the plan's batch axes (device_put
+        # below), params/opt replicate, and GSPMD inserts the gradient
+        # all-reduce.  The batch stream itself is untouched, so the
+        # sampled windows match the single-device run exactly.
+        plan.validate_batch(batch_size)
+        params = plan.replicate(params)
+        opt = plan.replicate(opt)
+
     rng = np.random.default_rng(seed)
     losses, evals = [], []
     steps = 0
+    put = plan.device_put if plan is not None and plan.sharded else None
     for ep in range(epochs):
         ep_loss, nb = 0.0, 0
         batches = dataset.batches(batch_size, rng=rng)
@@ -110,7 +126,9 @@ def _run_epochs(
             # double-buffered host→device transfer (and, on accelerator
             # backends, threaded batch gather) — numerics are unchanged:
             # the step sees the same arrays, just already device-resident
-            batches = prefetch_to_device(batches)
+            batches = prefetch_to_device(batches, put)
+        elif put is not None:
+            batches = (put(b) for b in batches)
         for batch in batches:
             params, opt, loss = step(params, opt, batch)
             ep_loss += float(loss)
@@ -137,6 +155,7 @@ def train_tao_impl(
     eval_fn: Optional[Callable] = None,
     seed: int = 0,
     target_loss: Optional[float] = None,
+    plan=None,
 ) -> TrainResult:
     """Train (or fine-tune) a single-µarch Tao model.
 
@@ -148,6 +167,12 @@ def train_tao_impl(
     ``StreamingWindowDataset`` (O(trace + batch) host memory); both produce
     bit-identical loss trajectories for the same seed and keep-set.
 
+    ``plan`` (an ``repro.engine.ExecutionPlan``) runs the cached step
+    data-parallel over the plan's mesh — same batch stream, batches
+    sharded over the batch axes, params replicated, gradient all-reduce
+    by GSPMD.  ``train_step_compiles`` still counts one trace per
+    (batch, window) geometry per plan.
+
     Internal implementation behind ``repro.api.Session.train`` /
     ``TrainedModel.transfer`` (and the ``train_tao`` deprecation shim).
     """
@@ -155,14 +180,19 @@ def train_tao_impl(
     params = init_params if init_params is not None else init_tao(key, cfg)
     opt_cfg = AdamWConfig(lr=lr)
     trainable = "headonly" if freeze_embed else "all"
-    step = _make_step(cfg, opt_cfg, trainable)
+    if plan is not None and not plan.sharded:
+        # the single-device plan is the default path; normalizing to None
+        # keeps one step-cache entry (and one compile) for both spellings
+        plan = None
+    step = _make_step(cfg, opt_cfg, trainable, plan=plan)
     if freeze_embed:
         opt = adamw_init({"adapt": params["adapt"], "pred": params["pred"]})
     else:
         opt = adamw_init(params)
     t0 = time.perf_counter()
     params, losses, evals, steps = _run_epochs(
-        params, step, dataset, epochs, batch_size, opt, eval_fn, seed, target_loss
+        params, step, dataset, epochs, batch_size, opt, eval_fn, seed,
+        target_loss, plan=plan,
     )
     return TrainResult(
         params=params,

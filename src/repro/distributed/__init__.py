@@ -1,3 +1,25 @@
+"""Distributed runtime: logical-axis sharding rules, mesh construction,
+and multi-host initialization.
+
+``sharding``   — the MaxText-style logical-axis rule table and mappers
+                 (``logical_to_spec`` / ``shard`` / ``tree_shardings``).
+``multihost``  — where devices come from: ``jax.distributed`` bring-up
+                 with a single-process fallback, ``data_mesh()`` over the
+                 global device set, and the ``virtual_cpu_devices`` CI
+                 path (``XLA_FLAGS=--xla_force_host_platform_device_count``).
+
+How work is *partitioned* over a mesh lives in ``repro.engine.plan``
+(``ExecutionPlan``), which the simulation engine, the sweep scheduler,
+and the streaming trainer all consume.
+"""
+from .multihost import (
+    MultihostInfo,
+    data_mesh,
+    initialize_multihost,
+    is_multihost,
+    topology_info,
+    virtual_cpu_devices,
+)
 from .sharding import (
     LOGICAL_RULES,
     current_mesh,
@@ -6,6 +28,7 @@ from .sharding import (
     named_sharding,
     shard,
     spec_for_shape,
+    tree_shardings,
 )
 
 __all__ = [
@@ -16,4 +39,11 @@ __all__ = [
     "shard",
     "named_sharding",
     "spec_for_shape",
+    "tree_shardings",
+    "MultihostInfo",
+    "initialize_multihost",
+    "is_multihost",
+    "data_mesh",
+    "virtual_cpu_devices",
+    "topology_info",
 ]

@@ -1,0 +1,224 @@
+"""Mesh construction + multi-host runtime initialization.
+
+This module owns *where the devices come from*; ``ExecutionPlan``
+(``repro.engine.plan``) owns *how work is partitioned over them*.  Three
+entry points cover every deployment shape:
+
+  * ``initialize_multihost()`` — ``jax.distributed`` bring-up with a
+    single-process fallback: on a laptop / single-host CI it is a no-op,
+    on a pod slice (or with explicit coordinator args / the standard
+    ``JAX_COORDINATOR_ADDRESS`` env) it joins the cluster, after which
+    ``jax.devices()`` is the *global* device set and ``data_mesh()``
+    spans hosts.
+  * ``data_mesh()`` — the engine's mesh: every device on the ``data``
+    axis (optionally ``("pod", "data")`` when ``pods`` is given), built
+    through the compat shims so jax 0.4.x and 0.6+ agree.
+  * ``virtual_cpu_devices(n)`` — the CI path: force the host CPU platform
+    to present ``n`` devices (``XLA_FLAGS=--xla_force_host_platform_
+    device_count``).  Must run before the jax backend initializes; raises
+    with the exact flags to export when it is too late.
+
+``topology_info()`` summarizes the runtime (device/process counts, mesh
+shape, plan kind) — ``benchmarks/run.py --json`` embeds it so bench
+artifacts are comparable across hosts.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Dict, Optional
+
+__all__ = [
+    "MultihostInfo",
+    "initialize_multihost",
+    "is_multihost",
+    "data_mesh",
+    "virtual_cpu_devices",
+    "topology_info",
+]
+
+# env vars jax.distributed.initialize understands / we treat as the opt-in
+_COORD_ENVS = ("JAX_COORDINATOR_ADDRESS", "COORDINATOR_ADDRESS")
+
+_initialized: Optional["MultihostInfo"] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class MultihostInfo:
+    """What ``initialize_multihost`` decided and observed."""
+
+    initialized: bool        # True when jax.distributed.initialize ran
+    process_index: int
+    process_count: int
+
+    @property
+    def is_multihost(self) -> bool:
+        return self.process_count > 1
+
+
+def initialize_multihost(
+    coordinator_address: Optional[str] = None,
+    num_processes: Optional[int] = None,
+    process_id: Optional[int] = None,
+    **kw,
+) -> MultihostInfo:
+    """Join (or skip) a multi-host jax cluster; idempotent.
+
+    Runs ``jax.distributed.initialize`` only when the caller passed
+    explicit coordinator args or the environment advertises one
+    (``JAX_COORDINATOR_ADDRESS``); otherwise this is the single-process
+    fallback — no cluster, no sockets, ``process_count == 1`` — so the
+    same launch script works on a laptop, in CI, and on a pod slice.
+    Call it before any other jax API touches the backend.
+    """
+    global _initialized
+    wants_cluster = (
+        coordinator_address is not None
+        or num_processes not in (None, 1)
+        or any(os.environ.get(e) for e in _COORD_ENVS)
+    )
+    if _initialized is not None:
+        if wants_cluster and not _initialized.initialized:
+            # an early no-arg call already resolved to the single-process
+            # fallback; honoring the cached result would silently skip
+            # the cluster join the caller is explicitly asking for
+            raise RuntimeError(
+                "initialize_multihost was already called without cluster "
+                "arguments and fell back to single-process; call it with "
+                "coordinator args FIRST (before any no-arg call touches "
+                "the backend)"
+            )
+        return _initialized
+
+    import jax
+
+    if not wants_cluster:
+        _initialized = MultihostInfo(
+            initialized=False, process_index=0, process_count=1
+        )
+        return _initialized
+
+    jax.distributed.initialize(
+        coordinator_address=coordinator_address,
+        num_processes=num_processes,
+        process_id=process_id,
+        **kw,
+    )
+    _initialized = MultihostInfo(
+        initialized=True,
+        process_index=jax.process_index(),
+        process_count=jax.process_count(),
+    )
+    return _initialized
+
+
+def is_multihost() -> bool:
+    import jax
+
+    return jax.process_count() > 1
+
+
+def data_mesh(num_devices: Optional[int] = None, *, pods: Optional[int] = None):
+    """The engine's data-parallel mesh over the *global* device set.
+
+    ``(data=N,)`` by default; ``(pod=pods, data=N/pods)`` when ``pods``
+    is given (the ``pod`` axis only ever carries batch, so inter-pod
+    fabric sees pure data parallelism — same convention as
+    ``launch/mesh.py``).  After ``initialize_multihost`` on a cluster,
+    ``jax.devices()`` spans hosts and so does this mesh.
+    """
+    import jax
+
+    from ..compat import make_mesh
+
+    n = num_devices if num_devices is not None else len(jax.devices())
+    if n < 1:
+        raise ValueError(f"need at least one device, got {n}")
+    if pods is None:
+        return make_mesh((n,), ("data",))
+    if n % pods:
+        raise ValueError(f"{n} devices do not split into pods={pods}")
+    return make_mesh((pods, n // pods), ("pod", "data"))
+
+
+def virtual_cpu_devices(n: int) -> int:
+    """CI path: make the host CPU platform present ``n`` XLA devices.
+
+    Sets ``XLA_FLAGS=--xla_force_host_platform_device_count=n`` (and pins
+    ``JAX_PLATFORMS=cpu``) if the jax backend has not initialized yet;
+    raises with the exact environment to export when it is too late.
+    Returns the resulting device count.  The ``shard-cpu`` CI job and the
+    multi-device tests run under exactly this configuration.
+    """
+    if n < 1:
+        raise ValueError(f"need n >= 1 virtual devices, got {n}")
+    flag = f"--xla_force_host_platform_device_count={n}"
+
+    # jax initializes backends lazily: if none exists yet, flags set now
+    # still apply; if it turns out the backend already initialized (the
+    # device-count check below), roll the env mutations back so the
+    # failed attempt doesn't leak into this process or its children.
+    saved_flags = os.environ.get("XLA_FLAGS")
+    saved_platforms = os.environ.get("JAX_PLATFORMS")
+    flags = saved_flags or ""
+    if "xla_force_host_platform_device_count" in flags:
+        # rewrite a leaked/stale count rather than keeping it: if the
+        # backend has not initialized yet, the new value still wins
+        import re
+
+        flags = re.sub(
+            r"--xla_force_host_platform_device_count=\d+", flag, flags
+        )
+        os.environ["XLA_FLAGS"] = flags
+    else:
+        os.environ["XLA_FLAGS"] = f"{flags} {flag}".strip()
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+    import jax
+
+    have = jax.device_count()
+    if have < n:
+        if saved_flags is None:
+            os.environ.pop("XLA_FLAGS", None)
+        else:
+            os.environ["XLA_FLAGS"] = saved_flags
+        if saved_platforms is None:
+            os.environ.pop("JAX_PLATFORMS", None)
+        else:
+            os.environ["JAX_PLATFORMS"] = saved_platforms
+        raise RuntimeError(
+            f"only {have} devices visible but {n} requested; the jax "
+            "backend initialized before virtual_cpu_devices could set "
+            f'XLA_FLAGS. Export XLA_FLAGS="{flag}" JAX_PLATFORMS=cpu '
+            "before starting the process (see the shard-cpu CI job)."
+        )
+    return have
+
+
+def topology_info(plan=None) -> Dict:
+    """Runtime topology summary for bench artifacts / logs.
+
+    Pass the ``ExecutionPlan`` the workload actually ran under to record
+    it verbatim (``"plan"``); without one, only ``"default_plan"`` is
+    reported — the plan ``data_mesh()`` WOULD resolve on this host — so
+    artifacts never claim a partitioning that individual rows (which
+    carry their own ``plan=...`` fields) did not use.
+    """
+    import jax
+
+    n = jax.device_count()
+    info = {
+        "backend": jax.default_backend(),
+        "device_count": n,
+        "local_device_count": jax.local_device_count(),
+        "process_index": jax.process_index(),
+        "process_count": jax.process_count(),
+    }
+    if plan is not None:
+        info["plan"] = plan.describe()
+    else:
+        info["default_plan"] = {
+            "kind": "sharded" if n > 1 else "single",
+            "mesh_shape": {"data": n} if n > 1 else {},
+        }
+    return info

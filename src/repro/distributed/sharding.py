@@ -27,6 +27,7 @@ __all__ = [
     "shard",
     "named_sharding",
     "spec_for_shape",
+    "tree_shardings",
 ]
 
 AxisSpec = Union[str, Tuple[str, ...], None]
@@ -157,5 +158,43 @@ def spec_for_shape(
     logical_axes: Sequence[Optional[str]],
     shape: Sequence[int],
     rules: Optional[Dict[str, Tuple[str, ...]]] = None,
+    allow_uneven: bool = False,
 ) -> NamedSharding:
-    return NamedSharding(mesh, logical_to_spec(logical_axes, shape, mesh, rules))
+    """NamedSharding for one array; forwards ``allow_uneven`` so callers
+    get the same padded-sharding acceptance window as ``shard()``."""
+    return NamedSharding(
+        mesh,
+        logical_to_spec(
+            logical_axes, shape, mesh, rules, allow_uneven=allow_uneven
+        ),
+    )
+
+
+def _is_axes_leaf(x) -> bool:
+    """Logical-axis leaves are plain tuples of str/None (not NamedTuples,
+    which are pytree nodes — e.g. TrainState axis trees)."""
+    if x is None:
+        return True
+    return (
+        isinstance(x, tuple)
+        and not hasattr(x, "_fields")
+        and all(e is None or isinstance(e, str) for e in x)
+    )
+
+
+def tree_shardings(tree_axes, tree_shapes, mesh: Mesh, rules=None):
+    """Map a pytree of logical-axis tuples + matching shape pytree to
+    NamedShardings (replicated where axes are None).
+
+    The one partitioning helper the trainer, the launch dry-run, and the
+    serving path share — hoisted here so every layer resolves logical
+    axes through the same rule table.  ``tree_shapes`` leaves need only a
+    ``.shape`` (ShapeDtypeStructs or arrays).
+    """
+
+    def one(axes, sds):
+        if axes is None:
+            return NamedSharding(mesh, P())
+        return spec_for_shape(mesh, axes, sds.shape, rules)
+
+    return jax.tree.map(one, tree_axes, tree_shapes, is_leaf=_is_axes_leaf)

@@ -8,12 +8,15 @@ run through the async scheduler (``engine.scheduler``).
 """
 from .metrics import (
     DEFAULT_METRICS,
+    DEFAULT_PHASE_CHUNKS,
     METRIC_REGISTRY,
     MetricSpec,
     StepContext,
     register_metric,
     resolve_metrics,
+    windowed_spec,
 )
+from .plan import AxisContext, ExecutionPlan
 from .runner import (
     FEATURE_BACKENDS,
     PER_INSTRUCTION_KEYS,
@@ -27,15 +30,19 @@ from .runner import (
 from .scheduler import SweepJob, SweepReport, TraceSweeper, sweep_traces
 
 __all__ = [
+    "AxisContext",
+    "ExecutionPlan",
     "EngineConfig",
     "FEATURE_BACKENDS",
     "PER_INSTRUCTION_KEYS",
     "DEFAULT_METRICS",
+    "DEFAULT_PHASE_CHUNKS",
     "METRIC_REGISTRY",
     "MetricSpec",
     "StepContext",
     "register_metric",
     "resolve_metrics",
+    "windowed_spec",
     "MetricNotCollectedError",
     "MetricNotComputedError",
     "SimulationResult",

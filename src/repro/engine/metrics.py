@@ -23,23 +23,34 @@ CPI, cache-level histograms, ...) are plug-in code, not engine surgery:
     engine = StreamingEngine(params, cfg, EngineConfig(
         metrics=("cpi", "dram_hits")))
 
-Specs run on device, under jit, and — when the engine is sharded — inside
-``shard_map``; ``StepContext.psum``/``pmax`` are the cross-shard reducers
-(identity on a single device), so a spec written against the context works
-unchanged on a mesh.  ``ctx.batch`` exposes only the columns the engine
-ships (feature INPUT_KEYS, ``valid``, ``is_branch``, ``is_mem``) — a spec
-needing other trace columns must drive the step with
-``stream_batches(extra=...)`` (see tests/test_api.py for a worked
-example).  The built-in specs reproduce the legacy carry's values
-bit-for-bit (enforced by ``tests/test_api.py``).
+Specs run on device, under jit, and — whatever ``ExecutionPlan`` the
+engine resolved — inside ``shard_map``; ``StepContext.psum``/``pmax`` are
+the cross-shard reducers (identity on a single-device plan), so a spec
+written against the context works unchanged on a mesh.  ``ctx.batch``
+exposes only the columns the engine ships (feature INPUT_KEYS, ``valid``,
+``is_branch``, ``is_mem``) — a spec needing other trace columns must
+drive the step with ``stream_batches(extra=...)`` (see tests/test_api.py
+for a worked example).  The built-in specs reproduce the legacy carry's
+values bit-for-bit (enforced by ``tests/test_api.py``).
+
+**Windowed (phase-curve) metrics.**  A spec may declare a fixed
+``(num_chunks,)`` carry and scatter per-window contributions into trace
+phases with ``ctx.windowed_sum`` — the engine threads the global window
+grid (``ctx.win_index`` / ``ctx.num_windows``) through the carry, so
+Fig. 11-style phase curves accumulate **on device** under every plan (no
+``collect=True`` round-trips) and cross shards through ``psum`` like any
+other carry.  ``windowed_spec`` builds one; ``cpi_phase`` / ``l1d_phase``
+are registered examples.  Their finalized value is a ``(num_chunks,)``
+ndarray in ``SimulationResult.metrics``.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, Tuple, Union
+from typing import Any, Callable, Dict, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from ..uarch.isa import DLEVEL_L2, NUM_DLEVELS
 
@@ -48,12 +59,16 @@ __all__ = [
     "MetricSpec",
     "METRIC_REGISTRY",
     "DEFAULT_METRICS",
+    "DEFAULT_PHASE_CHUNKS",
     "register_metric",
     "resolve_metrics",
+    "windowed_spec",
     "CPI",
     "BRANCH_MPKI",
     "L1D_MPKI",
     "DLEVEL_HIST",
+    "CPI_PHASE",
+    "L1D_PHASE",
 ]
 
 
@@ -82,6 +97,11 @@ class StepContext:
     pmax: Callable[[Any], Any]   # cross-shard max (identity off-mesh)
     sharded: bool
     batch: Dict[str, Any]
+    # --- window grid (threaded through the engine's reserved carry) ---
+    window: int = 0      # effective window length W (static)
+    win_index: Any = None   # (B_local,) int32 TRACE-global window index of
+                            # each local row (>= num_windows on padding rows)
+    num_windows: Any = None  # int32 scalar: real windows in the whole trace
 
     def at_last(self, x) -> Any:
         """Value of ``x`` at the globally-last valid position of the batch
@@ -93,6 +113,36 @@ class StepContext:
             )
         return x[jnp.argmax(jnp.where(self.on, self.gidx, -1.0)).astype(jnp.int32)]
 
+    def per_window(self, x) -> Any:
+        """Reshape a flattened ``(B_local*W,)`` array to local windows
+        ``(B_local, W)``."""
+        return x.reshape(-1, self.window)
+
+    def chunk_of(self, num_chunks: int) -> Any:
+        """Each local window's phase-chunk bucket in ``[0, num_chunks)``:
+        the trace's window grid divided into ``num_chunks`` contiguous
+        phases.  Padding windows clamp into the last bucket — harmless as
+        long as their contribution is masked (``ctx.valid`` is 0 there).
+
+        The index math is int32, so ``num_windows * num_chunks`` must fit
+        in int32 — the engine enforces it per trace for any spec that
+        declares ``MetricSpec.num_chunks`` (``windowed_spec`` does).
+        """
+        b = (self.win_index * num_chunks) // jnp.maximum(self.num_windows, 1)
+        return jnp.clip(b, 0, num_chunks - 1)
+
+    def windowed_sum(self, values, num_chunks: int) -> Any:
+        """Scatter already-masked per-position ``values`` (``(B_local*W,)``;
+        multiply by ``ctx.valid`` / ``ctx.on`` first) into a
+        ``(num_chunks,)`` phase accumulator, summed across shards.  The
+        carry stays a fixed shape no matter the trace length, so phase
+        curves ride the same one-compile-per-geometry executable."""
+        per_win = self.per_window(values).sum(axis=1)
+        seg = jax.ops.segment_sum(
+            per_win, self.chunk_of(num_chunks), num_segments=num_chunks
+        )
+        return self.psum(seg)
+
 
 @dataclasses.dataclass(frozen=True)
 class MetricSpec:
@@ -102,15 +152,21 @@ class MetricSpec:
     ``update``   (carry, StepContext) -> carry; traced into the jitted step
                  once per batch.  Cross-shard reductions must go through
                  ``ctx.psum``/``ctx.pmax``/``ctx.at_last``.
-    ``finalize`` (host carry pytree, num_instructions) -> {metric: float};
+    ``finalize`` (host carry pytree, num_instructions) -> {metric: value};
                  runs on host after the single end-of-trace sync, and may
-                 emit several named result metrics.
+                 emit several named result metrics.  Values are floats for
+                 scalars or ndarrays for curves (windowed specs emit their
+                 ``(num_chunks,)`` phase curve).
     """
 
     name: str
     init: Callable[[], Any]
     update: Callable[[Any, "StepContext"], Any]
-    finalize: Callable[[Any, int], Dict[str, float]]
+    finalize: Callable[[Any, int], Dict[str, Any]]
+    # windowed (phase-curve) specs declare their carry length here so the
+    # engine can enforce the int32 chunk-index envelope
+    # (num_windows * num_chunks < 2^31) before streaming a trace
+    num_chunks: Optional[int] = None
 
 
 # ---------------------------------------------------------------------------
@@ -206,6 +262,74 @@ DLEVEL_HIST = MetricSpec(
 
 
 # ---------------------------------------------------------------------------
+# Windowed (phase-curve) specs: a declared (num_chunks,) device carry
+# ---------------------------------------------------------------------------
+
+# Fig. 11's curves resolve fine at this granularity; authors pick their own
+DEFAULT_PHASE_CHUNKS = 32
+
+
+def windowed_spec(
+    name: str,
+    value: Callable[["StepContext"], Any],
+    *,
+    num_chunks: int = DEFAULT_PHASE_CHUNKS,
+    count: Optional[Callable[["StepContext"], Any]] = None,
+) -> MetricSpec:
+    """A phase-curve MetricSpec: mean of ``value(ctx)`` per trace phase.
+
+    ``value`` returns per-position contributions (``(B_local*W,)``, valid
+    positions only are counted — the factory masks with ``ctx.valid``).
+    ``count`` picks the denominator population per position (a bool mask;
+    default all valid instructions) — e.g. ``count=lambda ctx:
+    ctx.is_mem`` makes the curve a rate over memory ops rather than over
+    all instructions.  The carry is ``{"sum": (num_chunks,) f32,
+    "count": (num_chunks,) i32}`` — fixed shape, device-resident,
+    ``psum``-combined across shards — and ``finalize`` emits ``{name:
+    (num_chunks,) float32 ndarray}`` (phases with an empty population
+    divide by a clamped count of 1, i.e. report 0).  Counts are exact
+    int32 under every plan; sums are float32 partial sums (same
+    accumulation discipline as the built-in ``cpi`` spec).
+    """
+    if num_chunks < 1:
+        raise ValueError(f"num_chunks must be >= 1, got {num_chunks}")
+
+    def init():
+        return {
+            "sum": jnp.zeros((num_chunks,), jnp.float32),
+            "count": jnp.zeros((num_chunks,), jnp.int32),
+        }
+
+    def update(carry, ctx: "StepContext"):
+        vals = value(ctx).astype(jnp.float32) * ctx.valid
+        pop = ctx.on if count is None else count(ctx)
+        return {
+            "sum": carry["sum"] + ctx.windowed_sum(vals, num_chunks),
+            "count": carry["count"]
+            + ctx.windowed_sum(pop.astype(jnp.int32), num_chunks),
+        }
+
+    def finalize(carry, n: int) -> Dict[str, Any]:
+        cnt = np.asarray(carry["count"], dtype=np.int64)
+        curve = np.asarray(carry["sum"], dtype=np.float32) / np.maximum(cnt, 1)
+        return {name: curve.astype(np.float32)}
+
+    return MetricSpec(name, init, update, finalize, num_chunks=num_chunks)
+
+
+# Fig. 11-style phase curves: per-phase CPI (mean fetch cycles per
+# instruction) and per-phase L1D miss rate over memory ops (count=is_mem
+# picks the denominator population).  Registered, not default — request
+# them via EngineConfig.metrics / simulate(metrics=...).
+CPI_PHASE = windowed_spec("cpi_phase", lambda ctx: ctx.fetch_lat)
+L1D_PHASE = windowed_spec(
+    "l1d_phase",
+    lambda ctx: ((ctx.dlevel >= DLEVEL_L2) & ctx.is_mem).astype(jnp.float32),
+    count=lambda ctx: ctx.is_mem,
+)
+
+
+# ---------------------------------------------------------------------------
 # Registry
 # ---------------------------------------------------------------------------
 
@@ -225,7 +349,7 @@ def register_metric(spec: MetricSpec, *, overwrite: bool = False) -> MetricSpec:
     return spec
 
 
-for _spec in (CPI, BRANCH_MPKI, L1D_MPKI, DLEVEL_HIST):
+for _spec in (CPI, BRANCH_MPKI, L1D_MPKI, DLEVEL_HIST, CPI_PHASE, L1D_PHASE):
     register_metric(_spec)
 
 

@@ -20,10 +20,14 @@ Design points (each measured by ``benchmarks/bench_timing.py``):
     ``EngineConfig.collect`` asks for them.
   * **Prefetch.**  The next batch's host->device transfer is enqueued before
     the current result is consumed, overlapping copy with compute.
-  * **Sharding.**  With a mesh, the step runs under ``jax.shard_map`` with
-    the batch dimension split over the ``data`` axis (rules from
-    ``distributed/sharding.py``); specs reduce across shards through
-    ``StepContext.psum``/``pmax``.
+  * **Partitioning.**  Every placement/wrapping/index-mapping decision is
+    owned by an ``ExecutionPlan`` (``engine/plan.py``), resolved once per
+    ``EngineConfig`` from its ``plan=`` or ``mesh=``: the single-device
+    plan is a no-op wrapper, a sharded plan runs the step under
+    ``shard_map`` with the batch dimension split over the plan's batch
+    axes, and specs reduce across shards through
+    ``StepContext.psum``/``pmax``.  The plan is part of the step-cache
+    key, so the one-compile guarantee holds per (geometry, plan).
   * **Feature backends.**  ``feature_backend="pallas"`` replaces the host
     NumPy feature pre-pass with the device scan kernels in
     ``kernels/features/``: raw trace columns are shipped once, features are
@@ -46,13 +50,13 @@ from typing import Dict, Iterator, Optional, Tuple, Union
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 from ..core.dataset import INPUT_KEYS, num_windows, stream_batches
 from ..core.features import FeatureSet, extract_features
 from ..core.model import TaoConfig, tao_forward
-from ..distributed.sharding import logical_to_spec
 from .metrics import DEFAULT_METRICS, MetricSpec, StepContext, resolve_metrics
+from .plan import ExecutionPlan
 
 # NOTE: repro.kernels.features.ops is imported lazily inside simulate();
 # a module-level import would close an import cycle (kernels.features.ops
@@ -194,13 +198,20 @@ _RESERVED_RESULT_ATTRS = frozenset(
     ("num_instructions", "seconds", "mips", "metrics")
 )
 
+# reserved carry slot threading the trace's window grid (running window
+# offset + total windows) through the step for windowed MetricSpecs
+_GRID_KEY = "__grid__"
+
 
 @dataclasses.dataclass(frozen=True)
 class EngineConfig:
     batch_size: int = 64
     collect: bool = False        # also return per-instruction predictions
     prefetch: bool = True        # overlap host->device copy with compute
-    mesh: Optional[Mesh] = None  # shard_map data-parallel path when set
+    # Partitioning: pass a resolved ExecutionPlan, or just a mesh and the
+    # engine resolves one (both None -> the single-device plan).
+    mesh: Optional[Mesh] = None
+    plan: Optional[ExecutionPlan] = None
     # "numpy": host NumPy pre-pass + per-batch host->device transfers.
     # "pallas": fused device extraction — the trace's int32/bool columns are
     # shipped once, the Pallas scan kernels compute brhist/memdist on device,
@@ -297,7 +308,10 @@ class SimulationResult:
         return abs(self.cpi - truth_cpi) / truth_cpi * 100.0
 
     def __repr__(self) -> str:
-        scalars = ", ".join(f"{k}={v:.4g}" for k, v in self.metrics.items())
+        scalars = ", ".join(
+            f"{k}=curve{v.shape}" if isinstance(v, np.ndarray) else f"{k}={v:.4g}"
+            for k, v in self.metrics.items()
+        )
         collected = [k for k, v in self._arrays.items() if v is not None]
         return (
             f"SimulationResult(n={self.num_instructions}, {scalars}, "
@@ -342,21 +356,18 @@ class StreamingEngine:
                 f"feature_chunk must be >= 1, got {ecfg.feature_chunk}"
             )
         self._specs: Tuple[MetricSpec, ...] = resolve_metrics(ecfg.metrics)
-        self._batch_axes: tuple = ()
-        if ecfg.mesh is not None:
-            # the rules table in distributed/sharding.py decides which mesh
-            # axes carry the "batch" logical axis (divisibility-checked)
-            spec = logical_to_spec(
-                ("batch",), shape=(ecfg.batch_size,), mesh=ecfg.mesh
-            )
-            entry = spec[0] if len(spec) else None
-            if entry is None:
+        for s in self._specs:
+            if s.name == _GRID_KEY:
                 raise ValueError(
-                    f"cannot shard batch_size={ecfg.batch_size} over mesh "
-                    f"{dict(ecfg.mesh.shape)}: no usable 'batch' mesh axes "
-                    "(see distributed.sharding.LOGICAL_RULES)"
+                    f"metric name {_GRID_KEY!r} is reserved for the "
+                    "engine's window-grid carry"
                 )
-            self._batch_axes = (entry,) if isinstance(entry, str) else tuple(entry)
+        # one partitioning decision for everything this engine does:
+        # placement, shard_map wrapping, index mapping, reductions
+        self.plan = ExecutionPlan.resolve(
+            ecfg.mesh, batch_size=ecfg.batch_size, plan=ecfg.plan
+        )
+        self.plan.validate_batch(ecfg.batch_size)
         self.params = params
         self.cfg = cfg
         self.ecfg = ecfg
@@ -374,9 +385,10 @@ class StreamingEngine:
     def _build_step(self, w_eff: int, entry: _CachedStep):
         cfg = self.cfg
         collect = self.ecfg.collect
-        mesh = self.ecfg.mesh
-        axes = self._batch_axes
+        plan = self.plan
+        actx = plan.axis_context()
         specs = self._specs
+        bsz_global = self.ecfg.batch_size
 
         def body(params, carry, batch):
             entry.compiles += 1  # runs at trace time only
@@ -391,27 +403,20 @@ class StreamingEngine:
             mem = batch["is_mem"].reshape(-1) & on
 
             n_local = valid.shape[0]
-            if mesh is not None:
-                shard = jnp.int32(0)
-                for a in axes:  # row-major linear index over the batch axes
-                    shard = shard * mesh.shape[a] + jax.lax.axis_index(a)
-                gidx = (shard * n_local + jnp.arange(n_local)).astype(jnp.float32)
-
-                def psum(x):
-                    return jax.lax.psum(x, axes)
-
-                def pmax(x):
-                    return jax.lax.pmax(x, axes)
-
-            else:
-                gidx = jnp.arange(n_local, dtype=jnp.float32)
-
-                def psum(x):
-                    return x
-
-                pmax = psum
+            shard = actx.shard_index()  # 0 on the single-device plan
+            gidx = (shard * n_local + jnp.arange(n_local)).astype(jnp.float32)
             # key of the globally-last valid position (-1 when none local)
-            last_key = pmax(jnp.max(jnp.where(on, gidx, -1.0)))
+            last_key = actx.pmax(jnp.max(jnp.where(on, gidx, -1.0)))
+
+            # trace-global window index of each local row, from the grid
+            # carry (windowed specs scatter phase contributions with it)
+            grid = carry[_GRID_KEY]
+            b_local = batch["valid"].shape[0]
+            win_index = (
+                grid["seen"]
+                + shard * b_local
+                + jnp.arange(b_local, dtype=jnp.int32)
+            )
 
             ctx = StepContext(
                 valid=valid,
@@ -424,12 +429,19 @@ class StreamingEngine:
                 dlevel=dlev,
                 gidx=gidx,
                 last_key=last_key,
-                psum=psum,
-                pmax=pmax,
-                sharded=mesh is not None,
+                psum=actx.psum,
+                pmax=actx.pmax,
+                sharded=plan.sharded,
                 batch=batch,
+                window=w_eff,
+                win_index=win_index,
+                num_windows=grid["total"],
             )
             new_carry = {s.name: s.update(carry[s.name], ctx) for s in specs}
+            new_carry[_GRID_KEY] = {
+                "seen": grid["seen"] + jnp.int32(bsz_global),
+                "total": grid["total"],
+            }
             if collect:
                 per = {
                     "fetch_lat": fetch,
@@ -441,24 +453,18 @@ class StreamingEngine:
                 per = {}
             return new_carry, per
 
-        if mesh is None:
+        if not plan.sharded:
             return jax.jit(body)
 
-        batched = P(axes if len(axes) > 1 else axes[0])
+        batched = plan.batch_spec()
         batch_specs = {
             k: batched for k in INPUT_KEYS + ("valid", "is_branch", "is_mem")
         }
-        if hasattr(jax, "shard_map"):
-            shard_map = jax.shard_map
-        else:  # jax 0.4.x
-            from jax.experimental.shard_map import shard_map
-
         per_specs = (
             {k: batched for k in PER_INSTRUCTION_KEYS} if collect else {}
         )
-        mapped = shard_map(
+        mapped = plan.wrap(
             body,
-            mesh=mesh,
             in_specs=(P(), P(), batch_specs),
             out_specs=(P(), per_specs),
         )
@@ -469,12 +475,15 @@ class StreamingEngine:
         if entry is None:
             # Keyed on exactly what the compiled step depends on — notably
             # NOT prefetch or feature_backend, so "numpy" and "pallas"
-            # engines of the same shape share one executable.
+            # engines of the same shape share one executable.  The
+            # resolved plan (not the raw mesh) is the partitioning key, so
+            # EngineConfig(mesh=m) and EngineConfig(plan=resolve(m)) also
+            # share one.
             key = (
                 self.cfg,
                 self.ecfg.batch_size,
                 self.ecfg.collect,
-                self.ecfg.mesh,
+                self.plan,
                 self._specs,
                 w_eff,
             )
@@ -485,6 +494,33 @@ class StreamingEngine:
                 _STEP_CACHE[key] = entry
             self._steps[w_eff] = entry
         return entry.fn
+
+    def init_carry(self, n: int) -> Dict:
+        """The initial carry for a trace of ``n`` instructions: every
+        requested spec's ``init()`` plus the engine's reserved window-grid
+        slot (running window offset + total windows — what windowed specs
+        scatter phase contributions with).  Code driving the jitted step
+        directly (custom batch columns via ``stream_batches(extra=...)``)
+        must start from this, not a hand-built spec dict."""
+        if n < 1:
+            raise ValueError("cannot simulate an empty trace")
+        nw = num_windows(n, self.cfg.window, self.cfg.window)
+        for s in self._specs:
+            # chunk_of's bucket math (win_index * num_chunks) is int32;
+            # refuse traces that would silently wrap into bucket 0
+            if s.num_chunks is not None and nw * s.num_chunks > 2**31 - 1:
+                raise ValueError(
+                    f"windowed spec {s.name!r}: num_windows ({nw}) * "
+                    f"num_chunks ({s.num_chunks}) exceeds the int32 "
+                    "chunk-index envelope; reduce num_chunks or split "
+                    "the trace"
+                )
+        carry = {s.name: s.init() for s in self._specs}
+        carry[_GRID_KEY] = {
+            "seen": jnp.zeros((), jnp.int32),
+            "total": jnp.asarray(nw, jnp.int32),
+        }
+        return carry
 
     def step_entry_for(self, n: int) -> _CachedStep:
         """The cached step entry ``simulate`` will use for a trace of
@@ -498,19 +534,11 @@ class StreamingEngine:
 
     # ---- streaming -----------------------------------------------------
 
-    def _device_put(self, batch: Dict[str, np.ndarray]) -> Dict:
-        if self.ecfg.mesh is not None:
-            axes = self._batch_axes
-            sh = NamedSharding(
-                self.ecfg.mesh, P(axes if len(axes) > 1 else axes[0])
-            )
-            return {k: jax.device_put(v, sh) for k, v in batch.items()}
-        return jax.device_put(batch)
-
     def _prefetched(self, host_batches: Iterator[Dict]) -> Iterator[Dict]:
         """Enqueue batch i+1's transfer before batch i is consumed (inline
-        on CPU, threaded producer on accelerator backends)."""
-        return prefetch_to_device(host_batches, self._device_put)
+        on CPU, threaded producer on accelerator backends); placement is
+        the plan's."""
+        return prefetch_to_device(host_batches, self.plan.device_put)
 
     def _device_batches(
         self, arrays: Dict, w_eff: int, count: int
@@ -535,7 +563,9 @@ class StreamingEngine:
         stacked["valid"] = jnp.asarray(valid.reshape(nb, bsz, w_eff))
         for i in range(nb):
             batch = {k: v[i] for k, v in stacked.items()}
-            yield self._device_put(batch) if self.ecfg.mesh is not None else batch
+            # arrays are already device-resident; a sharded plan still
+            # needs them re-laid-out across its batch axes
+            yield self.plan.device_put(batch) if self.plan.sharded else batch
 
     def simulate(
         self,
@@ -584,10 +614,13 @@ class StreamingEngine:
             batches = (
                 self._prefetched(host_batches)
                 if self.ecfg.prefetch
-                else (self._device_put(b) for b in host_batches)
+                else (self.plan.device_put(b) for b in host_batches)
             )
 
-        carry = {s.name: s.init() for s in self._specs}
+        # specs' init plus the window-grid slot: running global window
+        # offset + total real windows (data, not shape — every trace
+        # shares the executable)
+        carry = self.init_carry(n)
         pers = []
         for batch in batches:
             carry, per = step(self.params, carry, batch)
@@ -640,6 +673,7 @@ def simulate_trace_engine(
     features: Optional[FeatureSet] = None,
     collect: bool = False,
     mesh: Optional[Mesh] = None,
+    plan: Optional[ExecutionPlan] = None,
     feature_backend: str = "numpy",
     metrics: Tuple[Union[str, MetricSpec], ...] = DEFAULT_METRICS,
 ) -> SimulationResult:
@@ -651,6 +685,7 @@ def simulate_trace_engine(
             batch_size=batch_size,
             collect=collect,
             mesh=mesh,
+            plan=plan,
             feature_backend=feature_backend,
             metrics=metrics,
         ),

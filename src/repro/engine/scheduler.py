@@ -35,13 +35,14 @@ import dataclasses
 import queue
 import threading
 import time
-from typing import Dict, Iterable, List, Optional, Tuple
+from typing import Dict, Iterable, List, Optional, Tuple, Union
 
 import jax
 import numpy as np
 
 from ..core.features import FeatureSet, extract_features
 from ..core.model import TaoConfig
+from .plan import ExecutionPlan
 from .runner import EngineConfig, SimulationResult, StreamingEngine
 
 __all__ = ["SweepJob", "SweepReport", "TraceSweeper", "sweep_traces"]
@@ -73,14 +74,18 @@ class SweepReport:
     queue_occupancy_max: int
     queue_depth: int
     prepared_async: bool = False  # threaded producer (False = inline on CPU)
+    plan_kind: str = "single"     # ExecutionPlan kind the sweep ran under
+    num_shards: int = 1           # devices each step fanned out over
 
-    def stats(self) -> Dict[str, float]:
+    def stats(self) -> Dict[str, Union[float, int, str]]:
         return {
             "traces_per_s": self.traces_per_s,
             "mips": self.mips,
             "num_compiles": self.num_compiles,
             "queue_occupancy_mean": self.queue_occupancy_mean,
             "queue_occupancy_max": self.queue_occupancy_max,
+            "plan_kind": self.plan_kind,
+            "num_shards": self.num_shards,
         }
 
 
@@ -101,11 +106,14 @@ class TraceSweeper:
     ):
         if depth < 1:
             raise ValueError(f"queue depth must be >= 1, got {depth}")
-        if ecfg.mesh is not None:
-            raise NotImplementedError(
-                "TraceSweeper currently runs single-mesh; use StreamingEngine "
-                "with EngineConfig(mesh=...) for sharded single-trace runs"
-            )
+        # Sharded sweeps are a composition: the engines the consumer builds
+        # all resolve the same ExecutionPlan from this config, so the trace
+        # queue fans out over models/traces while each step fans out over
+        # the plan's batch axes.  Resolve eagerly so a bad (mesh, batch)
+        # combination fails here, not mid-sweep.
+        self.plan = ExecutionPlan.resolve(
+            ecfg.mesh, batch_size=ecfg.batch_size, plan=ecfg.plan
+        )
         self.cfg = cfg
         self.ecfg = ecfg
         self.depth = depth
@@ -246,6 +254,8 @@ class TraceSweeper:
             queue_occupancy_max=int(np.max(occ)) if occ else 0,
             queue_depth=self.depth,
             prepared_async=self.async_prepare,
+            plan_kind=self.plan.kind,
+            num_shards=self.plan.num_shards,
         )
 
 

@@ -37,7 +37,7 @@ import numpy as np
 
 from ..configs import ARCH_IDS, get_arch
 from ..data.pipeline import make_lm_batch_specs
-from ..distributed.sharding import logical_to_spec, mesh_context
+from ..distributed.sharding import logical_to_spec, mesh_context, tree_shardings
 from ..models.backbone import Model
 from ..train.trainer import TrainConfig, batch_axes, init_state, make_train_step, state_axes
 from .hloanalysis import analyze_hlo
@@ -83,28 +83,9 @@ def runnable_cells():
 # ---------------------------------------------------------------------------
 
 
-def _is_axes_leaf(x) -> bool:
-    """Logical-axis leaves are plain tuples of str/None (not NamedTuples)."""
-    if x is None:
-        return True
-    return (
-        isinstance(x, tuple)
-        and not hasattr(x, "_fields")
-        and all(e is None or isinstance(e, str) for e in x)
-    )
-
-
-def _shardings_for(tree_axes, tree_shapes, mesh):
-    """Map a logical-axis pytree + matching ShapeDtypeStruct pytree to
-    NamedShardings."""
-
-    def one(axes, sds):
-        if axes is None:
-            return jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
-        spec = logical_to_spec(axes, shape=sds.shape, mesh=mesh)
-        return jax.sharding.NamedSharding(mesh, spec)
-
-    return jax.tree.map(one, tree_axes, tree_shapes, is_leaf=_is_axes_leaf)
+# kept under its historical name; the implementation is the shared
+# resolver in distributed.sharding (also behind trainer.state_shardings)
+_shardings_for = tree_shardings
 
 
 def lower_cell(arch: str, shape: str, mesh, *, microbatches: int = 0,

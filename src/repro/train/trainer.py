@@ -21,7 +21,7 @@ from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from ..distributed.sharding import logical_to_spec, shard
+from ..distributed.sharding import tree_shardings
 from ..models.backbone import Model
 from .optim import AdamWConfig, AdamWState, adamw_init, adamw_update, make_lr_schedule
 
@@ -31,6 +31,7 @@ __all__ = [
     "make_train_step",
     "init_state",
     "state_axes",
+    "state_shardings",
     "CachedTrainStep",
     "cached_train_step",
     "train_step_compiles",
@@ -137,6 +138,15 @@ def state_axes(model: Model) -> TrainState:
         params=paxes,
         opt=AdamWState(step=(), mu=paxes, nu=paxes),
     )
+
+
+def state_shardings(model: Model, state, mesh) -> TrainState:
+    """NamedShardings for a TrainState on ``mesh`` — the trainer-side
+    consumer of the shared ``distributed.tree_shardings`` resolver (the
+    launch dry-run resolves batches and decode caches through the same
+    helper).  ``state`` may be a TrainState of arrays or of
+    ShapeDtypeStructs (e.g. from ``jax.eval_shape``)."""
+    return tree_shardings(state_axes(model), state, mesh)
 
 
 def make_train_step(

@@ -176,7 +176,9 @@ def test_custom_vector_carry_spec_taken_branches(params, trace):
     engine = StreamingEngine(
         params, CFG, EngineConfig(batch_size=16, metrics=("cpi", taken))
     )
-    carry = {s.name: s.init() for s in engine._specs}
+    # init_carry includes the engine's reserved window-grid slot; driving
+    # the step off a hand-built spec dict is no longer valid
+    carry = engine.init_carry(n)
     step = engine._get_step(min(CFG.window, n))
     for batch in stream_batches(
         fs, CFG.window, 16, stride=CFG.window,

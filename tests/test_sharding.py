@@ -79,3 +79,119 @@ def test_experts_on_model():
 def test_vocab_sharding():
     spec = logical_to_spec(("vocab", "fsdp"), shape=(152064, 5120), mesh=SINGLE)
     assert spec == P("model", "data")
+
+
+# ---------------------------------------------------------------------------
+# Degradation paths (satellite: missing axes, uneven window, prefix
+# fallback, used-axis exclusion) + mesh_context nesting/restore
+# ---------------------------------------------------------------------------
+
+
+def test_rule_axes_entirely_missing_from_mesh_replicate():
+    # every axis the "batch" rule names is absent -> replicated, no error
+    tiny = FakeMesh({"model": 4})
+    assert logical_to_spec(("batch",), shape=(64,), mesh=tiny) == P()
+
+
+def test_custom_rules_missing_axis_dropped_then_divisibility():
+    rules = {"batch": ("expansion", "data")}  # "expansion" never exists
+    spec = logical_to_spec(("batch",), shape=(64,), mesh=SINGLE, rules=rules)
+    assert spec == P("data")
+    # and with an indivisible dim the surviving axis is dropped too
+    assert logical_to_spec(("batch",), shape=(7,), mesh=SINGLE, rules=rules) == P()
+
+
+def test_uneven_acceptance_window_boundary():
+    # waste threshold is 2*dim >= shards: dim=8 on 16 shards is EXACTLY on
+    # the boundary (pads 8 -> 16, 2x) and is accepted ...
+    spec = logical_to_spec(
+        (None, "heads"), shape=(4, 8), mesh=SINGLE, allow_uneven=True
+    )
+    assert spec == P(None, "model")
+    # ... dim=7 is past it (>2x waste) and replicates
+    spec = logical_to_spec(
+        (None, "heads"), shape=(4, 7), mesh=SINGLE, allow_uneven=True
+    )
+    assert spec == P()
+
+
+def test_uneven_prefix_fallback_on_multipod():
+    # batch=20 on pod*data=32: the divisible even PREFIX ("pod",) wins
+    # before uneven padding is even considered ...
+    spec = logical_to_spec(
+        ("batch",), shape=(20,), mesh=MULTI, allow_uneven=True
+    )
+    assert spec == P("pod")
+    # ... batch=21 divides no even prefix, so uneven over the full
+    # product applies (pads 21 -> 32, within the 2x waste window)
+    spec = logical_to_spec(
+        ("batch",), shape=(21,), mesh=MULTI, allow_uneven=True
+    )
+    assert spec == P(("pod", "data"))
+
+
+def test_used_axis_exclusion_with_uneven():
+    # "seq" takes model; "heads" cannot reuse it even with uneven allowed
+    spec = logical_to_spec(
+        ("seq", "heads"), shape=(4096, 40), mesh=SINGLE, allow_uneven=True
+    )
+    assert spec == P("model")
+
+
+def test_spec_for_shape_forwards_allow_uneven():
+    """spec_for_shape must honor allow_uneven like shard() does, instead
+    of silently running in even-only mode."""
+    import jax as _jax
+
+    from repro.distributed.sharding import spec_for_shape
+
+    mesh = _jax.make_mesh((1,), ("model",))
+    rules = {"heads": ("model",)}
+    # 1-device mesh: everything divides, so exercise the code path by
+    # comparing against logical_to_spec with the same flag on a fake mesh
+    sh = spec_for_shape(mesh, (None, "heads"), (4, 14), rules, allow_uneven=True)
+    assert sh.spec == logical_to_spec(
+        (None, "heads"), shape=(4, 14), mesh=mesh, rules=rules, allow_uneven=True
+    )
+    # and the flag actually changes the pure-spec result on a 16-way mesh
+    assert logical_to_spec(
+        (None, "heads"), shape=(4, 14), mesh=SINGLE, allow_uneven=True
+    ) != logical_to_spec((None, "heads"), shape=(4, 14), mesh=SINGLE)
+
+
+def test_mesh_context_nesting_and_restore():
+    import jax as _jax
+
+    from repro.distributed.sharding import current_mesh, mesh_context
+
+    outer = _jax.make_mesh((1,), ("data",))
+    inner = _jax.make_mesh((1,), ("model",))
+    assert current_mesh() is None
+    with mesh_context(outer):
+        assert current_mesh() is outer
+        with mesh_context(inner):
+            assert current_mesh() is inner
+        assert current_mesh() is outer  # inner exit restores outer
+    assert current_mesh() is None
+
+    # exception inside the context must still restore the previous one
+    with pytest.raises(RuntimeError, match="boom"):
+        with mesh_context(outer):
+            with mesh_context(inner):
+                raise RuntimeError("boom")
+    assert current_mesh() is None
+
+
+def test_mesh_context_custom_rules_scope():
+    import jax as _jax
+
+    from repro.distributed.sharding import mesh_context
+
+    mesh = _jax.make_mesh((1,), ("data",))
+    rules = {"batch": ("data",), "heads": ()}
+    with mesh_context(mesh, rules):
+        # context rules flow into logical_to_spec when none are passed
+        assert logical_to_spec(("batch",), shape=(8,)) == P("data")
+        assert logical_to_spec(("heads",), shape=(8,)) == P()
+    # outside, the default table is back (no mesh -> replicated)
+    assert logical_to_spec(("batch",), shape=(8,)) == P()
