@@ -144,3 +144,143 @@ def run_sweep() -> None:
             a = report.results[f"{name}/{tb}"]
             b = model.simulate(tr, batch_size=sess.batch_size)
             assert a.cpi == b.cpi and a.l1d_mpki == b.l1d_mpki, (name, tb)
+
+
+# ---------------------------------------------------------------------------
+# Cold-start benchmark: first-result latency with and without the
+# persistent caches (artifact store + JAX compilation cache).
+# ---------------------------------------------------------------------------
+
+_COLDSTART_MARK = "COLDSTART_JSON:"
+
+
+def _coldstart_workload(store_dir: str, t_spawn: float) -> None:
+    """The child process body: one previously-declared sweep geometry,
+    warmed up, captured, simulated.  Prints a JSON record tagged
+    ``COLDSTART_JSON:`` for the parent."""
+    import json
+    import time
+
+    from repro.api import Session
+    from repro.core.features import num_extractions
+    from repro.engine import xla_cache_counters
+
+    from .common import TEST_LEN, tao_config
+
+    t_session = time.time()
+    sess = Session(tao_config(), store=store_dir)
+    # declare the geometry set up front: sim step AND train step compile
+    # (or, warm, deserialize) before any trace exists
+    sess.warmup([TEST_LEN], train=True)
+    model = sess.init_model(seed=7)
+    tr = sess.capture("mcf", TEST_LEN)
+    res = model.simulate(tr)
+    first = time.time()
+    rep = sess.sweep({"m": model}, {"t": tr})
+    out = {
+        # what the caches can address: Session construction -> first metric
+        "cold_start_to_first_result_s": first - t_session,
+        # process-inclusive variant (interpreter + jax import overhead
+        # rides in both cold and warm, diluting the ratio)
+        "spawn_to_first_result_s": first - t_spawn,
+        "total_s": time.time() - t_spawn,
+        "cpi": res.cpi,
+        "l1d_mpki": res.l1d_mpki,
+        "branch_mpki": res.branch_mpki,
+        "xla": xla_cache_counters(),
+        "features_extracted": num_extractions(),
+        "sweep_features_extracted": rep.features_extracted,
+        "sweep_features_from_store": rep.features_from_store,
+        "store": sess.store.stats(),
+    }
+    print(_COLDSTART_MARK + json.dumps(out), flush=True)
+
+
+def run_coldstart() -> None:
+    """Run the identical workload in two fresh subprocesses against one
+    store: the first pays every cost (feature extraction, detailed sim,
+    XLA), the second must hit the artifact store and deserialize every
+    executable.  Emits before/after ``cold_start_to_first_result_s`` and
+    stores the full records in the --json artifact (``coldstart`` key)."""
+    import json
+    import os
+    import shutil
+    import subprocess
+    import sys
+    import tempfile
+    import time
+
+    from .common import SCALE, emit, set_extra
+
+    root = tempfile.mkdtemp(prefix="repro-coldstart-")
+    store = os.path.join(root, "store")
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+    def child():
+        env = dict(os.environ)
+        env["PYTHONPATH"] = os.pathsep.join(
+            [os.path.join(repo, "src"), env.get("PYTHONPATH", "")]
+        ).rstrip(os.pathsep)
+        env.setdefault("BENCH_SCALE", SCALE)
+        code = (
+            "from benchmarks.bench_dse import _coldstart_workload; "
+            f"_coldstart_workload({store!r}, {time.time()!r})"
+        )
+        p = subprocess.run(
+            [sys.executable, "-c", code],
+            capture_output=True, text=True, cwd=repo, env=env, timeout=1800,
+        )
+        if p.returncode != 0:
+            raise RuntimeError(
+                f"coldstart child failed:\n{p.stdout[-2000:]}\n{p.stderr[-4000:]}"
+            )
+        line = [
+            ln for ln in p.stdout.splitlines() if ln.startswith(_COLDSTART_MARK)
+        ][-1]
+        return json.loads(line[len(_COLDSTART_MARK):])
+
+    try:
+        cold = child()
+        warm = child()
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+
+    # correctness first: the warm process must reproduce the cold one's
+    # metrics bit-for-bit from cached artifacts
+    for k in ("cpi", "l1d_mpki", "branch_mpki"):
+        assert warm[k] == cold[k], (k, warm[k], cold[k])
+    assert warm["xla"]["misses"] == 0, warm["xla"]
+    assert warm["xla"]["requests"] > 0, warm["xla"]
+    assert warm["features_extracted"] == 0, warm["features_extracted"]
+
+    before = cold["cold_start_to_first_result_s"]
+    after = warm["cold_start_to_first_result_s"]
+    speedup = before / max(after, 1e-9)
+    emit(
+        "coldstart/cold", before * 1e6,
+        f"first_result_s={before:.2f};xla_misses={cold['xla']['misses']};"
+        f"extractions={cold['features_extracted']}",
+    )
+    emit(
+        "coldstart/warm", after * 1e6,
+        f"first_result_s={after:.2f};xla_misses={warm['xla']['misses']};"
+        f"xla_hits={warm['xla']['hits']};extractions=0",
+    )
+    emit(
+        "coldstart/speedup", 0.0,
+        f"cold_start_to_first_result_s_before={before:.2f};"
+        f"cold_start_to_first_result_s_after={after:.2f};"
+        f"speedup={speedup:.1f}x;"
+        f"spawn_to_first_before={cold['spawn_to_first_result_s']:.2f};"
+        f"spawn_to_first_after={warm['spawn_to_first_result_s']:.2f}",
+    )
+    set_extra(
+        "coldstart",
+        {
+            "cold_start_to_first_result_s_before": before,
+            "cold_start_to_first_result_s_after": after,
+            "speedup": speedup,
+            "cold": cold,
+            "warm": warm,
+        },
+    )

@@ -8,6 +8,7 @@ A100 wall-clock.  Emits ``name,us_per_call,derived`` CSV rows.
 from __future__ import annotations
 
 import dataclasses
+import json
 import os
 import time
 from typing import Dict, List
@@ -17,28 +18,30 @@ from repro.core import FeatureConfig, TaoConfig
 from repro.core.dataset import WindowDataset
 from repro.uarch import MicroArchConfig
 
+# geometry_manifest.json is the single source of truth for bench geometry
+# (trace lengths, window, model dims per BENCH_SCALE): CI hashes it into
+# the actions/cache key for the persistent compilation cache + artifact
+# store, so editing a geometry here rolls those caches over in lockstep.
+with open(
+    os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                 "geometry_manifest.json")
+) as _f:
+    _MANIFEST = json.load(_f)
+
 SCALE = os.environ.get("BENCH_SCALE", "small")
+# tiny = CI smoke (seconds, trends only); small = CPU container default;
+# anything else = "full"-ish (still CPU feasible)
+_G = _MANIFEST.get(SCALE, _MANIFEST["full"])
 
-if SCALE == "tiny":  # CI smoke: seconds, not minutes; trends only
-    TRACE_LEN = 2_000
-    TEST_LEN = 1_000
-    EPOCHS = 2
-    WINDOW = 17
-    D_MODEL, N_HEADS, N_LAYERS, D_FF, D_CAT = 32, 2, 1, 64, 16
-elif SCALE == "small":
-    TRACE_LEN = 12_000
-    TEST_LEN = 6_000
-    EPOCHS = 6
-    WINDOW = 33
-    D_MODEL, N_HEADS, N_LAYERS, D_FF, D_CAT = 64, 4, 2, 128, 32
-else:  # "full"-ish (still CPU feasible)
-    TRACE_LEN = 60_000
-    TEST_LEN = 20_000
-    EPOCHS = 15
-    WINDOW = 65
-    D_MODEL, N_HEADS, N_LAYERS, D_FF, D_CAT = 128, 4, 3, 256, 64
+TRACE_LEN = _G["trace_len"]
+TEST_LEN = _G["test_len"]
+EPOCHS = _G["epochs"]
+WINDOW = _G["window"]
+D_MODEL, N_HEADS, N_LAYERS, D_FF, D_CAT = (
+    _G["d_model"], _G["n_heads"], _G["n_layers"], _G["d_ff"], _G["d_cat"]
+)
 
-FEATURES = FeatureConfig(n_buckets=256, n_queue=8, n_mem=16)
+FEATURES = FeatureConfig(**_MANIFEST["features"])
 
 TRAIN_BENCHES = ["dee", "rom", "nab", "lee"]
 TEST_BENCHES = ["mcf", "xal", "wrf", "cac"]
@@ -54,6 +57,20 @@ def emit(name: str, us_per_call: float, derived: str = "") -> None:
 
 def rows() -> List[str]:
     return list(_ROWS)
+
+
+# structured side-channel for --json artifacts: suites drop whole objects
+# here (e.g. the coldstart suite's before/after timings) that would not
+# survive the CSV row format
+_EXTRAS: Dict[str, object] = {}
+
+
+def set_extra(key: str, value) -> None:
+    _EXTRAS[key] = value
+
+
+def extras() -> Dict[str, object]:
+    return dict(_EXTRAS)
 
 
 def tao_config() -> TaoConfig:
@@ -76,7 +93,11 @@ _sessions: Dict[TaoConfig, Session] = {}
 def session_for(cfg: TaoConfig) -> Session:
     s = _sessions.get(cfg)
     if s is None:
-        s = Session(cfg)
+        # $REPRO_STORE attaches a persistent artifact store (and with it
+        # the XLA compilation cache) to every bench session — how CI keeps
+        # sweep/cold-start smoke warm across runs
+        store = os.environ.get("REPRO_STORE")
+        s = Session(cfg, store=store) if store else Session(cfg)
         _sessions[cfg] = s
     return s
 

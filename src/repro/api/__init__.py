@@ -13,8 +13,15 @@ docs/api.md "Streaming training"), plus the engine's pluggable metric
 surface (``MetricSpec`` /
 ``register_metric``) and the sweep scheduler's report type.  See
 ``docs/api.md`` for concepts and the MetricSpec authoring guide.
+
+Zero cold start: ``Session(store=...)`` attaches a content-addressed
+``ArtifactStore`` (and, with it, the JAX persistent compilation cache) so
+traces, features, detailed-sim summaries, trained params, and compiled
+executables all persist across processes; ``Session.warmup`` AOT-compiles
+a declared geometry set up front.  See docs/store.md.
 """
 from ..core.dataset import StreamingWindowDataset, WindowDataset
+from ..engine.aot import enable_persistent_cache, persistent_cache_status
 from ..engine.metrics import (
     DEFAULT_METRICS,
     METRIC_REGISTRY,
@@ -31,10 +38,14 @@ from ..engine.runner import (
     SimulationResult,
 )
 from ..engine.scheduler import SweepJob, SweepReport
+from ..store import ArtifactStore
 from .session import DesignSpace, JointModel, Session, Trace, TrainedModel
 
 __all__ = [
+    "ArtifactStore",
     "Session",
+    "enable_persistent_cache",
+    "persistent_cache_status",
     "Trace",
     "TrainedModel",
     "JointModel",

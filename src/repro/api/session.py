@@ -28,6 +28,7 @@ double-buffered multi-trace sweeps.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import warnings
 from typing import Dict, Iterable, List, Optional, Sequence, Tuple, Union
 
@@ -51,11 +52,26 @@ from ..core.selection import (
     select_pair_mahalanobis,
     select_random,
 )
-from ..core.transfer import TrainResult, train_tao_impl, transfer_finetune
+from ..core.transfer import (
+    TrainResult,
+    train_tao_impl,
+    transfer_finetune,
+    warmup_train_step,
+)
+from ..engine.aot import enable_persistent_cache, persistent_cache_status
 from ..engine.metrics import DEFAULT_METRICS, MetricSpec
 from ..engine.plan import ExecutionPlan
 from ..engine.runner import EngineConfig, SimulationResult, StreamingEngine
 from ..engine.scheduler import SweepJob, SweepReport, TraceSweeper
+from ..store import (
+    ArtifactStore,
+    array_digest,
+    config_token,
+    content_key,
+    features_to_tree,
+    tree_digest,
+    tree_to_features,
+)
 from ..train.optim import AdamWConfig, adamw_init
 from ..uarch import (
     MicroArchConfig,
@@ -123,6 +139,14 @@ class Trace:
     def num_instructions(self) -> int:
         return len(self.functional)
 
+    @functools.cached_property
+    def digest(self) -> str:
+        """Stable blake2b content identity of the functional trace — the
+        same scheme the sweep scheduler's feature dedup and the artifact
+        store key on, so a trace re-captured in another process maps to
+        the same cached artifacts."""
+        return array_digest(self.functional)
+
 
 @dataclasses.dataclass
 class TrainedModel:
@@ -145,6 +169,11 @@ class TrainedModel:
     sim_batch_size: int = 64
     sim_feature_backend: str = "numpy"
     sim_plan: Optional[ExecutionPlan] = None
+    # artifact store stamped by the owning Session: simulate() loads/saves
+    # inference features through it, so a warm store skips extraction
+    store: Optional[ArtifactStore] = dataclasses.field(
+        default=None, repr=False, compare=False
+    )
 
     def __post_init__(self):
         self._engines: Dict[EngineConfig, StreamingEngine] = {}
@@ -189,16 +218,31 @@ class TrainedModel:
         (inherited from ``Session(mesh=...)``)."""
         if plan is None and mesh is None:
             plan = self.sim_plan
+        backend = feature_backend or self.sim_feature_backend
         engine = self.engine(
             batch_size=batch_size if batch_size is not None else self.sim_batch_size,
             collect=collect,
-            feature_backend=feature_backend or self.sim_feature_backend,
+            feature_backend=backend,
             mesh=mesh,
             plan=plan,
             metrics=tuple(metrics) if metrics is not None else DEFAULT_METRICS,
         )
         ft = trace.functional if isinstance(trace, Trace) else trace
+        if features is None and self.store is not None and backend == "numpy":
+            features = self._stored_features(trace, ft)
         return engine.simulate(ft, features=features)
+
+    def _stored_features(self, trace, ft: np.ndarray) -> FeatureSet:
+        """Inference features through the artifact store (same key the
+        sweep scheduler uses, so simulate() and sweeps share entries)."""
+        dg = trace.digest if isinstance(trace, Trace) else array_digest(ft)
+        key = content_key("features", dg, self.cfg.features)
+        hit = self.store.get("features", key)
+        if hit is not None:
+            return tree_to_features(hit[0])
+        fs = extract_features(ft, self.cfg.features, with_labels=False)
+        self.store.put("features", key, features_to_tree(fs))
+        return fs
 
     @property
     def num_compiles(self) -> int:
@@ -240,6 +284,7 @@ class TrainedModel:
         return _model_from_result(
             res, self.cfg, name or f"{self.name}-transfer", uarch,
             self.sim_batch_size, self.sim_feature_backend, self.sim_plan,
+            self.store,
         )
 
 
@@ -251,6 +296,7 @@ def _model_from_result(
     sim_batch_size: int = 64,
     sim_feature_backend: str = "numpy",
     sim_plan: Optional[ExecutionPlan] = None,
+    store: Optional[ArtifactStore] = None,
 ) -> TrainedModel:
     return TrainedModel(
         params=res.params,
@@ -263,6 +309,7 @@ def _model_from_result(
         sim_batch_size=sim_batch_size,
         sim_feature_backend=sim_feature_backend,
         sim_plan=sim_plan,
+        store=store,
     )
 
 
@@ -280,6 +327,9 @@ class JointModel:
     sim_batch_size: int = 64          # inherited by head()/transfer() models
     sim_feature_backend: str = "numpy"
     sim_plan: Optional[ExecutionPlan] = None
+    store: Optional[ArtifactStore] = dataclasses.field(
+        default=None, repr=False, compare=False
+    )
 
     @property
     def embedding(self) -> Dict:
@@ -307,6 +357,7 @@ class JointModel:
             sim_batch_size=self.sim_batch_size,
             sim_feature_backend=self.sim_feature_backend,
             sim_plan=self.sim_plan,
+            store=self.store,
         )
 
     def transfer(
@@ -341,6 +392,7 @@ class JointModel:
         return _model_from_result(
             res, self.cfg, name or f"transfer-{self.method}", uarch,
             self.sim_batch_size, self.sim_feature_backend, self.sim_plan,
+            self.store,
         )
 
     def eval_loss(self, batches, arch: str = "A") -> float:
@@ -451,11 +503,31 @@ class Session:
         streaming_threshold: Optional[int] = 1_000_000,
         mesh=None,
         plan: Optional[ExecutionPlan] = None,
+        store: Optional[Union[ArtifactStore, str]] = None,
+        compile_cache: Union[None, bool, str] = None,
     ):
         self.cfg = cfg if cfg is not None else TaoConfig()
         self.batch_size = batch_size
         self.feature_backend = feature_backend
         self.seed = seed
+        # Content-addressed artifact store (repro.store): captured traces,
+        # labeled/inference FeatureSets, detailed-sim summaries, and
+        # trained params persist across processes through it — the second
+        # process running the same workflow recomputes none of them.
+        if isinstance(store, str):
+            store = ArtifactStore(store)
+        self.store = store
+        # JAX persistent compilation cache: auto-enabled alongside a store
+        # (executables land under store.xla_cache_dir so artifacts and
+        # binaries travel — and get wiped — together).  compile_cache=False
+        # opts out; True or a path enables it without a store.
+        if compile_cache is None:
+            if store is not None:
+                enable_persistent_cache(store.xla_cache_dir)
+        elif compile_cache is True:
+            enable_persistent_cache()
+        elif compile_cache is not False:
+            enable_persistent_cache(compile_cache)
         # One partitioning decision for the whole workflow: models trained
         # by this session simulate under it, and Session.sweep composes the
         # trace queue with it.  None (the default, when no mesh/plan is
@@ -502,12 +574,27 @@ class Session:
         cached = self._traces.get(key)
         if cached is not None:
             return cached
+        # named benchmarks are pure functions of (benchmark, n): store-
+        # backed (custom Program objects are not serializable — skip them)
+        skey = None
+        if self.store is not None and isinstance(source, str):
+            skey = content_key("trace", bench, n)
+            hit = self.store.get("trace", skey)
+            if hit is not None:
+                tr = Trace(
+                    name=name, functional=hit[0]["functional"],
+                    program=prog, benchmark=bench,
+                )
+                self._traces[key] = tr
+                return tr
         tr = Trace(
             name=name,
             functional=run_functional(prog, n),
             program=prog,
             benchmark=bench,
         )
+        if skey is not None:
+            self.store.put("trace", skey, {"functional": tr.functional})
         self._traces[key] = tr
         return tr
 
@@ -522,8 +609,40 @@ class Session:
 
     def ground_truth(self, uarch: MicroArchConfig, trace: Trace) -> Dict[str, float]:
         """Detailed-simulator metrics for a trace on one design point."""
+        skey = None
+        if self.store is not None:
+            skey = content_key(
+                "detail_summary", trace.digest, config_token(uarch)
+            )
+            hit = self.store.get("detail_summary", skey)
+            if hit is not None:
+                return dict(hit[1]["summary"])
         _, summ = self._run_detailed(uarch, trace)
+        if skey is not None:
+            # pure-JSON payload: rides in the manifest, no array files
+            self.store.put("detail_summary", skey, {}, {"summary": dict(summ)})
         return summ
+
+    def _adjusted_features(self, uarch: MicroArchConfig, tr: Trace) -> FeatureSet:
+        """Labeled per-trace FeatureSet for (trace, µarch): detailed sim →
+        §4.1 cycle re-attribution → feature extraction.  Store-backed — a
+        warm artifact store skips all three (the expensive half of
+        building a training dataset)."""
+        skey = None
+        if self.store is not None:
+            skey = content_key(
+                "features_labeled", tr.digest, config_token(uarch),
+                self.cfg.features,
+            )
+            hit = self.store.get("features_labeled", skey)
+            if hit is not None:
+                return tree_to_features(hit[0])
+        det, _ = self._run_detailed(uarch, tr)
+        al = build_adjusted_trace(det)
+        fs = extract_features(al.adjusted, self.cfg.features)
+        if skey is not None:
+            self.store.put("features_labeled", skey, features_to_tree(fs))
+        return fs
 
     # ---- datasets (§4.1 adjusted traces -> windows) --------------------
 
@@ -575,27 +694,19 @@ class Session:
         if streaming:
             # keep only the per-trace FeatureSets (O(trace)); windowing,
             # dedup, and batch materialization all stream from views
-            fsets = []
-            for tr in traces:
-                det, _ = self._run_detailed(uarch, tr)
-                al = build_adjusted_trace(det)
-                fsets.append(extract_features(al.adjusted, self.cfg.features))
+            fsets = [self._adjusted_features(uarch, tr) for tr in traces]
             ds: Dataset = StreamingWindowDataset(
                 fsets, self.cfg.window, dedup=dedup, dedup_scope=dedup_scope
             )
         else:
-            parts = []
-            for tr in traces:
-                det, _ = self._run_detailed(uarch, tr)
-                al = build_adjusted_trace(det)
-                parts.append(
-                    build_windows(
-                        extract_features(al.adjusted, self.cfg.features),
-                        self.cfg.window,
-                        dedup=dedup,
-                    )
+            ds = concat_datasets([
+                build_windows(
+                    self._adjusted_features(uarch, tr),
+                    self.cfg.window,
+                    dedup=dedup,
                 )
-            ds = concat_datasets(parts)
+                for tr in traces
+            ])
         self._datasets[key] = (tuple(traces), ds)
         return ds
 
@@ -634,6 +745,47 @@ class Session:
                 "from traces; it cannot change an explicit dataset= (pass "
                 "the right flavor directly)"
             )
+        init_params = init.params if isinstance(init, TrainedModel) else init
+        model_name = name or (uarch.name if uarch is not None else "tao")
+        # Trained params are a pure function of the full recipe when the
+        # session builds the dataset itself (streaming and materialized
+        # pipelines are bit-identical, so streaming= stays out of the key).
+        # An explicit dataset= or eval_fn= has state the key cannot see —
+        # those train unconditionally.
+        skey = None
+        if (
+            self.store is not None
+            and dataset is None
+            and eval_fn is None
+            and uarch is not None
+            and traces is not None
+        ):
+            trs = [traces] if isinstance(traces, Trace) else list(traces)
+            skey = content_key(
+                "params",
+                config_token(self.cfg),
+                config_token(uarch),
+                tuple(t.digest for t in trs),
+                epochs,
+                batch_size,
+                lr,
+                freeze_embed,
+                self.seed if seed is None else seed,
+                target_loss,
+                tree_digest(init_params) if init_params is not None else None,
+                plan.cache_token() if plan is not None else None,
+            )
+            hit = self.store.get("params", skey)
+            if hit is not None:
+                tree, extra = hit
+                return TrainedModel(
+                    params=tree, cfg=self.cfg, name=model_name, uarch=uarch,
+                    losses=[float(x) for x in extra.get("losses", [])],
+                    seconds=0.0, steps=int(extra.get("steps", 0)),
+                    sim_batch_size=self.batch_size,
+                    sim_feature_backend=self.feature_backend,
+                    sim_plan=self.plan, store=self.store,
+                )
         if dataset is None:
             if uarch is None or traces is None:
                 raise ValueError(
@@ -641,7 +793,6 @@ class Session:
                     "explicit dataset="
                 )
             dataset = self.dataset(uarch, traces, streaming=streaming)
-        init_params = init.params if isinstance(init, TrainedModel) else init
         res = train_tao_impl(
             self.cfg,
             dataset,
@@ -655,9 +806,16 @@ class Session:
             target_loss=target_loss,
             plan=plan,
         )
+        if skey is not None:
+            self.store.put(
+                "params", skey, res.params,
+                {"losses": [float(x) for x in res.losses],
+                 "steps": int(res.steps)},
+            )
         return _model_from_result(
-            res, self.cfg, name or (uarch.name if uarch is not None else "tao"),
+            res, self.cfg, model_name,
             uarch, self.batch_size, self.feature_backend, self.plan,
+            self.store,
         )
 
     def init_model(self, seed: Optional[int] = None, name: str = "init") -> TrainedModel:
@@ -668,6 +826,7 @@ class Session:
             sim_batch_size=self.batch_size,
             sim_feature_backend=self.feature_backend,
             sim_plan=self.plan,
+            store=self.store,
         )
 
     def train_joint(
@@ -769,6 +928,7 @@ class Session:
             sim_batch_size=self.batch_size,
             sim_feature_backend=self.feature_backend,
             sim_plan=self.plan,
+            store=self.store,
         )
 
     # ---- step 3: multi-trace simulation --------------------------------
@@ -822,5 +982,82 @@ class Session:
             for tn, tr in traces.items()
         ]
         return TraceSweeper(
-            self.cfg, ecfg, depth=depth, async_prepare=async_prepare
+            self.cfg, ecfg, depth=depth, async_prepare=async_prepare,
+            store=self.store,
         ).run(jobs)
+
+    # ---- zero cold start ------------------------------------------------
+
+    def warmup(
+        self,
+        geometries: Iterable[Union[int, Tuple[int, int]]],
+        *,
+        plans: Optional[Iterable[Optional[ExecutionPlan]]] = None,
+        train: Union[None, bool, Iterable[Dict]] = None,
+        metrics: Optional[Metrics] = None,
+        collect: bool = False,
+    ) -> Dict[str, object]:
+        """AOT-compile the session's executables for a declared geometry
+        set before any trace, params, or dataset exists.
+
+        ``geometries`` lists trace lengths (``int``, simulated at the
+        session batch size) or ``(length, batch_size)`` pairs; ``plans``
+        extends the set over extra ExecutionPlans (default: the session's
+        own).  ``train=True`` additionally warms the default train step
+        (``train=[{"batch_size": ..., "lr": ..., ...}]`` for specific
+        recipes).  With the persistent compilation cache enabled (any
+        ``Session(store=...)``), the executables serialize to disk — a
+        later process calling ``warmup`` with the same geometries
+        deserializes instead of compiling, and its first ``simulate``/
+        ``train`` hits a ready executable: zero cold start."""
+        mets = tuple(metrics) if metrics is not None else DEFAULT_METRICS
+        plan_list = list(plans) if plans is not None else [self.plan]
+        geos = []
+        for g in geometries:
+            if isinstance(g, (tuple, list)):
+                n, bs = g
+            else:
+                n, bs = g, self.batch_size
+            geos.append((int(n), int(bs)))
+        abstract = jax.eval_shape(
+            functools.partial(init_tao, cfg=self.cfg), jax.random.PRNGKey(0)
+        )
+        engines: Dict[tuple, StreamingEngine] = {}
+        compiled = 0
+        aot = 0
+        for plan in plan_list:
+            for n, bs in sorted(set(geos)):
+                ekey = (bs, plan)
+                eng = engines.get(ekey)
+                if eng is None:
+                    ecfg = EngineConfig(
+                        batch_size=bs,
+                        feature_backend=self.feature_backend,
+                        collect=collect,
+                        plan=plan,
+                        metrics=mets,
+                    )
+                    eng = StreamingEngine(abstract, self.cfg, ecfg)
+                    engines[ekey] = eng
+                entry = eng.warmup(n)
+                compiled += 1
+                aot += entry.aot is not None
+        trained = 0
+        if train:
+            recipes = [{}] if train is True else list(train)
+            for r in recipes:
+                warmup_train_step(
+                    self.cfg,
+                    batch_size=r.get("batch_size", 16),
+                    lr=r.get("lr", 3e-4),
+                    freeze_embed=r.get("freeze_embed", False),
+                    plan=r.get("plan"),
+                    window=r.get("window"),
+                )
+                trained += 1
+        return {
+            "sim_geometries": compiled,
+            "sim_aot": aot,
+            "train_steps": trained,
+            "compile_cache": persistent_cache_status(),
+        }

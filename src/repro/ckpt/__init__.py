@@ -1,8 +1,19 @@
 from .checkpoint import (
     CheckpointManager,
     latest_step,
+    load_array_tree,
     restore_pytree,
+    save_array_tree,
     save_pytree,
+    write_array_tree,
 )
 
-__all__ = ["CheckpointManager", "save_pytree", "restore_pytree", "latest_step"]
+__all__ = [
+    "CheckpointManager",
+    "save_pytree",
+    "restore_pytree",
+    "save_array_tree",
+    "load_array_tree",
+    "write_array_tree",
+    "latest_step",
+]

@@ -24,7 +24,15 @@ from typing import Any, Dict, Optional
 import jax
 import numpy as np
 
-__all__ = ["save_pytree", "restore_pytree", "latest_step", "CheckpointManager"]
+__all__ = [
+    "save_pytree",
+    "restore_pytree",
+    "save_array_tree",
+    "load_array_tree",
+    "write_array_tree",
+    "latest_step",
+    "CheckpointManager",
+]
 
 _MANIFEST = "manifest.json"
 
@@ -99,6 +107,151 @@ def restore_pytree(template, directory: str):
         else:
             leaves.append(jax.numpy.asarray(arr, dtype=getattr(leaf, "dtype", None)))
     return jax.tree_util.tree_unflatten(flat_template[1], leaves)
+
+
+# ---------------------------------------------------------------------------
+# Template-free (typed-path) tree serialization.
+#
+# ``save_pytree``/``restore_pytree`` flatten paths to strings, which is fine
+# when the reader holds a template of the tree (the trainer restoring into
+# its own TrainState) but ambiguous without one: "pred/blocks/0" cannot say
+# whether ``blocks`` is a dict with key "0" or a list.  The artifact store
+# (repro.store) restores params trees in processes that never built the
+# model, so these variants record each path segment *typed* — ["k", name]
+# for a dict key, ["i", idx] for a sequence index — and rebuild the exact
+# container structure on load.  None leaves are not representable (jax
+# flattening drops them); trees holding None must encode absence as a
+# missing dict key instead.
+# ---------------------------------------------------------------------------
+
+
+def _typed_paths(tree):
+    recs = []
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        tp = []
+        for p in path:
+            if isinstance(p, jax.tree_util.DictKey):
+                tp.append(["k", p.key])
+            elif isinstance(p, jax.tree_util.SequenceKey):
+                tp.append(["i", p.idx])
+            else:
+                raise TypeError(
+                    f"typed-path serialization supports dict/list/tuple "
+                    f"trees only; cannot encode path entry {p!r}"
+                )
+        recs.append((tp, np.asarray(leaf)))
+    return recs
+
+
+def _dtype_record(arr: np.ndarray):
+    # structured dtypes (functional traces) round-trip via descr; plain
+    # dtypes via their name string
+    return arr.dtype.descr if arr.dtype.names else str(arr.dtype)
+
+
+def _dtype_from_record(rec):
+    if isinstance(rec, list):
+        return np.dtype([tuple(x) for x in rec])
+    if rec == "bfloat16":
+        import ml_dtypes
+
+        return np.dtype(ml_dtypes.bfloat16)
+    return np.dtype(rec)
+
+
+def write_array_tree(tree, directory: str, extra: Optional[Dict] = None) -> None:
+    """Write a typed-path manifest + raw array files directly into
+    ``directory`` (caller owns atomicity — see ``save_array_tree`` for the
+    tmp-and-rename variant)."""
+    os.makedirs(directory, exist_ok=True)
+    arrays = []
+    for i, (tp, arr) in enumerate(_typed_paths(tree)):
+        fname = f"arr_{i}.bin"
+        with open(os.path.join(directory, fname), "wb") as f:
+            f.write(np.ascontiguousarray(arr).tobytes())
+        arrays.append(
+            {
+                "path": tp,
+                "file": fname,
+                "dtype": _dtype_record(arr),
+                "shape": list(arr.shape),
+                "bytes": int(arr.nbytes),
+            }
+        )
+    manifest = {"format": "typed-paths-v1", "arrays": arrays, "extra": extra or {}}
+    tmp_manifest = os.path.join(directory, _MANIFEST + ".tmp")
+    with open(tmp_manifest, "w") as f:
+        json.dump(manifest, f)
+    # manifest lands last and atomically: a partial write is detectable as
+    # "no manifest" rather than a truncated one
+    os.replace(tmp_manifest, os.path.join(directory, _MANIFEST))
+
+
+def save_array_tree(tree, directory: str, extra: Optional[Dict] = None) -> None:
+    """Atomic template-free save: typed paths, raw bytes, tmp-then-rename."""
+    tmp = directory + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    write_array_tree(tree, tmp, extra)
+    if os.path.exists(directory):
+        shutil.rmtree(directory)
+    os.rename(tmp, directory)
+
+
+def load_array_tree(directory: str):
+    """Rebuild ``(tree, extra)`` from a typed-path manifest — no template.
+
+    Raises (FileNotFoundError / json / ValueError) on missing, truncated,
+    or inconsistent entries; the artifact store treats any failure here as
+    a cache miss and drops the entry.
+    """
+    with open(os.path.join(directory, _MANIFEST)) as f:
+        manifest = json.load(f)
+    if manifest.get("format") != "typed-paths-v1":
+        raise ValueError(f"not a typed-path tree: {directory}")
+    recs = manifest["arrays"]
+    leaves = []
+    for rec in recs:
+        dtype = _dtype_from_record(rec["dtype"])
+        with open(os.path.join(directory, rec["file"]), "rb") as f:
+            buf = f.read()
+        expect = int(np.prod(rec["shape"], dtype=np.int64)) * dtype.itemsize
+        if len(buf) != expect:
+            raise ValueError(
+                f"truncated array file {rec['file']} in {directory}: "
+                f"{len(buf)} bytes, expected {expect}"
+            )
+        arr = np.frombuffer(buf, dtype=dtype).reshape(rec["shape"]).copy()
+        leaves.append((tuple(tuple(p) for p in rec["path"]), arr))
+
+    if not leaves:  # extra-only entry (e.g. a ground-truth summary)
+        return {}, manifest.get("extra", {})
+    if len(leaves) == 1 and not leaves[0][0]:  # single leaf at the root
+        return leaves[0][1], manifest.get("extra", {})
+
+    root: Dict = {}
+    for path, arr in leaves:
+        node = root
+        for depth, seg in enumerate(path):
+            if depth == len(path) - 1:
+                node[tuple(seg)] = arr
+            else:
+                node = node.setdefault(tuple(seg), {})
+
+    def finalize(node):
+        if not isinstance(node, dict):
+            return node
+        tags = {t for t, _ in node}
+        if tags == {"i"}:
+            idxs = sorted(k for _, k in node)
+            if idxs != list(range(len(idxs))):
+                raise ValueError(f"non-contiguous sequence indices {idxs}")
+            return [finalize(node[("i", i)]) for i in idxs]
+        if tags != {"k"}:
+            raise ValueError(f"mixed container tags {tags} in typed-path tree")
+        return {k: finalize(v) for (_, k), v in sorted(node.items())}
+
+    return finalize(root), manifest.get("extra", {})
 
 
 def read_extra(directory: str) -> Dict:

@@ -7,7 +7,15 @@ from __future__ import annotations
 
 import jax
 
-__all__ = ["shard_map", "make_mesh", "activate_mesh", "cost_analysis", "on_tpu"]
+__all__ = [
+    "shard_map",
+    "make_mesh",
+    "activate_mesh",
+    "cost_analysis",
+    "on_tpu",
+    "enable_compilation_cache_flags",
+    "register_monitoring_listener",
+]
 
 
 def on_tpu() -> bool:
@@ -49,3 +57,36 @@ def cost_analysis(compiled):
     if isinstance(ca, (list, tuple)):
         ca = ca[0] if ca else {}
     return ca
+
+
+def enable_compilation_cache_flags(directory: str) -> bool:
+    """Point jax's persistent compilation cache at ``directory``; returns
+    False when this jax build has no persistent-cache support at all.  The
+    size/time thresholds are zeroed where the flags exist (their names and
+    availability drifted across 0.4.x) so even sub-millisecond CPU-sized
+    executables persist — exactly the ones this repro's cold-start tests
+    replay."""
+    try:
+        jax.config.update("jax_compilation_cache_dir", directory)
+    except (AttributeError, KeyError, ValueError):
+        return False
+    for flag, value in (
+        ("jax_persistent_cache_min_entry_size_bytes", -1),
+        ("jax_persistent_cache_min_compile_time_secs", 0.0),
+    ):
+        try:
+            jax.config.update(flag, value)
+        except (AttributeError, KeyError, ValueError):
+            pass
+    return True
+
+
+def register_monitoring_listener(callback) -> bool:
+    """jax.monitoring.register_event_listener where available (the event
+    stream the persistent-cache hit/miss counters ride on); returns False
+    on jax builds without it — counters then just stay 0."""
+    mon = getattr(jax, "monitoring", None)
+    if mon is None or not hasattr(mon, "register_event_listener"):
+        return False
+    mon.register_event_listener(callback)
+    return True

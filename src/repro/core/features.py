@@ -41,6 +41,7 @@ __all__ = [
     "FeatureSet",
     "extract_features",
     "extract_features_reference",
+    "num_extractions",
     "signed_log",
     "SIGNED_LOG_COEFFS",
     "SIGNED_LOG_SQRT2",
@@ -48,6 +49,17 @@ __all__ = [
 ]
 
 NUM_OPCODES = len(Op)
+
+# process-wide count of full feature-extraction passes (the O(trace)
+# host pre-pass) — snapshot before/after a region to prove it was served
+# from cache/store instead of recomputed (the cross-process reuse tests
+# pin this to zero against a warm store)
+_NUM_EXTRACTIONS = 0
+
+
+def num_extractions() -> int:
+    """How many times ``extract_features`` has run in this process."""
+    return _NUM_EXTRACTIONS
 
 
 @dataclasses.dataclass(frozen=True)
@@ -74,6 +86,29 @@ class FeatureSet:
 
     def __len__(self) -> int:
         return len(self.opcode)
+
+    @property
+    def digest(self) -> str:
+        """Stable content digest (blake2b over every array, labels
+        included) — the identity the sweep scheduler's dedup and the
+        artifact store share, instead of object ids.  Cached on first use;
+        treat the arrays as immutable once hashed."""
+        d = getattr(self, "_digest", None)
+        if d is None:
+            from ..store.content import tree_digest
+
+            d = tree_digest(
+                {
+                    "opcode": self.opcode,
+                    "regbits": self.regbits,
+                    "flags": self.flags,
+                    "brhist": self.brhist,
+                    "memdist": self.memdist,
+                    "labels": self.labels,
+                }
+            )
+            self._digest = d
+        return d
 
     def slice(self, lo: int, hi: int) -> "FeatureSet":
         lab = None
@@ -235,6 +270,8 @@ def extract_features(
 ) -> FeatureSet:
     """`trace` is either an adjusted trace (ADJ_DTYPE, labels available) or a
     raw functional trace (FUNC_TRACE_DTYPE, inference path)."""
+    global _NUM_EXTRACTIONS
+    _NUM_EXTRACTIONS += 1
     opcode = trace["opcode"].astype(np.int32)
     regbits, flags = _per_instruction(trace, opcode)
     return FeatureSet(

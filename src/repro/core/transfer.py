@@ -10,6 +10,7 @@ Three regimes (paper Table 5):
 from __future__ import annotations
 
 import dataclasses
+import functools
 import time
 import warnings
 from typing import Callable, Dict, List, Optional, Tuple, Union
@@ -19,11 +20,18 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..train.optim import AdamWConfig, adamw_init, adamw_update
-from ..train.trainer import cached_train_step
+from ..train.trainer import CachedTrainStep, cached_train_step
+from ..uarch.isa import NUM_REGS
 from .dataset import StreamingWindowDataset, WindowDataset
 from .model import TaoConfig, init_tao, multi_metric_loss, tao_forward
 
-__all__ = ["TrainResult", "train_tao", "train_tao_impl", "transfer_finetune"]
+__all__ = [
+    "TrainResult",
+    "train_tao",
+    "train_tao_impl",
+    "transfer_finetune",
+    "warmup_train_step",
+]
 
 # Both dataset flavors expose the same ``batches(batch_size, rng=...)``
 # contract (bit-identical streams for the same rng); everything below is
@@ -85,7 +93,77 @@ def _make_step(cfg: TaoConfig, opt_cfg: AdamWConfig, trainable: str, plan=None):
 
         return step
 
-    return cached_train_step(("tao", cfg, opt_cfg, trainable, plan), build).fn
+    # the entry itself is callable (dispatching its AOT executable when
+    # warmup_train_step has compiled one), so callers use it like the fn
+    return cached_train_step(("tao", cfg, opt_cfg, trainable, plan), build)
+
+
+def warmup_train_step(
+    cfg: TaoConfig,
+    *,
+    batch_size: int = 16,
+    lr: float = 3e-4,
+    freeze_embed: bool = False,
+    plan=None,
+    window: Optional[int] = None,
+) -> CachedTrainStep:
+    """AOT-compile the cached train step for a training recipe ahead of
+    any data: params/optimizer shapes come from ``jax.eval_shape`` over
+    ``init_tao``, the batch from the dataset layer's declared geometry
+    (``window`` defaults to ``cfg.window`` — pass the effective window for
+    traces shorter than it).  Single-device only: on a sharded plan (or
+    multi-process run) the entry is built but dispatch stays with the
+    jitted step, whose first call the persistent compilation cache serves.
+    Idempotent per (recipe, geometry)."""
+    from ..engine.aot import abstract_like, compile_bytes_estimate
+
+    if plan is not None and not plan.sharded:
+        plan = None  # same normalization as train_tao_impl
+    opt_cfg = AdamWConfig(lr=lr)
+    trainable = "headonly" if freeze_embed else "all"
+    entry = _make_step(cfg, opt_cfg, trainable, plan=plan)
+    if entry.aot is not None:
+        return entry
+    if plan is not None or jax.process_count() > 1:
+        return entry
+
+    params = jax.eval_shape(
+        functools.partial(init_tao, cfg=cfg), jax.random.PRNGKey(0)
+    )
+    if freeze_embed:
+        opt = jax.eval_shape(
+            adamw_init, {"adapt": params["adapt"], "pred": params["pred"]}
+        )
+    else:
+        opt = jax.eval_shape(adamw_init, params)
+
+    w = window if window is not None else cfg.window
+    b = batch_size
+    f = cfg.features
+    sds = jax.ShapeDtypeStruct
+    # the exact shapes/dtypes WindowDataset/StreamingWindowDataset batches
+    # carry: INPUT_KEYS plus the label dict from features._labels
+    batch = {
+        "opcode": sds((b, w), jnp.int32),
+        "regbits": sds((b, w, NUM_REGS), jnp.float32),
+        "flags": sds((b, w, f.flags_dim), jnp.float32),
+        "brhist": sds((b, w, f.n_queue), jnp.float32),
+        "memdist": sds((b, w, f.n_mem), jnp.float32),
+        "labels": {
+            "fetch_lat": sds((b, w), jnp.float32),
+            "exec_lat": sds((b, w), jnp.float32),
+            "mispred": sds((b, w), jnp.float32),
+            "dlevel": sds((b, w), jnp.int32),
+            "icache_miss": sds((b, w), jnp.float32),
+            "tlb_miss": sds((b, w), jnp.float32),
+            "is_branch": sds((b, w), jnp.float32),
+            "is_mem": sds((b, w), jnp.float32),
+        },
+    }
+    compiled = entry.fn.lower(abstract_like(params), abstract_like(opt), batch).compile()
+    entry.est_bytes = compile_bytes_estimate(compiled)
+    entry.aot = compiled
+    return entry
 
 
 def _run_epochs(

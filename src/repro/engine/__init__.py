@@ -16,6 +16,11 @@ from .metrics import (
     resolve_metrics,
     windowed_spec,
 )
+from .aot import (
+    enable_persistent_cache,
+    persistent_cache_status,
+    xla_cache_counters,
+)
 from .plan import AxisContext, ExecutionPlan
 from .runner import (
     FEATURE_BACKENDS,
@@ -25,6 +30,8 @@ from .runner import (
     MetricNotComputedError,
     SimulationResult,
     StreamingEngine,
+    cache_stats,
+    clear_step_cache,
     simulate_trace_engine,
 )
 from .scheduler import SweepJob, SweepReport, TraceSweeper, sweep_traces
@@ -32,6 +39,11 @@ from .scheduler import SweepJob, SweepReport, TraceSweeper, sweep_traces
 __all__ = [
     "AxisContext",
     "ExecutionPlan",
+    "cache_stats",
+    "clear_step_cache",
+    "enable_persistent_cache",
+    "persistent_cache_status",
+    "xla_cache_counters",
     "EngineConfig",
     "FEATURE_BACKENDS",
     "PER_INSTRUCTION_KEYS",

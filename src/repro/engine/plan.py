@@ -257,3 +257,18 @@ class ExecutionPlan:
             "batch_axes": list(self.batch_axes),
             "mesh_shape": dict(self.mesh.shape) if self.mesh is not None else {},
         }
+
+    def cache_token(self) -> tuple:
+        """Serializable identity for content-addressed cache keys
+        (``repro.store``): the partitioning *shape* — kind, batch axes,
+        mesh axis extents — with device objects excluded, so the same
+        logical plan resolved in two processes (whose ``Mesh`` objects
+        can never compare equal) maps to the same key."""
+        return (
+            "plan",
+            self.kind,
+            tuple(self.batch_axes),
+            tuple(sorted(dict(self.mesh.shape).items()))
+            if self.mesh is not None
+            else (),
+        )

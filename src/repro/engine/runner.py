@@ -55,6 +55,8 @@ from jax.sharding import Mesh, PartitionSpec as P
 from ..core.dataset import INPUT_KEYS, num_windows, stream_batches
 from ..core.features import FeatureSet, extract_features
 from ..core.model import TaoConfig, tao_forward
+from ..uarch.isa import NUM_REGS
+from .aot import abstract_like, compile_bytes_estimate
 from .metrics import DEFAULT_METRICS, MetricSpec, StepContext, resolve_metrics
 from .plan import ExecutionPlan
 
@@ -71,6 +73,8 @@ __all__ = [
     "MetricNotComputedError",
     "SimulationResult",
     "StreamingEngine",
+    "cache_stats",
+    "clear_step_cache",
     "prefetch_to_device",
     "simulate_trace_engine",
 ]
@@ -322,16 +326,67 @@ class SimulationResult:
 class _CachedStep:
     """A jitted step shared across engines with identical (cfg, ecfg):
     params are an argument, so design-space sweeps that train many models
-    of the same shape reuse one executable."""
+    of the same shape reuse one executable.
 
-    __slots__ = ("fn", "compiles")
+    ``aot`` holds the ahead-of-time compiled executable once
+    ``StreamingEngine.warmup`` has lowered the geometry (single-device
+    plans only — a sharded call site infers shardings from its concrete
+    arguments); engines dispatch ``aot or fn``.  ``est_bytes`` is the
+    retained-bytes estimate ``cache_stats`` aggregates, known only for
+    AOT-compiled entries.
+    """
+
+    __slots__ = ("fn", "compiles", "aot", "est_bytes")
 
     def __init__(self):
         self.fn = None
         self.compiles = 0
+        self.aot = None
+        self.est_bytes = None
+
+    def __call__(self, params, carry, batch):
+        # direct drivers (tests, custom loops) call the entry like the old
+        # bare jitted step; always through ``fn`` — an AOT executable pins
+        # input layouts (committed device params), which arbitrary callers
+        # don't guarantee.  Engines pick ``aot`` themselves in simulate().
+        return self.fn(params, carry, batch)
 
 
 _STEP_CACHE: Dict[tuple, _CachedStep] = {}
+
+# entry-reuse counters behind cache_stats(): a hit means an engine needed a
+# step and an already-built entry (its own or the process cache's) served
+# it; a miss means a new jitted step was constructed
+_STEP_STATS: Dict[str, int] = {"hits": 0, "misses": 0}
+
+
+def cache_stats() -> Dict[str, int]:
+    """Inspect the process-wide step cache: entry count, hit/miss
+    counters, trace-time compiles, and estimated retained executable bytes
+    (measured for AOT-warmed entries; ``entries_unmeasured`` counts
+    lazily-jitted entries whose executables the estimate cannot see)."""
+    measured = [e.est_bytes for e in _STEP_CACHE.values() if e.est_bytes]
+    return {
+        "entries": len(_STEP_CACHE),
+        "hits": _STEP_STATS["hits"],
+        "misses": _STEP_STATS["misses"],
+        "compiles": sum(e.compiles for e in _STEP_CACHE.values()),
+        "aot_compiled": sum(1 for e in _STEP_CACHE.values() if e.aot is not None),
+        "retained_bytes_est": sum(measured),
+        "entries_unmeasured": sum(
+            1 for e in _STEP_CACHE.values() if not e.est_bytes
+        ),
+    }
+
+
+def clear_step_cache() -> int:
+    """Drop every cached step (returns how many were dropped).  Engines
+    already holding an entry keep it alive until they are collected; new
+    engines re-build.  Hit/miss counters keep accumulating — snapshot
+    ``cache_stats()`` around a region to attribute its traffic."""
+    n = len(_STEP_CACHE)
+    _STEP_CACHE.clear()
+    return n
 
 
 class StreamingEngine:
@@ -470,7 +525,7 @@ class StreamingEngine:
         )
         return jax.jit(mapped)
 
-    def _get_step(self, w_eff: int):
+    def _get_step(self, w_eff: int) -> _CachedStep:
         entry = self._steps.get(w_eff)
         if entry is None:
             # Keyed on exactly what the compiled step depends on — notably
@@ -489,11 +544,16 @@ class StreamingEngine:
             )
             entry = _STEP_CACHE.get(key)
             if entry is None:
+                _STEP_STATS["misses"] += 1
                 entry = _CachedStep()
                 entry.fn = self._build_step(w_eff, entry)
                 _STEP_CACHE[key] = entry
+            else:
+                _STEP_STATS["hits"] += 1
             self._steps[w_eff] = entry
-        return entry.fn
+        else:
+            _STEP_STATS["hits"] += 1
+        return entry
 
     def init_carry(self, n: int) -> Dict:
         """The initial carry for a trace of ``n`` instructions: every
@@ -529,8 +589,67 @@ class StreamingEngine:
         if n < 1:
             raise ValueError("cannot simulate an empty trace")
         w_eff = min(self.cfg.window, n)
-        self._get_step(w_eff)
-        return self._steps[w_eff]
+        return self._get_step(w_eff)
+
+    # ---- ahead-of-time compilation --------------------------------------
+
+    def _abstract_batch(self, w_eff: int) -> Dict:
+        """ShapeDtypeStructs of one step batch — the exact shapes/dtypes
+        ``stream_batches`` (and the device-side pallas slicer, which is
+        bit-compatible) produces for this engine's geometry."""
+        b = self.ecfg.batch_size
+        f = self.cfg.features
+        sds = jax.ShapeDtypeStruct
+        return {
+            "opcode": sds((b, w_eff), jnp.int32),
+            "regbits": sds((b, w_eff, NUM_REGS), jnp.float32),
+            "flags": sds((b, w_eff, f.flags_dim), jnp.float32),
+            "brhist": sds((b, w_eff, f.n_queue), jnp.float32),
+            "memdist": sds((b, w_eff, f.n_mem), jnp.float32),
+            "valid": sds((b, w_eff), jnp.float32),
+            "is_branch": sds((b, w_eff), jnp.bool_),
+            "is_mem": sds((b, w_eff), jnp.bool_),
+        }
+
+    def warmup(self, n: int) -> _CachedStep:
+        """Compile the step for traces of length ``n`` ahead of time.
+
+        Lowers from abstract (ShapeDtypeStruct) params and batch — so the
+        engine may hold abstract params from ``jax.eval_shape`` — and
+        compiles through the XLA client, populating the persistent
+        compilation cache when ``engine.aot.enable_persistent_cache`` has
+        pointed one at disk.  On a single-device, single-process plan the
+        compiled executable is pinned on the entry and dispatched directly
+        by ``simulate`` (zero retrace, zero dispatch-time lowering); on
+        sharded plans the entry still gets built and traced (the warm
+        persistent cache then serves the sharded call's own compile), but
+        dispatch stays with the jitted function, which owns the
+        shard-placement inference.  Idempotent per geometry.
+        """
+        entry = self.step_entry_for(n)
+        if entry.aot is not None:
+            return entry
+        if self.plan.sharded or jax.process_count() > 1:
+            return entry
+        w_eff = min(self.cfg.window, n)
+        lowered = entry.fn.lower(
+            abstract_like(self.params),
+            abstract_like(self.init_carry(n)),
+            self._abstract_batch(w_eff),
+        )
+        compiled = lowered.compile()
+        entry.est_bytes = compile_bytes_estimate(compiled)
+        entry.aot = compiled
+        return entry
+
+    def _committed_params(self):
+        """Params as committed device arrays (what an AOT executable's
+        input layout expects); transferred once per engine."""
+        p = getattr(self, "_dev_params", None)
+        if p is None:
+            p = jax.device_put(self.params)
+            self._dev_params = p
+        return p
 
     # ---- streaming -----------------------------------------------------
 
@@ -580,7 +699,15 @@ class StreamingEngine:
         w_eff = min(cfg.window, n)
         # exact instruction count from the window grid (no float rounding)
         count = num_windows(n, cfg.window, cfg.window) * w_eff
-        step = self._get_step(w_eff)
+        entry = self._get_step(w_eff)
+        # AOT-warmed geometry: call the compiled executable directly (no
+        # dispatch-time retracing; params must be committed device arrays)
+        if entry.aot is not None:
+            step = entry.aot
+            params = self._committed_params()
+        else:
+            step = entry.fn
+            params = self.params
 
         dev_arrays = None
         fs = features
@@ -623,7 +750,7 @@ class StreamingEngine:
         carry = self.init_carry(n)
         pers = []
         for batch in batches:
-            carry, per = step(self.params, carry, batch)
+            carry, per = step(params, carry, batch)
             if self.ecfg.collect:
                 pers.append(per)
 

@@ -1,0 +1,237 @@
+"""Content-addressed artifact store: capture once per *cluster*, not per
+process.
+
+Grown out of ``repro.ckpt``: checkpoints answer "restore MY latest state",
+the store answers "has ANYONE already computed this object?" — captured
+functional traces, extracted ``FeatureSet``s, detailed-sim summaries, and
+trained params, addressed by blake2b content keys (``store.content``)
+derived from what the object is a pure function of (trace digest × feature
+config × µarch config × training recipe).  A second process re-running a
+sweep against a warm store does zero feature extraction and zero detailed
+simulation; paired with the JAX persistent compilation cache
+(``engine.aot``) it also does zero XLA compiles.
+
+Layout (all under one root, safe to blow away wholesale):
+
+    <root>/objects/<kind>/<key[:2]>/<key>/   one entry: manifest.json +
+                                             arr_*.bin (ckpt typed-path
+                                             format, template-free)
+    <root>/tmp/                              unique staging dirs
+    <root>/xla/                              JAX persistent compilation
+                                             cache (when a Session enables
+                                             it; managed by jax itself)
+
+Concurrency and crash safety: entries are immutable once published.  A put
+stages into ``tmp/<key>-<pid>-<nonce>`` and publishes with one
+``os.rename`` — readers never observe a partial entry, and two processes
+racing the same key resolve to whichever rename wins (identical content
+either way).  A torn write from a hard kill leaves either an orphan in
+``tmp/`` (swept by ``gc``) or an entry without a manifest / with a
+truncated array file — ``get`` treats any load failure as a miss, deletes
+the entry, and counts it in ``stats()["corrupt_dropped"]``.
+
+Eviction: entries carry their last-use time (directory mtime, refreshed on
+every hit); ``gc(max_bytes=..., max_age_s=...)`` drops least-recently-used
+entries past the byte budget and anything older than the age bound.  A
+store constructed with ``max_bytes=`` self-GCs after each put.
+"""
+from __future__ import annotations
+
+import os
+import shutil
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+from ..ckpt.checkpoint import load_array_tree, write_array_tree
+
+__all__ = ["ArtifactStore", "features_to_tree", "tree_to_features"]
+
+
+def features_to_tree(fs) -> Dict[str, Any]:
+    """A ``FeatureSet`` as the plain nested dict the store serializes
+    (``labels`` key absent when None — typed-path trees cannot hold
+    None leaves)."""
+    tree = {
+        "opcode": fs.opcode,
+        "regbits": fs.regbits,
+        "flags": fs.flags,
+        "brhist": fs.brhist,
+        "memdist": fs.memdist,
+    }
+    if fs.labels is not None:
+        tree["labels"] = dict(fs.labels)
+    return tree
+
+
+def tree_to_features(tree: Dict[str, Any]):
+    """Inverse of :func:`features_to_tree`."""
+    from ..core.features import FeatureSet  # lazy: keep store import light
+
+    return FeatureSet(
+        opcode=tree["opcode"],
+        regbits=tree["regbits"],
+        flags=tree["flags"],
+        brhist=tree["brhist"],
+        memdist=tree["memdist"],
+        labels=tree.get("labels"),
+    )
+
+
+class ArtifactStore:
+    """Content-addressed object cache under one filesystem root."""
+
+    def __init__(self, root: str, *, max_bytes: Optional[int] = None):
+        self.root = os.path.abspath(os.path.expanduser(root))
+        self.max_bytes = max_bytes
+        os.makedirs(os.path.join(self.root, "objects"), exist_ok=True)
+        os.makedirs(os.path.join(self.root, "tmp"), exist_ok=True)
+        self.counters: Dict[str, int] = {
+            "hits": 0,
+            "misses": 0,
+            "puts": 0,
+            "put_races": 0,
+            "corrupt_dropped": 0,
+            "evicted": 0,
+        }
+        self._nonce = 0
+
+    @property
+    def xla_cache_dir(self) -> str:
+        """Where a Session points the JAX persistent compilation cache so
+        executables and artifacts travel (and GC) together."""
+        return os.path.join(self.root, "xla")
+
+    # ---- paths -----------------------------------------------------------
+
+    def _entry_dir(self, kind: str, key: str) -> str:
+        return os.path.join(self.root, "objects", kind, key[:2], key)
+
+    def _stage_dir(self, key: str) -> str:
+        self._nonce += 1
+        return os.path.join(
+            self.root, "tmp", f"{key}-{os.getpid()}-{self._nonce}"
+        )
+
+    # ---- core API --------------------------------------------------------
+
+    def has(self, kind: str, key: str) -> bool:
+        return os.path.exists(
+            os.path.join(self._entry_dir(kind, key), "manifest.json")
+        )
+
+    def put(self, kind: str, key: str, tree: Any, extra: Optional[Dict] = None) -> bool:
+        """Publish an entry (no-op when the key already exists — entries
+        are immutable and content-addressed, so identical by construction).
+        Returns True when this call created the entry."""
+        dst = self._entry_dir(kind, key)
+        if self.has(kind, key):
+            return False
+        stage = self._stage_dir(key)
+        write_array_tree(tree, stage, extra)
+        os.makedirs(os.path.dirname(dst), exist_ok=True)
+        try:
+            os.rename(stage, dst)
+        except OSError:
+            # lost a publish race with another process — their content is
+            # byte-identical (same key), keep theirs
+            shutil.rmtree(stage, ignore_errors=True)
+            self.counters["put_races"] += 1
+            return False
+        self.counters["puts"] += 1
+        if self.max_bytes is not None:
+            self.gc(max_bytes=self.max_bytes)
+        return True
+
+    def get(self, kind: str, key: str) -> Optional[Tuple[Any, Dict]]:
+        """``(tree, extra)`` for a published entry, or None.  Any load
+        failure (partial write, bit rot, format drift) quarantines the
+        entry and reports a miss — the caller recomputes and re-puts."""
+        path = self._entry_dir(kind, key)
+        if not os.path.exists(path):
+            self.counters["misses"] += 1
+            return None
+        try:
+            tree, extra = load_array_tree(path)
+        except Exception:
+            shutil.rmtree(path, ignore_errors=True)
+            self.counters["corrupt_dropped"] += 1
+            self.counters["misses"] += 1
+            return None
+        self.counters["hits"] += 1
+        try:
+            os.utime(path)  # LRU clock for gc()
+        except OSError:
+            pass
+        return tree, extra
+
+    # ---- maintenance -----------------------------------------------------
+
+    def _entries(self) -> List[Tuple[str, int, float]]:
+        """(entry_dir, bytes, last_use) for every published entry."""
+        out = []
+        obj_root = os.path.join(self.root, "objects")
+        for kind in sorted(os.listdir(obj_root)):
+            kdir = os.path.join(obj_root, kind)
+            for prefix in sorted(os.listdir(kdir)):
+                pdir = os.path.join(kdir, prefix)
+                for key in sorted(os.listdir(pdir)):
+                    edir = os.path.join(pdir, key)
+                    try:
+                        size = sum(
+                            e.stat().st_size
+                            for e in os.scandir(edir)
+                            if e.is_file()
+                        )
+                        out.append((edir, size, os.stat(edir).st_mtime))
+                    except OSError:
+                        continue
+        return out
+
+    def stats(self) -> Dict[str, Any]:
+        entries = self._entries()
+        return {
+            "root": self.root,
+            "entries": len(entries),
+            "bytes": sum(sz for _, sz, _ in entries),
+            **self.counters,
+        }
+
+    def gc(
+        self,
+        *,
+        max_bytes: Optional[int] = None,
+        max_age_s: Optional[float] = None,
+    ) -> Dict[str, int]:
+        """Drop stale tmp dirs, then entries: first anything unused for
+        longer than ``max_age_s``, then least-recently-used entries until
+        the total is within ``max_bytes``."""
+        dropped = 0
+        tmp_root = os.path.join(self.root, "tmp")
+        now = time.time()
+        for name in os.listdir(tmp_root):
+            p = os.path.join(tmp_root, name)
+            try:
+                if now - os.stat(p).st_mtime > 3600:  # torn writes only
+                    shutil.rmtree(p, ignore_errors=True)
+            except OSError:
+                continue
+
+        entries = sorted(self._entries(), key=lambda e: e[2])  # LRU first
+        total = sum(sz for _, sz, _ in entries)
+        keep = []
+        for edir, size, mtime in entries:
+            if max_age_s is not None and now - mtime > max_age_s:
+                shutil.rmtree(edir, ignore_errors=True)
+                total -= size
+                dropped += 1
+            else:
+                keep.append((edir, size, mtime))
+        if max_bytes is not None:
+            for edir, size, _ in keep:
+                if total <= max_bytes:
+                    break
+                shutil.rmtree(edir, ignore_errors=True)
+                total -= size
+                dropped += 1
+        self.counters["evicted"] += dropped
+        return {"evicted": dropped, "bytes": total}

@@ -34,6 +34,8 @@ __all__ = [
     "state_shardings",
     "CachedTrainStep",
     "cached_train_step",
+    "cache_stats",
+    "clear_train_step_cache",
     "train_step_compiles",
 ]
 
@@ -54,16 +56,30 @@ class CachedTrainStep:
     counts actual XLA compilations: with fixed-shape batches that is exactly
     one per (batch, window) geometry — the invariant the streaming training
     pipeline's tests and ``benchmarks/bench_train.py`` pin.
+
+    Entries are callable with the step signature; once
+    ``core.transfer.warmup_train_step`` has AOT-compiled the geometry
+    (``aot``), calls dispatch straight to the compiled executable.
     """
 
-    __slots__ = ("fn", "compiles")
+    __slots__ = ("fn", "compiles", "aot", "est_bytes")
 
     def __init__(self):
         self.fn = None
         self.compiles = 0
+        self.aot = None
+        self.est_bytes = None
+
+    def __call__(self, params, opt, batch):
+        step = self.aot if self.aot is not None else self.fn
+        return step(params, opt, batch)
 
 
 _TRAIN_STEP_CACHE: Dict[tuple, CachedTrainStep] = {}
+
+# entry-reuse counters behind cache_stats(): a hit means a trainer
+# invocation found its step already built, a miss that a new one was jitted
+_TRAIN_STEP_STATS: Dict[str, int] = {"hits": 0, "misses": 0}
 
 # warn when the cache accumulates this many entries: each one pins a jitted
 # step (and its XLA executables) for process lifetime — usually a sign of a
@@ -81,10 +97,11 @@ def cached_train_step(key: tuple, build) -> CachedTrainStep:
     """
     entry = _TRAIN_STEP_CACHE.get(key)
     if entry is None:
+        _TRAIN_STEP_STATS["misses"] += 1
         entry = CachedTrainStep()
         entry.fn = build(entry)
         _TRAIN_STEP_CACHE[key] = entry
-        if len(_TRAIN_STEP_CACHE) == _TRAIN_CACHE_WARN:
+        if cache_stats()["entries"] == _TRAIN_CACHE_WARN:
             import warnings
 
             warnings.warn(
@@ -95,7 +112,38 @@ def cached_train_step(key: tuple, build) -> CachedTrainStep:
                 RuntimeWarning,
                 stacklevel=3,
             )
+    else:
+        _TRAIN_STEP_STATS["hits"] += 1
     return entry
+
+
+def cache_stats() -> Dict[str, int]:
+    """Inspect the process-wide train-step cache — same shape as the
+    engine's ``repro.engine.cache_stats()``: entries, hit/miss counters,
+    trace-time compiles, estimated retained bytes for AOT-warmed entries
+    (the ``_TRAIN_CACHE_WARN`` warning fires off these same counters)."""
+    measured = [e.est_bytes for e in _TRAIN_STEP_CACHE.values() if e.est_bytes]
+    return {
+        "entries": len(_TRAIN_STEP_CACHE),
+        "hits": _TRAIN_STEP_STATS["hits"],
+        "misses": _TRAIN_STEP_STATS["misses"],
+        "compiles": sum(e.compiles for e in _TRAIN_STEP_CACHE.values()),
+        "aot_compiled": sum(
+            1 for e in _TRAIN_STEP_CACHE.values() if e.aot is not None
+        ),
+        "retained_bytes_est": sum(measured),
+        "entries_unmeasured": sum(
+            1 for e in _TRAIN_STEP_CACHE.values() if not e.est_bytes
+        ),
+    }
+
+
+def clear_train_step_cache() -> int:
+    """Drop every cached train step (returns how many).  Counters keep
+    accumulating; snapshot ``cache_stats()`` to attribute a region."""
+    n = len(_TRAIN_STEP_CACHE)
+    _TRAIN_STEP_CACHE.clear()
+    return n
 
 
 def train_step_compiles() -> int:
