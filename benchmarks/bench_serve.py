@@ -1,0 +1,128 @@
+"""Serving benchmark: open-loop multi-tenant load against TraceServer.
+
+Mirrors the serving story the paper's throughput claims imply: a warm
+server (AOT-warmed executables + shared feature pre-passes) absorbing
+Poisson arrivals from several tenants across mixed geometries and models.
+Reports p50/p99 end-to-end latency, sustained traces/s, and the batch
+fill ratio — the numbers CI tracks per PR via ``BENCH_serve.json``.
+
+Open-loop means arrivals do not wait for completions (the honest way to
+measure a queueing system): a seeded exponential schedule fires
+``submit`` on its own clock; QUEUE_FULL rejections honor the server's
+``retry_after_s`` hint and are counted, not hidden.
+"""
+from __future__ import annotations
+
+import asyncio
+import random
+
+import jax
+import numpy as np
+
+from repro.api import (
+    ModelRegistry,
+    ServeError,
+    ServeRequest,
+    TraceServer,
+    TrainedModel,
+)
+from repro.core import init_tao
+
+from .common import SCALE, TEST_LEN, Timer, emit, session, set_extra, tao_config
+
+# offered load: requests per second per tenant (open loop), total requests
+_N_REQUESTS = {"tiny": 24, "small": 64}.get(SCALE, 128)
+_TENANTS = ("alice", "bob", "carol", "dave")
+
+
+def _build():
+    cfg = tao_config()
+    s = session()
+    traces = [
+        s.capture("mcf", TEST_LEN),
+        s.capture("dee", max(cfg.window * 3, TEST_LEN // 2)),
+        s.capture("lee", max(2, cfg.window // 2)),   # second geometry
+    ]
+    registry = ModelRegistry()
+    for i, name in enumerate(("base", "tuned")):
+        registry.register(name, TrainedModel(
+            params=init_tao(jax.random.PRNGKey(i), cfg), cfg=cfg, name=name))
+    return registry, traces
+
+
+async def _open_loop(server, traces, n_requests, rate_per_s):
+    """Fire ``n_requests`` per tenant on an exponential arrival clock;
+    returns (results, rejections)."""
+    results, rejections = [], 0
+
+    async def tenant(name, seed):
+        nonlocal rejections
+        r = random.Random(seed)
+        pending = []
+        for i in range(n_requests):
+            await asyncio.sleep(r.expovariate(rate_per_s))
+            req = ServeRequest(
+                model=("base", "tuned")[i % 2],
+                trace=traces[r.randrange(len(traces))],
+                tenant=name,
+            )
+            try:
+                pending.append(server.submit(req))
+            except ServeError as e:
+                assert e.code == "QUEUE_FULL"
+                rejections += 1
+                await asyncio.sleep(e.retry_after_s or 0.01)
+                try:
+                    pending.append(server.submit(req))
+                except ServeError:
+                    rejections += 1          # dropped after one retry
+        results.extend(await asyncio.gather(*pending))
+
+    await asyncio.gather(*(
+        tenant(t, seed) for seed, t in enumerate(_TENANTS)
+    ))
+    return results, rejections
+
+
+def run() -> None:
+    registry, traces = _build()
+    per_tenant = max(2, _N_REQUESTS // len(_TENANTS))
+
+    async def drive():
+        server = TraceServer(registry, batch_size=8, max_queue=64)
+        async with server:
+            server.warmup([len(t) for t in traces])
+            # calibrate the open-loop rate to ~2x a single closed-loop
+            # client's throughput so queues form but do not diverge
+            t = Timer()
+            with t:
+                await server.submit(ServeRequest(model="base",
+                                                 trace=traces[0]))
+            rate = 2.0 / max(t.seconds, 1e-4) / len(_TENANTS)
+            with Timer() as wall:
+                results, rejections = await _open_loop(
+                    server, traces, per_tenant, rate)
+            stats = server.stats()
+        return results, rejections, stats, wall.seconds
+
+    results, rejections, stats, wall = asyncio.run(drive())
+    lat = np.array([r.total_s for r in results])
+    p50, p99 = np.percentile(lat, 50), np.percentile(lat, 99)
+    served_per_s = len(results) / wall
+
+    emit("serve/latency_p50", p50 * 1e6, f"n={len(results)}")
+    emit("serve/latency_p99", p99 * 1e6,
+         f"rejected={rejections} compiles={stats.num_compiles}")
+    emit("serve/traces_per_s", 1e6 / served_per_s,
+         f"{served_per_s:.1f}/s fill={stats.batch_fill_ratio:.2f}")
+    emit("serve/coalesce", 0.0,
+         f"extracted={stats.features_extracted} "
+         f"coalesced={stats.features_coalesced}")
+    set_extra("serve", {
+        "latency_p50_s": float(p50),
+        "latency_p99_s": float(p99),
+        "traces_per_s": float(served_per_s),
+        "batch_fill_ratio": stats.batch_fill_ratio,
+        "open_loop_rejections": rejections,
+        "stats": stats.to_dict(),
+    })

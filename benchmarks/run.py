@@ -12,6 +12,8 @@
   bench_train      (systems) streaming vs materialized training pipeline
                      (windows/s, peak RSS, compile counts)
   bench_kernels    (systems) chunked attention / SSD formulations
+  bench_serve      (systems) "serve": open-loop multi-tenant TraceServer
+                     load (p50/p99 latency, traces/s, batch fill ratio)
 
 Prints ``name,us_per_call,derived`` CSV.  BENCH_SCALE=tiny|small|full
 controls trace lengths / epochs (CPU container defaults to small; CI smoke
@@ -34,6 +36,7 @@ from . import (
     bench_accuracy,
     bench_dse,
     bench_kernels,
+    bench_serve,
     bench_shard,
     bench_sweeps,
     bench_timing,
@@ -53,6 +56,7 @@ SUITES = {
     "training": bench_train.run,
     "kernels": bench_kernels.run,
     "shard": bench_shard.run,
+    "serve": bench_serve.run,
 }
 
 

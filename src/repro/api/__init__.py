@@ -19,6 +19,12 @@ Zero cold start: ``Session(store=...)`` attaches a content-addressed
 traces, features, detailed-sim summaries, trained params, and compiled
 executables all persist across processes; ``Session.warmup`` AOT-compiles
 a declared geometry set up front.  See docs/store.md.
+
+Serving: ``TraceServer``/``ModelRegistry`` (from ``repro.serve``) expose
+registered models to concurrent tenants with continuous batching into the
+warm executable pool; the typed wire surface — ``ServeRequest``,
+``ServeResult``, ``ServerStats``, ``ServeError`` — is re-exported here.
+See docs/serve.md.
 """
 from ..core.dataset import StreamingWindowDataset, WindowDataset
 from ..engine.aot import enable_persistent_cache, persistent_cache_status
@@ -38,6 +44,14 @@ from ..engine.runner import (
     SimulationResult,
 )
 from ..engine.scheduler import SweepJob, SweepReport
+from ..serve import (
+    ModelRegistry,
+    ServeError,
+    ServeRequest,
+    ServeResult,
+    ServerStats,
+    TraceServer,
+)
 from ..store import ArtifactStore
 from .session import DesignSpace, JointModel, Session, Trace, TrainedModel
 
@@ -65,4 +79,10 @@ __all__ = [
     "MetricNotComputedError",
     "SweepJob",
     "SweepReport",
+    "TraceServer",
+    "ModelRegistry",
+    "ServeRequest",
+    "ServeResult",
+    "ServerStats",
+    "ServeError",
 ]

@@ -311,6 +311,29 @@ class SimulationResult:
     def error_vs(self, truth_cpi: float) -> float:
         return abs(self.cpi - truth_cpi) / truth_cpi * 100.0
 
+    def to_dict(self, *, arrays: bool = False) -> Dict:
+        """Stable JSON-clean form (the serve layer's wire contract):
+        scalar metrics as floats, phase-curve metrics as lists, collected
+        per-instruction arrays only under ``arrays=True`` (they are
+        O(trace) large)."""
+        out = {
+            "num_instructions": int(self.num_instructions),
+            "seconds": float(self.seconds),
+            "mips": float(self.mips),
+            "metrics": {
+                k: (np.asarray(v).tolist() if isinstance(v, np.ndarray) else float(v))
+                for k, v in self.metrics.items()
+            },
+            "available_metrics": list(self.available_metrics),
+        }
+        if arrays:
+            out["arrays"] = {
+                k: np.asarray(v).tolist()
+                for k, v in self._arrays.items()
+                if v is not None
+            }
+        return out
+
     def __repr__(self) -> str:
         scalars = ", ".join(
             f"{k}=curve{v.shape}" if isinstance(v, np.ndarray) else f"{k}={v:.4g}"

@@ -98,6 +98,20 @@ class SweepReport:
             "features_from_store": self.features_from_store,
         }
 
+    def to_dict(self) -> Dict:
+        """Stable JSON-clean form: scheduler counters plus every result's
+        ``SimulationResult.to_dict()`` — what the serve/bench layers
+        serialize instead of reaching into report internals."""
+        return {
+            "seconds": self.seconds,
+            "num_traces": self.num_traces,
+            "num_instructions": self.num_instructions,
+            "queue_depth": self.queue_depth,
+            "prepared_async": self.prepared_async,
+            **self.stats(),
+            "results": {k: r.to_dict() for k, r in self.results.items()},
+        }
+
 
 _STOP = object()
 

@@ -1,80 +1,228 @@
-"""Serving launcher: prefill + batched decode over the model zoo.
+"""Trace-serving launcher: the simulation-as-a-service front end.
 
-CPU demo:
-  PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --reduced \\
-      --batch 4 --prompt-len 32 --gen 16
+Serves named trained models from an artifact store to concurrent tenants
+over a line-delimited JSON protocol (one request object per line, one
+response object per line — trivially scriptable with ``nc`` or a
+10-line client, see ``examples/serve_traces.py``)::
 
-On real hardware the same step functions are jitted with the production
-mesh shardings (see launch/dryrun.py decode cells).
+  PYTHONPATH=src python -m repro.launch.serve \\
+      --store /var/tmp/repro-store --models skylake-base,big-l1d \\
+      --port 7171 --batch-size 8 --warmup 1200,300
+
+Requests (``op`` selects the verb)::
+
+  {"op": "simulate", "model": "skylake-base", "trace": {...encode_trace},
+   "tenant": "ci", "metrics": ["cpi"], "request_id": "r1"}
+  {"op": "stats"}
+  {"op": "models"}
+
+Responses are ``{"ok": true, ...}`` or ``{"ok": false, "error": CODE,
+"message": ..., "retry_after_s": ...}`` with the stable ``ServeError``
+code vocabulary — QUEUE_FULL carries the 429-style backoff hint.
+Responses are written as requests complete (pipelined clients match them
+up by ``request_id``).
+
+``--demo`` needs no store: it registers two freshly initialized models,
+drives mixed-tenant load in-process, and prints the ``ServerStats``
+snapshot — the CI serve-smoke entrypoint.
 """
 from __future__ import annotations
 
 import argparse
-import time
+import asyncio
+import json
+from typing import Optional
 
-import jax
-import jax.numpy as jnp
-import numpy as np
+from ..serve import (
+    ModelRegistry,
+    ServeError,
+    ServeRequest,
+    TraceServer,
+    decode_trace,
+)
 
-from ..configs import get_arch
-from ..models.backbone import Model
-
-
-def generate(model: Model, params, prompt: jnp.ndarray, gen: int, temperature: float = 0.0):
-    """prompt: (B, P) -> tokens (B, P+gen).  Greedy when temperature == 0."""
-    B, P = prompt.shape
-    max_len = P + gen
-    cfg = model.cfg
-
-    logits, cache = jax.jit(model.prefill)(params, {"tokens": prompt})
-    # re-home prefill cache into a max_len cache for attention families
-    if cfg.family not in ("ssm", "hybrid") and "k" in cache:
-        pad = max_len - cache["k"].shape[2]
-        cache = {kk: jnp.pad(v, ((0, 0), (0, 0), (0, pad)) + ((0, 0),) * (v.ndim - 3))
-                 for kk, v in cache.items()}
-    elif cfg.mla and "c_kv" in cache:
-        pad = max_len - cache["c_kv"].shape[2]
-        cache = {kk: jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0))) for kk, v in cache.items()}
-
-    step = jax.jit(model.decode_step)
-    key = jax.random.PRNGKey(0)
-    toks = [prompt]
-    cur = jnp.argmax(logits, -1).astype(jnp.int32)
-    for t in range(gen):
-        toks.append(cur[:, None])
-        logits, cache = step(params, cache, cur, jnp.int32(P + t))
-        if temperature > 0:
-            key, sub = jax.random.split(key)
-            cur = jax.random.categorical(sub, logits / temperature).astype(jnp.int32)
-        else:
-            cur = jnp.argmax(logits, -1).astype(jnp.int32)
-    return jnp.concatenate(toks, axis=1)
+__all__ = ["main", "serve_forever"]
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="qwen2-0.5b")
-    ap.add_argument("--reduced", action="store_true", default=True)
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--gen", type=int, default=16)
-    ap.add_argument("--temperature", type=float, default=0.0)
-    args = ap.parse_args()
+async def _handle_line(server: TraceServer, line: bytes, writer, wlock) -> None:
+    async def reply(obj: dict) -> None:
+        async with wlock:
+            writer.write(json.dumps(obj).encode() + b"\n")
+            await writer.drain()
 
-    cfg = get_arch(args.arch, reduced=args.reduced)
-    model = Model(cfg)
-    if cfg.encoder_only:
-        raise SystemExit(f"{args.arch} is encoder-only: no decode path")
-    params = model.init(jax.random.PRNGKey(0))
-    prompt = jax.random.randint(
-        jax.random.PRNGKey(1), (args.batch, args.prompt_len), 0, cfg.vocab
-    ).astype(jnp.int32)
-    t0 = time.perf_counter()
-    out = generate(model, params, prompt, args.gen, args.temperature)
-    dt = time.perf_counter() - t0
-    tput = args.batch * args.gen / dt
-    print(f"generated {out.shape} in {dt:.2f}s -> {tput:.1f} tok/s")
-    print("sample row:", np.asarray(out[0, -min(16, out.shape[1]):]))
+    try:
+        req = json.loads(line)
+        op = req.get("op", "simulate")
+    except (json.JSONDecodeError, AttributeError) as e:
+        await reply({"ok": False, "error": "BAD_REQUEST",
+                     "message": f"unparseable request: {e}"})
+        return
+
+    if op == "stats":
+        await reply({"ok": True, "stats": server.stats().to_dict()})
+        return
+    if op == "models":
+        await reply({"ok": True, "models": list(server.registry.names())})
+        return
+    if op != "simulate":
+        await reply({"ok": False, "error": "BAD_REQUEST",
+                     "message": f"unknown op {op!r}"})
+        return
+
+    rid = req.get("request_id")
+    try:
+        trace = decode_trace(req["trace"])
+        sreq = ServeRequest(
+            model=req["model"],
+            trace=trace,
+            tenant=req.get("tenant", "default"),
+            metrics=tuple(req["metrics"]) if req.get("metrics") else None,
+            request_id=rid,
+        )
+    except ServeError as e:
+        await reply({"ok": False, **e.to_dict()})
+        return
+    except (KeyError, ValueError, TypeError) as e:
+        await reply({"ok": False, "error": "BAD_REQUEST", "message": str(e),
+                     **({"request_id": rid} if rid else {})})
+        return
+    try:
+        result = await server.submit(sreq)
+    except ServeError as e:
+        await reply({"ok": False, **e.to_dict()})
+        return
+    await reply({"ok": True, "result": result.to_dict()})
+
+
+async def _serve_connection(server: TraceServer, reader, writer) -> None:
+    wlock = asyncio.Lock()
+    tasks = set()
+    try:
+        while True:
+            line = await reader.readline()
+            if not line:
+                break
+            if not line.strip():
+                continue
+            t = asyncio.get_running_loop().create_task(
+                _handle_line(server, line, writer, wlock)
+            )
+            tasks.add(t)
+            t.add_done_callback(tasks.discard)
+        if tasks:
+            await asyncio.gather(*tasks, return_exceptions=True)
+    finally:
+        writer.close()
+
+
+async def serve_forever(
+    server: TraceServer, host: str, port: int,
+    ready: Optional["asyncio.Future"] = None,
+) -> None:
+    """Run the TCP front end until cancelled (``server`` must be started).
+    ``ready``, when given, resolves to the bound ``(host, port)`` — pass
+    ``port=0`` for an ephemeral port and read the real one from it."""
+    tcp = await asyncio.start_server(
+        lambda r, w: _serve_connection(server, r, w), host, port
+    )
+    addr = tcp.sockets[0].getsockname()
+    print(f"serving on {addr[0]}:{addr[1]} "
+          f"(models: {', '.join(server.registry.names()) or '<none>'})")
+    if ready is not None:
+        ready.set_result((addr[0], addr[1]))
+    async with tcp:
+        await tcp.serve_forever()
+
+
+async def _demo(args) -> None:
+    """Self-contained mixed-tenant demo (no store, no trained weights)."""
+    import jax
+
+    from ..api import Session, TrainedModel
+    from ..core import FeatureConfig, TaoConfig, init_tao
+
+    cfg = TaoConfig(window=9, d_model=16, n_heads=2, n_layers=1, d_ff=32,
+                    d_cat=8, features=FeatureConfig(n_buckets=64, n_queue=4,
+                                                    n_mem=8))
+    sess = Session(cfg)
+    traces = [sess.capture("mcf", 1200), sess.capture("dee", 600),
+              sess.capture("lee", 6)]
+    registry = ModelRegistry()
+    for i, name in enumerate(("base", "tuned")):
+        registry.register(name, TrainedModel(
+            params=init_tao(jax.random.PRNGKey(i), cfg), cfg=cfg, name=name))
+    server = TraceServer(registry, batch_size=args.batch_size,
+                         max_queue=args.max_queue)
+    async with server:
+        server.warmup([len(t) for t in traces])
+        print(f"warm: {server.num_compiles} request-attributed compiles")
+
+        async def tenant(name: str, count: int):
+            out = []
+            for i in range(count):
+                tr = traces[i % len(traces)]
+                fut = server.submit(ServeRequest(
+                    model=("base", "tuned")[i % 2], trace=tr, tenant=name))
+                out.append(await fut)
+            return out
+
+        done = await asyncio.gather(
+            tenant("alice", 6), tenant("bob", 6), tenant("carol", 4),
+            tenant("dave", 4))
+        for res in done:
+            r = res[0]
+            print(f"  {r.tenant}: {len(res)} served, first {r.geometry} "
+                  f"cpi={float(r.metrics['cpi']):.3f} "
+                  f"({r.total_s * 1e3:.1f} ms)")
+    print(json.dumps(server.stats().to_dict(), indent=1))
+
+
+async def _main_async(args) -> None:
+    if args.demo:
+        await _demo(args)
+        return
+    if not args.store:
+        raise SystemExit("--store is required (or use --demo)")
+    registry = ModelRegistry(args.store)
+    names = ([n for n in args.models.split(",") if n] if args.models
+             else list(registry.names()))
+    for name in names:
+        registry.resolve(name)       # fail fast on unknown names
+    server = TraceServer(
+        registry, batch_size=args.batch_size, max_queue=args.max_queue,
+        feature_backend=args.feature_backend,
+    )
+    async with server:
+        if args.warmup:
+            lengths = [int(x) for x in args.warmup.split(",") if x]
+            info = server.warmup(lengths, models=names)
+            print(f"warmup: {info['geometries']} geometries, "
+                  f"{info['aot_compiled']} AOT-compiled")
+        await serve_forever(server, args.host, args.port)
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(
+        description="serve trained Tao models to concurrent tenants")
+    ap.add_argument("--store", default=None,
+                    help="artifact store root holding published models")
+    ap.add_argument("--models", default=None,
+                    help="comma-separated model names (default: all published)")
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=7171)
+    ap.add_argument("--batch-size", type=int, default=64)
+    ap.add_argument("--max-queue", type=int, default=64)
+    ap.add_argument("--feature-backend", default="numpy",
+                    choices=("numpy", "pallas"))
+    ap.add_argument("--warmup", default=None,
+                    help="comma-separated trace lengths to AOT-compile for")
+    ap.add_argument("--demo", action="store_true",
+                    help="self-contained in-process demo (no store needed)")
+    args = ap.parse_args(argv)
+    try:
+        asyncio.run(_main_async(args))
+    except KeyboardInterrupt:
+        pass
 
 
 if __name__ == "__main__":

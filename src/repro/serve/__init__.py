@@ -1,0 +1,33 @@
+"""Simulation-as-a-service: continuous batching over the streaming engine.
+
+``TraceServer`` admits concurrent (trace, model) requests from many
+tenants and routes them into the engine's per-geometry executable pool —
+so concurrency never multiplies compiles, same-trace requests share one
+feature pre-pass, admission is bounded with 429-style rejection, and
+service order is fair across tenants and geometries.  ``ModelRegistry``
+resolves names to trained/transfer-adapted heads through the artifact
+store.  See docs/serve.md.
+"""
+from .registry import ModelRegistry
+from .server import TraceServer
+from .types import (
+    ERROR_CODES,
+    ServeError,
+    ServeRequest,
+    ServeResult,
+    ServerStats,
+    decode_trace,
+    encode_trace,
+)
+
+__all__ = [
+    "ERROR_CODES",
+    "ModelRegistry",
+    "ServeError",
+    "ServeRequest",
+    "ServeResult",
+    "ServerStats",
+    "TraceServer",
+    "decode_trace",
+    "encode_trace",
+]

@@ -1,0 +1,148 @@
+"""Named model resolution for the trace server.
+
+The artifact store is content-addressed — perfect for "has anyone computed
+this?", useless for "give me the model called ``skylake-l1d32``".  The
+registry bridges the two: a name maps to a ``serve_model`` store entry
+(key = ``content_key("serve_model", name)``) whose payload is the params
+tree and whose manifest extra carries the full ``TaoConfig`` (plain
+dataclass fields), so any process sharing the store root can resolve a
+name into a ready-to-simulate ``TrainedModel`` — trained heads and
+transfer-adapted heads alike, since both are just ``TrainedModel``s.
+
+Resolution order is memory first (models registered in-process, e.g. a
+freshly transfer-adapted head), then the store.  ``resolve`` loads
+through ``ArtifactStore.get``, which pins the entry for the duration of
+the read — a GC racing in another process cannot delete it mid-stream.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, Optional, Tuple, Union
+
+from ..core.features import FeatureConfig
+from ..core.model import TaoConfig
+from ..store import ArtifactStore, content_key
+from .types import ServeError
+
+__all__ = ["ModelRegistry"]
+
+_KIND = "serve_model"
+
+
+def _cfg_to_dict(cfg: TaoConfig) -> Dict:
+    d = dataclasses.asdict(cfg)          # features nests as a plain dict
+    return d
+
+
+def _cfg_from_dict(d: Dict) -> TaoConfig:
+    d = dict(d)
+    feats = d.pop("features", None)
+    if feats is not None:
+        d["features"] = FeatureConfig(**feats)
+    return TaoConfig(**d)
+
+
+class ModelRegistry:
+    """name -> ``TrainedModel``, in memory and (optionally) via the store."""
+
+    def __init__(self, store: Optional[Union[ArtifactStore, str]] = None):
+        if isinstance(store, str):
+            store = ArtifactStore(store)
+        self.store = store
+        self._models: Dict[str, "object"] = {}   # name -> TrainedModel
+
+    @staticmethod
+    def key(name: str) -> str:
+        return content_key(_KIND, name)
+
+    # ---- registration ----------------------------------------------------
+
+    def register(self, name: str, model, *, publish: bool = False) -> None:
+        """Bind ``name`` to an in-process ``TrainedModel`` (a trained or
+        transfer-adapted head).  ``publish=True`` also writes it to the
+        store so other processes can resolve the same name."""
+        self._models[name] = model
+        if publish:
+            self.publish(name, model)
+
+    def publish(self, name: str, model, *, overwrite: bool = False) -> bool:
+        """Persist ``name -> model`` into the store.  Names are mutable
+        bindings over an immutable store, so re-publishing an existing
+        name requires ``overwrite=True`` (which deletes the old entry
+        first); without it a name collision raises."""
+        if self.store is None:
+            raise ValueError("registry has no store to publish into")
+        key = self.key(name)
+        if self.store.has(_KIND, key):
+            if not overwrite:
+                raise ValueError(
+                    f"model name {name!r} is already published; pass "
+                    "overwrite=True to rebind it"
+                )
+            self.store.delete(_KIND, key)
+        return self.store.put(
+            _KIND,
+            key,
+            model.params,
+            {
+                "name": name,
+                "cfg": _cfg_to_dict(model.cfg),
+                "sim_batch_size": int(model.sim_batch_size),
+                "sim_feature_backend": model.sim_feature_backend,
+            },
+        )
+
+    # ---- resolution ------------------------------------------------------
+
+    def resolve(self, name: str):
+        """The ``TrainedModel`` for ``name`` (memory first, then store).
+        Raises ``ServeError(UNKNOWN_MODEL)`` when neither knows it.  A
+        store-resolved model is cached in memory, so its engines (and the
+        executables behind them) persist across requests."""
+        model = self._models.get(name)
+        if model is not None:
+            return model
+        if self.store is not None:
+            hit = self.store.get(_KIND, self.key(name))
+            if hit is not None:
+                from ..api.session import TrainedModel  # lazy: api imports serve
+
+                tree, extra = hit
+                model = TrainedModel(
+                    params=tree,
+                    cfg=_cfg_from_dict(extra["cfg"]),
+                    name=extra.get("name", name),
+                    sim_batch_size=int(extra.get("sim_batch_size", 64)),
+                    sim_feature_backend=extra.get("sim_feature_backend", "numpy"),
+                    store=self.store,
+                )
+                self._models[name] = model
+                return model
+        raise ServeError(
+            "UNKNOWN_MODEL",
+            f"model {name!r} is not registered"
+            + (" (and not published in the store)" if self.store else ""),
+        )
+
+    def names(self) -> Tuple[str, ...]:
+        """Every resolvable name: in-memory bindings plus published ones."""
+        out = set(self._models)
+        out.update(name for name, _ in self.published())
+        return tuple(sorted(out))
+
+    def published(self) -> Iterator[Tuple[str, Dict]]:
+        """``(name, extra)`` for every store-published model (manifest
+        scan only — params stay on disk until resolved)."""
+        if self.store is None:
+            return
+        for _, extra in self.store.list_extras(_KIND):
+            if "name" in extra:
+                yield extra["name"], extra
+
+    def __contains__(self, name: str) -> bool:
+        if name in self._models:
+            return True
+        return self.store is not None and self.store.has(_KIND, self.key(name))
+
+    def __len__(self) -> int:
+        return len(self.names())

@@ -1,0 +1,605 @@
+"""Continuous-batching trace server over the streaming engine.
+
+The product surface the paper implies: many tenants submit (trace, model)
+requests, the server returns device-computed metrics.  What "continuous
+batching" means for THIS engine: the compiled step is keyed by window
+geometry, not by request, so the multi-tenant scheduling problem reduces
+to routing every admitted request into the per-geometry executable pool
+the engine already maintains —
+
+  * a request NEVER triggers an XLA compile if any tenant has already
+    paid for its geometry (process-wide step cache), and a server that
+    ran ``warmup()`` over a declared geometry set — on top of the PR-6
+    persistent compilation cache — starts at **0 compiles**;
+  * same-trace requests coalesce through the scheduler's content-digest
+    feature dedup: one host feature pre-pass (or one store load) serves
+    every request for that trace, across tenants and models;
+  * admission is bounded (``max_queue``): past the bound, ``submit``
+    rejects with ``ServeError(QUEUE_FULL, retry_after_s=...)`` — the
+    HTTP-429 analogue — instead of growing memory;
+  * service order is fair: round-robin across geometry buckets, and
+    round-robin across tenants inside each bucket, so a tenant flooding
+    one geometry can neither starve other geometries nor other tenants.
+
+Request lifecycle::
+
+    submit() ─ validate (model / metrics / trace) ──► per-geometry bucket
+                                                      (per-tenant FIFOs)
+    scheduler loop ─ fairness pick ─► features (digest-coalesced, store-
+    backed) ─► cached engine / executable ─► ServeResult future
+
+Everything device-facing reuses the engine stack unchanged: results are
+bit-identical to ``TrainedModel.simulate`` / ``Session.simulate`` because
+they ARE the same executables.  ``set_plan`` re-resolves partitioning
+(single device → mesh) between requests without a restart — engines are
+cached per (model, EngineConfig), so plans swap by key, not by teardown.
+
+The server is asyncio-native and single-loop: ``submit``/``stats`` must
+run on the event loop thread; feature extraction and device dispatch are
+pushed to small executors (extraction eagerly on accelerator backends,
+inline with dispatch on CPU — the sweep scheduler's measured policy).
+"""
+from __future__ import annotations
+
+import asyncio
+import collections
+import dataclasses
+import itertools
+import time
+from concurrent.futures import ThreadPoolExecutor
+from typing import Dict, Iterable, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from ..core.dataset import num_windows
+from ..core.features import extract_features
+from ..engine.metrics import DEFAULT_METRICS, resolve_metrics
+from ..engine.plan import ExecutionPlan
+from ..engine.runner import EngineConfig
+from ..store.content import array_digest, content_key
+from .registry import ModelRegistry
+from .types import ServeError, ServeRequest, ServeResult, ServerStats
+
+__all__ = ["TraceServer"]
+
+
+@dataclasses.dataclass
+class _Pending:
+    """One admitted request plus everything resolved at admission."""
+
+    req: ServeRequest
+    future: "asyncio.Future"
+    model: object                    # resolved TrainedModel
+    trace_arr: np.ndarray
+    n: int
+    digest: str
+    specs: tuple                     # resolved MetricSpec tuple
+    geometry: str                    # bucket label
+    t_submit: float
+    coalesced: bool = False
+    extract_s: float = 0.0
+
+
+class _Bucket:
+    """Per-geometry queue: tenant FIFOs served round-robin."""
+
+    __slots__ = ("label", "tenants", "trr", "served", "fill_sum",
+                 "occ_sum", "occ_n", "occ_max")
+
+    def __init__(self, label: str):
+        self.label = label
+        self.tenants: "collections.OrderedDict[str, collections.deque]" = (
+            collections.OrderedDict()
+        )
+        self.trr = 0
+        self.served = 0
+        self.fill_sum = 0.0
+        self.occ_sum = 0
+        self.occ_n = 0
+        self.occ_max = 0
+
+    def push(self, p: _Pending) -> None:
+        dq = self.tenants.get(p.req.tenant)
+        if dq is None:
+            dq = collections.deque()
+            self.tenants[p.req.tenant] = dq
+        dq.append(p)
+
+    def pop_next(self) -> Optional[_Pending]:
+        names = list(self.tenants)
+        for i in range(len(names)):
+            t = names[(self.trr + i) % len(names)]
+            dq = self.tenants[t]
+            if dq:
+                self.trr = (self.trr + i + 1) % len(names)
+                p = dq.popleft()
+                if not dq:
+                    del self.tenants[t]  # keep the tenant map bounded
+                return p
+        return None
+
+    def depth(self) -> int:
+        return sum(len(dq) for dq in self.tenants.values())
+
+    def sample_occupancy(self) -> None:
+        d = self.depth()
+        self.occ_sum += d
+        self.occ_n += 1
+        self.occ_max = max(self.occ_max, d)
+
+
+_LATENCY_WINDOW = 4096   # completions kept for the percentile estimators
+_FEATURE_CACHE = 64      # trace digests whose features stay resident
+
+
+class TraceServer:
+    """Persistent asyncio serving layer over the engine's executable pool.
+
+    ::
+
+        registry = ModelRegistry(store)
+        registry.register("base", model)
+        server = TraceServer(registry, batch_size=8, store=store)
+        async with server:
+            fut = server.submit(ServeRequest(model="base", trace=tr))
+            result = await fut            # ServeResult
+        server.stats()                    # ServerStats snapshot
+    """
+
+    def __init__(
+        self,
+        registry: ModelRegistry,
+        *,
+        batch_size: int = 64,
+        feature_backend: str = "numpy",
+        max_queue: int = 64,
+        metrics: Tuple = DEFAULT_METRICS,
+        store=None,
+        plan: Optional[ExecutionPlan] = None,
+        mesh=None,
+        extract_async: Optional[bool] = None,
+    ):
+        if max_queue < 1:
+            raise ValueError(f"max_queue must be >= 1, got {max_queue}")
+        self.registry = registry
+        self.batch_size = batch_size
+        self.feature_backend = feature_backend
+        self.max_queue = max_queue
+        self.default_metrics = resolve_metrics(metrics)
+        self.store = store if store is not None else getattr(registry, "store", None)
+        # one partitioning decision, swappable at runtime via set_plan()
+        self._plan: Optional[ExecutionPlan] = None
+        if plan is not None or mesh is not None:
+            self._plan = ExecutionPlan.resolve(
+                mesh, batch_size=batch_size, plan=plan
+            )
+        # eager (admission-time) extraction overlaps host feature work with
+        # device compute; on CPU-only backends the threads would contend
+        # with the step's own compute (scheduler.py's measured policy), so
+        # extraction runs inline in the dispatch path there.
+        if extract_async is None:
+            extract_async = jax.default_backend() != "cpu"
+        self.extract_async = extract_async
+
+        self._buckets: "collections.OrderedDict[tuple, _Bucket]" = (
+            collections.OrderedDict()
+        )
+        self._brr = 0                       # bucket round-robin cursor
+        self._depth = 0                     # total queued (admitted, unserved)
+        self._seq = itertools.count()
+        self._wake = asyncio.Event()
+        self._task: Optional[asyncio.Task] = None
+        self._stopping = False
+        self._draining = False
+        self._started_at: Optional[float] = None
+
+        # feature coalescing: trace digest -> executor future of FeatureSet
+        self._feat_cache: "collections.OrderedDict[str, object]" = (
+            collections.OrderedDict()
+        )
+        self._extract_pool = ThreadPoolExecutor(
+            max_workers=2, thread_name_prefix="serve-extract"
+        )
+        # one dispatch thread: the device is the serialized resource; the
+        # executable pool is shared so ordering, not parallelism, is what
+        # the scheduler controls
+        self._dispatch_pool = ThreadPoolExecutor(
+            max_workers=1, thread_name_prefix="serve-dispatch"
+        )
+
+        # observability
+        self.counters: Dict[str, int] = {
+            "admitted": 0, "completed": 0, "failed": 0, "rejected": 0,
+            "features_extracted": 0, "features_from_store": 0,
+            "features_coalesced": 0,
+        }
+        self._tenants: Dict[str, Dict[str, int]] = {}
+        self._lat_total: "collections.deque" = collections.deque(
+            maxlen=_LATENCY_WINDOW
+        )
+        self._lat_queue: "collections.deque" = collections.deque(
+            maxlen=_LATENCY_WINDOW
+        )
+        self._service_ema: Optional[float] = None
+        self._step_entries: Dict[int, object] = {}   # id -> _CachedStep
+        self._step_baseline: Dict[int, int] = {}     # compiles at first sight
+
+    # ---- lifecycle -------------------------------------------------------
+
+    async def start(self) -> "TraceServer":
+        if self._task is not None:
+            raise RuntimeError("server already started")
+        self._started_at = time.perf_counter()
+        self._task = asyncio.get_running_loop().create_task(self._run())
+        return self
+
+    async def stop(self, *, drain: bool = True) -> None:
+        """Stop admitting; ``drain=True`` serves the queue out first,
+        ``drain=False`` fails queued requests with SHUTTING_DOWN."""
+        self._stopping = True
+        if not drain:
+            while True:
+                p = self._next()
+                if p is None:
+                    break
+                self._fail(p, ServeError(
+                    "SHUTTING_DOWN", "server is shutting down",
+                    request_id=p.req.request_id,
+                ))
+        self._draining = True
+        self._wake.set()
+        if self._task is not None:
+            await self._task
+            self._task = None
+        self._extract_pool.shutdown(wait=True)
+        self._dispatch_pool.shutdown(wait=True)
+
+    async def __aenter__(self) -> "TraceServer":
+        return await self.start()
+
+    async def __aexit__(self, *exc) -> None:
+        await self.stop()
+
+    # ---- admission -------------------------------------------------------
+
+    def submit(self, req: ServeRequest) -> "asyncio.Future":
+        """Admit one request (event-loop thread only).  Returns a future
+        resolving to a ``ServeResult``; raises ``ServeError`` — QUEUE_FULL
+        (with ``retry_after_s``), UNKNOWN_MODEL, BAD_REQUEST,
+        SHUTTING_DOWN — when the request is not admitted at all."""
+        if self._stopping:
+            raise ServeError("SHUTTING_DOWN", "server is shutting down")
+        if self._depth >= self.max_queue:
+            self.counters["rejected"] += 1
+            t = self._tenant(req.tenant)
+            t["rejected"] += 1
+            raise ServeError(
+                "QUEUE_FULL",
+                f"admission queue at capacity ({self.max_queue})",
+                retry_after_s=self._retry_after(),
+                request_id=req.request_id,
+            )
+        model = self.registry.resolve(req.model)     # UNKNOWN_MODEL
+        trace = req.trace
+        arr = trace.functional if hasattr(trace, "functional") else np.asarray(trace)
+        n = len(arr)
+        if n < 1:
+            raise ServeError(
+                "BAD_REQUEST", "trace is empty", request_id=req.request_id
+            )
+        try:
+            specs = (
+                self.default_metrics
+                if req.metrics is None
+                else resolve_metrics(tuple(req.metrics))
+            )
+        except (KeyError, TypeError, ValueError) as e:
+            raise ServeError(
+                "BAD_REQUEST", f"bad metrics: {e}", request_id=req.request_id
+            ) from None
+        if req.request_id is None:
+            req.request_id = f"r{next(self._seq)}"
+        w_eff = min(model.cfg.window, n)
+        label = f"w{w_eff}b{self.batch_size}"
+        digest = (
+            trace.digest if hasattr(trace, "digest") else array_digest(arr)
+        )
+        p = _Pending(
+            req=req,
+            future=asyncio.get_running_loop().create_future(),
+            model=model,
+            trace_arr=arr,
+            n=n,
+            digest=digest,
+            specs=specs,
+            geometry=label,
+            t_submit=time.perf_counter(),
+        )
+        bkey = (model.cfg, w_eff, specs)
+        bucket = self._buckets.get(bkey)
+        if bucket is None:
+            bucket = _Bucket(label)
+            self._buckets[bkey] = bucket
+        bucket.push(p)
+        self._depth += 1
+        self.counters["admitted"] += 1
+        self._tenant(req.tenant)["admitted"] += 1
+        if self.extract_async and self.feature_backend == "numpy":
+            self._feature_entry(p)       # start the pre-pass immediately
+        self._wake.set()
+        return p.future
+
+    def _tenant(self, name: str) -> Dict[str, int]:
+        t = self._tenants.get(name)
+        if t is None:
+            t = {"admitted": 0, "completed": 0, "failed": 0, "rejected": 0}
+            self._tenants[name] = t
+        return t
+
+    def _retry_after(self) -> float:
+        est = self._service_ema if self._service_ema is not None else 0.05
+        return max(0.01, est * max(1, self._depth))
+
+    # ---- fairness pick ---------------------------------------------------
+
+    def _next(self) -> Optional[_Pending]:
+        if self._depth == 0:
+            return None
+        buckets = list(self._buckets.values())
+        nb = len(buckets)
+        for i in range(nb):
+            b = buckets[(self._brr + i) % nb]
+            p = b.pop_next()
+            if p is not None:
+                self._brr = (self._brr + i + 1) % nb
+                self._depth -= 1
+                return p
+        return None
+
+    # ---- features (digest-coalesced, store-backed) -----------------------
+
+    def _feature_entry(self, p: _Pending):
+        """The shared executor future computing ``p``'s FeatureSet; one
+        per trace digest, LRU-bounded.  Marks ``p.coalesced`` when some
+        earlier request already owns the pre-pass."""
+        ent = self._feat_cache.get(p.digest)
+        if ent is not None:
+            self._feat_cache.move_to_end(p.digest)
+            if not p.coalesced:
+                p.coalesced = True
+                self.counters["features_coalesced"] += 1
+            return ent
+        loop = asyncio.get_running_loop()
+        ent = loop.run_in_executor(
+            self._extract_pool, self._extract_sync, p.trace_arr,
+            p.digest, p.model.cfg,
+        )
+        self._feat_cache[p.digest] = ent
+        while len(self._feat_cache) > _FEATURE_CACHE:
+            self._feat_cache.popitem(last=False)
+        return ent
+
+    def _extract_sync(self, arr: np.ndarray, digest: str, cfg):
+        """Runs on the extract pool: store lookup, else extract + publish
+        (the identical key scheme as TraceSweeper / TrainedModel, so the
+        server shares warm entries with every other consumer)."""
+        key = content_key("features", digest, cfg.features)
+        if self.store is not None:
+            hit = self.store.get("features", key)
+            if hit is not None:
+                from ..store.store import tree_to_features
+
+                self.counters["features_from_store"] += 1
+                return tree_to_features(hit[0])
+        fs = extract_features(arr, cfg.features, with_labels=False)
+        self.counters["features_extracted"] += 1
+        if self.store is not None:
+            from ..store.store import features_to_tree
+
+            self.store.put("features", key, features_to_tree(fs))
+        return fs
+
+    # ---- dispatch --------------------------------------------------------
+
+    def _engine_for(self, p: _Pending):
+        try:
+            return p.model.engine(EngineConfig(
+                batch_size=self.batch_size,
+                feature_backend=self.feature_backend,
+                plan=self._plan,
+                metrics=p.specs,
+            ))
+        except ValueError as e:
+            # plan/batch divisibility, bad geometry: the tenant's request
+            # cannot run under the server's current partitioning
+            raise ServeError(
+                "GEOMETRY_MISMATCH", str(e), request_id=p.req.request_id
+            ) from None
+
+    async def _dispatch(self, p: _Pending) -> None:
+        loop = asyncio.get_running_loop()
+        t_start = time.perf_counter()
+        try:
+            features = None
+            if self.feature_backend == "numpy":
+                t_f = time.perf_counter()
+                features = await self._feature_entry(p)
+                p.extract_s = time.perf_counter() - t_f
+            engine = self._engine_for(p)
+            entry = engine.step_entry_for(p.n)
+            if id(entry) not in self._step_entries:
+                self._step_entries[id(entry)] = entry
+                self._step_baseline[id(entry)] = entry.compiles
+            res = await loop.run_in_executor(
+                self._dispatch_pool, engine.simulate, p.trace_arr, features
+            )
+        except BaseException as e:
+            self._fail(p, ServeError.wrap(e, request_id=p.req.request_id))
+            return
+        t_done = time.perf_counter()
+        self._service_ema = (
+            (t_done - t_start) if self._service_ema is None
+            else 0.8 * self._service_ema + 0.2 * (t_done - t_start)
+        )
+        bucket = self._buckets.get((p.model.cfg, min(p.model.cfg.window, p.n), p.specs))
+        if bucket is not None:
+            bucket.served += 1
+            nw = num_windows(p.n, p.model.cfg.window, p.model.cfg.window)
+            nb = -(-nw // self.batch_size)
+            bucket.fill_sum += nw / (nb * self.batch_size)
+        self.counters["completed"] += 1
+        self._tenant(p.req.tenant)["completed"] += 1
+        self._lat_total.append(t_done - p.t_submit)
+        self._lat_queue.append(t_start - p.t_submit)
+        result = ServeResult(
+            request_id=p.req.request_id,
+            model=p.req.model,
+            tenant=p.req.tenant,
+            geometry=p.geometry,
+            num_instructions=res.num_instructions,
+            metrics=dict(res.metrics),
+            queue_s=t_start - p.t_submit,
+            extract_s=p.extract_s,
+            compute_s=t_done - t_start,
+            total_s=t_done - p.t_submit,
+            coalesced=p.coalesced,
+        )
+        if not p.future.done():
+            p.future.set_result(result)
+
+    def _fail(self, p: _Pending, err: ServeError) -> None:
+        self.counters["failed"] += 1
+        self._tenant(p.req.tenant)["failed"] += 1
+        if not p.future.done():
+            p.future.set_exception(err)
+
+    async def _run(self) -> None:
+        while True:
+            p = self._next()
+            if p is None:
+                if self._draining:
+                    break
+                self._wake.clear()
+                await self._wake.wait()
+                continue
+            for b in self._buckets.values():
+                b.sample_occupancy()
+            await self._dispatch(p)
+
+    # ---- operations ------------------------------------------------------
+
+    def set_plan(
+        self, *, mesh=None, plan: Optional[ExecutionPlan] = None
+    ) -> ExecutionPlan:
+        """Swap the partitioning plan without a restart: subsequent
+        requests resolve engines under the new plan (mesh=None and
+        plan=None reverts to single-device).  In-flight requests finish
+        under the plan they started with; executables for both plans
+        coexist in the step cache, so flipping back is also compile-free."""
+        if mesh is None and plan is None:
+            self._plan = None
+        else:
+            self._plan = ExecutionPlan.resolve(
+                mesh, batch_size=self.batch_size, plan=plan
+            )
+        return self._plan if self._plan is not None else ExecutionPlan.single()
+
+    def warmup(
+        self,
+        trace_lengths: Iterable[int],
+        models: Optional[Iterable[str]] = None,
+    ) -> Dict[str, int]:
+        """AOT-compile the serving executables for a declared geometry set
+        (every registry model × every length) before any tenant connects.
+        With the persistent compilation cache behind the store, a warm
+        restart deserializes instead of compiling: a cluster-level, not
+        process-level, cold start (see docs/store.md)."""
+        names = list(models) if models is not None else list(self.registry.names())
+        compiled = 0
+        aot = 0
+        for name in names:
+            model = self.registry.resolve(name)
+            engine = model.engine(EngineConfig(
+                batch_size=self.batch_size,
+                feature_backend=self.feature_backend,
+                plan=self._plan,
+                metrics=self.default_metrics,
+            ))
+            for n in sorted(set(trace_lengths)):
+                entry = engine.warmup(n)
+                if id(entry) not in self._step_entries:
+                    self._step_entries[id(entry)] = entry
+                    self._step_baseline[id(entry)] = entry.compiles
+                compiled += 1
+                aot += entry.aot is not None
+        return {"geometries": compiled, "aot_compiled": aot}
+
+    # ---- observability ---------------------------------------------------
+
+    @property
+    def num_compiles(self) -> int:
+        """Step compiles attributable to requests served by THIS server
+        (0 on a warm server — the multi-tenant one-compile guarantee)."""
+        return sum(
+            e.compiles - self._step_baseline[i]
+            for i, e in self._step_entries.items()
+        )
+
+    @staticmethod
+    def _pct(samples, q: float) -> float:
+        return float(np.percentile(np.asarray(samples), q)) if samples else 0.0
+
+    def stats(self) -> ServerStats:
+        uptime = (
+            time.perf_counter() - self._started_at
+            if self._started_at is not None
+            else 0.0
+        )
+        per_geo: Dict[str, Dict] = {}
+        for b in self._buckets.values():
+            g = per_geo.setdefault(b.label, {
+                "queued": 0, "served": 0, "fill_sum": 0.0,
+                "occ_max": 0, "occ_n": 0, "occ_sum": 0,
+            })
+            g["queued"] += b.depth()
+            g["served"] += b.served
+            g["fill_sum"] += b.fill_sum
+            g["occ_sum"] += b.occ_sum
+            g["occ_n"] += b.occ_n
+            g["occ_max"] = max(g["occ_max"], b.occ_max)
+        for g in per_geo.values():
+            fill_sum = g.pop("fill_sum")
+            occ_sum, occ_n = g.pop("occ_sum"), g.pop("occ_n")
+            g["batch_fill_ratio"] = fill_sum / g["served"] if g["served"] else 0.0
+            g["queue_occupancy_mean"] = occ_sum / occ_n if occ_n else 0.0
+            g["queue_occupancy_max"] = g.pop("occ_max")
+        served = self.counters["completed"]
+        fills: List[float] = [
+            g["batch_fill_ratio"] * g["served"]
+            for g in per_geo.values() if g["served"]
+        ]
+        plan = self._plan if self._plan is not None else ExecutionPlan.single()
+        return ServerStats(
+            uptime_s=uptime,
+            admitted=self.counters["admitted"],
+            completed=served,
+            failed=self.counters["failed"],
+            rejected=self.counters["rejected"],
+            queue_depth=self._depth,
+            max_queue=self.max_queue,
+            num_compiles=self.num_compiles,
+            features_extracted=self.counters["features_extracted"],
+            features_from_store=self.counters["features_from_store"],
+            features_coalesced=self.counters["features_coalesced"],
+            traces_per_s=served / uptime if uptime > 0 else 0.0,
+            latency_p50_s=self._pct(self._lat_total, 50),
+            latency_p99_s=self._pct(self._lat_total, 99),
+            queue_p50_s=self._pct(self._lat_queue, 50),
+            queue_p99_s=self._pct(self._lat_queue, 99),
+            batch_fill_ratio=sum(fills) / served if served else 0.0,
+            plan_kind=plan.kind,
+            num_shards=plan.num_shards,
+            per_geometry=per_geo,
+            per_tenant={k: dict(v) for k, v in self._tenants.items()},
+        )

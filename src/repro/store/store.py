@@ -34,17 +34,30 @@ Eviction: entries carry their last-use time (directory mtime, refreshed on
 every hit); ``gc(max_bytes=..., max_age_s=...)`` drops least-recently-used
 entries past the byte budget and anything older than the age bound.  A
 store constructed with ``max_bytes=`` self-GCs after each put.
+
+Pinning: a reader that must not lose an entry mid-stream (a serving
+process loading registry params, ``get`` itself while deserializing)
+drops a ``.pin-<pid>-<nonce>`` marker file into the entry dir; ``gc`` —
+in this or ANY process sharing the root — skips entries that hold a pin
+from a live pid, and sweeps markers whose pid is gone.  ``get`` pins
+implicitly for the duration of the load, so age/LRU eviction racing a
+read can no longer delete the files out from under the deserializer;
+``pin(kind, key)`` is the public context manager for longer holds.
 """
 from __future__ import annotations
 
+import contextlib
+import json
 import os
 import shutil
 import time
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, Iterator, List, Optional, Tuple
 
 from ..ckpt.checkpoint import load_array_tree, write_array_tree
 
 __all__ = ["ArtifactStore", "features_to_tree", "tree_to_features"]
+
+_PIN_PREFIX = ".pin-"
 
 
 def features_to_tree(fs) -> Dict[str, Any]:
@@ -92,6 +105,7 @@ class ArtifactStore:
             "put_races": 0,
             "corrupt_dropped": 0,
             "evicted": 0,
+            "gc_pin_skips": 0,
         }
         self._nonce = 0
 
@@ -111,6 +125,69 @@ class ArtifactStore:
         return os.path.join(
             self.root, "tmp", f"{key}-{os.getpid()}-{self._nonce}"
         )
+
+    # ---- pinning ---------------------------------------------------------
+
+    @contextlib.contextmanager
+    def pin(self, kind: str, key: str):
+        """Hold a read-lock on one entry: while the context is open, no
+        ``gc`` sharing this root (any process on this host) will evict it.
+        Yields True when the pin landed, False when the entry does not
+        exist (already evicted / never published) — the caller recomputes.
+        Pins are advisory markers tied to this pid; a crash leaves a stale
+        marker that the next ``gc`` sweeps once the pid is gone."""
+        self._nonce += 1
+        pinfile = os.path.join(
+            self._entry_dir(kind, key),
+            f"{_PIN_PREFIX}{os.getpid()}-{self._nonce}",
+        )
+        try:
+            open(pinfile, "x").close()
+            pinned = True
+        except OSError:  # entry dir vanished (or pinfile collision)
+            pinned = False
+        try:
+            yield pinned
+        finally:
+            if pinned:
+                try:
+                    os.unlink(pinfile)
+                except OSError:
+                    pass
+
+    @staticmethod
+    def _pid_alive(pid: int) -> bool:
+        try:
+            os.kill(pid, 0)
+        except ProcessLookupError:
+            return False
+        except OSError:  # EPERM etc.: someone else's live process
+            return True
+        return True
+
+    def _has_live_pin(self, edir: str) -> bool:
+        """True when any pin marker in the entry belongs to a live pid;
+        markers from dead pids are swept as a side effect."""
+        live = False
+        try:
+            names = os.listdir(edir)
+        except OSError:
+            return False
+        for name in names:
+            if not name.startswith(_PIN_PREFIX):
+                continue
+            try:
+                pid = int(name[len(_PIN_PREFIX):].split("-", 1)[0])
+            except ValueError:
+                pid = -1
+            if pid > 0 and self._pid_alive(pid):
+                live = True
+            else:
+                try:
+                    os.unlink(os.path.join(edir, name))
+                except OSError:
+                    pass
+        return live
 
     # ---- core API --------------------------------------------------------
 
@@ -150,19 +227,55 @@ class ArtifactStore:
         if not os.path.exists(path):
             self.counters["misses"] += 1
             return None
-        try:
-            tree, extra = load_array_tree(path)
-        except Exception:
-            shutil.rmtree(path, ignore_errors=True)
-            self.counters["corrupt_dropped"] += 1
-            self.counters["misses"] += 1
-            return None
+        # pin for the duration of the load: a concurrent gc (this or any
+        # other process on the root) cannot delete the files mid-read.
+        # pinned=False means the entry vanished between exists() and the
+        # pin — an ordinary miss, not corruption.
+        with self.pin(kind, key) as pinned:
+            if not pinned:
+                self.counters["misses"] += 1
+                return None
+            try:
+                tree, extra = load_array_tree(path)
+            except Exception:
+                shutil.rmtree(path, ignore_errors=True)
+                self.counters["corrupt_dropped"] += 1
+                self.counters["misses"] += 1
+                return None
         self.counters["hits"] += 1
         try:
             os.utime(path)  # LRU clock for gc()
         except OSError:
             pass
         return tree, extra
+
+    def delete(self, kind: str, key: str) -> bool:
+        """Explicitly drop one entry (e.g. a registry name being
+        re-published).  Returns True when something was removed.  Unlike
+        gc this ignores pins — an explicit delete is an operator decision,
+        not cache pressure."""
+        path = self._entry_dir(kind, key)
+        if not os.path.exists(path):
+            return False
+        shutil.rmtree(path, ignore_errors=True)
+        return True
+
+    def list_extras(self, kind: str) -> Iterator[Tuple[str, Dict]]:
+        """Yield ``(key, extra)`` for every published entry of ``kind``,
+        reading only the manifests (no array payloads) — how the model
+        registry enumerates published names from a content-addressed
+        namespace."""
+        kdir = os.path.join(self.root, "objects", kind)
+        if not os.path.isdir(kdir):
+            return
+        for prefix in sorted(os.listdir(kdir)):
+            pdir = os.path.join(kdir, prefix)
+            for key in sorted(os.listdir(pdir)):
+                try:
+                    with open(os.path.join(pdir, key, "manifest.json")) as f:
+                        yield key, json.load(f).get("extra", {})
+                except (OSError, ValueError):
+                    continue
 
     # ---- maintenance -----------------------------------------------------
 
@@ -221,6 +334,10 @@ class ArtifactStore:
         keep = []
         for edir, size, mtime in entries:
             if max_age_s is not None and now - mtime > max_age_s:
+                if self._has_live_pin(edir):  # a reader is streaming it
+                    self.counters["gc_pin_skips"] += 1
+                    keep.append((edir, size, mtime))
+                    continue
                 shutil.rmtree(edir, ignore_errors=True)
                 total -= size
                 dropped += 1
@@ -230,6 +347,9 @@ class ArtifactStore:
             for edir, size, _ in keep:
                 if total <= max_bytes:
                     break
+                if self._has_live_pin(edir):
+                    self.counters["gc_pin_skips"] += 1
+                    continue
                 shutil.rmtree(edir, ignore_errors=True)
                 total -= size
                 dropped += 1

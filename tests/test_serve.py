@@ -1,0 +1,486 @@
+"""Trace-server (simulation-as-a-service) tests.
+
+Covers the PR-7 serving surface: continuous batching into the engine's
+per-geometry executable pool (the acceptance test: a warm server under
+concurrent mixed-tenant load — 2 geometries, 2 models, 4 clients —
+performs 0 request-attributed compiles and 0 redundant feature
+extractions while returning metrics bit-identical to direct
+``TrainedModel.simulate``), tenant fairness, queue-bound backpressure
+with 429-style retry hints, content-digest feature coalescing (memory and
+store), the stable ``ServeError`` code vocabulary, the model registry's
+publish/resolve round-trip, the JSON-lines TCP front end, and the
+``to_dict`` wire contracts on results, reports, and stats.
+"""
+from __future__ import annotations
+
+import asyncio
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.api import (
+    EngineConfig,
+    ModelRegistry,
+    ServeError,
+    ServeRequest,
+    ServeResult,
+    Session,
+    TraceServer,
+    TrainedModel,
+)
+from repro.core import FeatureConfig, TaoConfig, init_tao
+from repro.engine.runner import (
+    MetricNotCollectedError,
+    MetricNotComputedError,
+)
+from repro.serve import decode_trace, encode_trace
+from repro.store import ArtifactStore
+
+CFG = TaoConfig(
+    window=9, d_model=16, n_heads=2, n_layers=1, d_ff=32, d_cat=8,
+    features=FeatureConfig(n_buckets=64, n_queue=4, n_mem=8),
+)
+
+
+@pytest.fixture(scope="module")
+def sess():
+    return Session(CFG)
+
+
+@pytest.fixture(scope="module")
+def traces(sess):
+    # two distinct window geometries under one config: w_eff=9 and w_eff=6
+    return {
+        "long": sess.capture("mcf", 1200),
+        "mid": sess.capture("dee", 600),
+        "short": sess.capture("lee", 6),
+    }
+
+
+@pytest.fixture(scope="module")
+def models():
+    return {
+        name: TrainedModel(
+            params=init_tao(jax.random.PRNGKey(i), CFG), cfg=CFG, name=name
+        )
+        for i, name in enumerate(("base", "tuned"))
+    }
+
+
+@pytest.fixture()
+def registry(models):
+    reg = ModelRegistry()
+    for name, m in models.items():
+        reg.register(name, m)
+    return reg
+
+
+def _serve(coro):
+    return asyncio.run(coro)
+
+
+# ---------------------------------------------------------------------------
+# Acceptance: warm server, mixed tenants/geometries/models, 0 compiles,
+# 0 redundant extractions, bit-identical to direct simulate
+# ---------------------------------------------------------------------------
+
+
+def test_warm_server_mixed_load_zero_compiles(registry, traces, models):
+    load = {
+        "alice": [("base", "long"), ("tuned", "short")],
+        "bob": [("tuned", "long"), ("base", "mid")],
+        "carol": [("base", "long"), ("base", "short")],
+        "dave": [("tuned", "mid"), ("tuned", "long")],
+    }
+
+    async def run():
+        server = TraceServer(registry, batch_size=8, max_queue=64)
+        async with server:
+            server.warmup([len(t) for t in traces.values()])
+            assert server.num_compiles == 0
+
+            async def tenant(name, jobs):
+                futs = [
+                    server.submit(ServeRequest(model=m, trace=traces[t],
+                                               tenant=name))
+                    for m, t in jobs
+                ]
+                return await asyncio.gather(*futs)
+
+            out = await asyncio.gather(
+                *(tenant(name, jobs) for name, jobs in load.items())
+            )
+            stats = server.stats()
+        return out, stats, server
+
+    out, stats, server = _serve(run())
+
+    # 0 XLA compiles attributed to serving; warmup paid for everything
+    assert server.num_compiles == 0
+    assert stats.num_compiles == 0
+    assert stats.completed == 8 and stats.failed == 0
+
+    # 0 redundant extractions: one pre-pass per distinct trace, the other
+    # five requests coalesced onto them
+    assert stats.features_extracted == 3
+    assert stats.features_coalesced == 5
+
+    # both geometries and all four tenants were served
+    assert set(stats.per_geometry) == {"w9b8", "w6b8"}
+    assert set(stats.per_tenant) == {"alice", "bob", "carol", "dave"}
+
+    # bit-identical to the direct path (same executables, same features)
+    for (tname, jobs), res in zip(load.items(), out):
+        for (mname, tkey), r in zip(jobs, res):
+            assert r.tenant == tname and r.model == mname
+            direct = models[mname].simulate(traces[tkey], batch_size=8)
+            assert r.num_instructions == direct.num_instructions
+            for k, v in r.metrics.items():
+                assert np.array_equal(
+                    np.asarray(v), np.asarray(direct.metrics[k])
+                ), (tname, k)
+
+
+# ---------------------------------------------------------------------------
+# Fairness: round-robin across tenants within a geometry
+# ---------------------------------------------------------------------------
+
+
+def test_tenant_fairness_interleaving(registry, traces):
+    order = []
+
+    async def run():
+        server = TraceServer(registry, batch_size=8, max_queue=64)
+        async with server:
+            futs = []
+            # tenant A floods 12 requests before B's 4 arrive; all same
+            # geometry, so only tenant round-robin separates them
+            for i in range(12):
+                f = server.submit(ServeRequest(model="base",
+                                               trace=traces["long"],
+                                               tenant="A", request_id=f"A{i}"))
+                f.add_done_callback(lambda _f: order.append("A"))
+                futs.append(f)
+            for i in range(4):
+                f = server.submit(ServeRequest(model="base",
+                                               trace=traces["long"],
+                                               tenant="B", request_id=f"B{i}"))
+                f.add_done_callback(lambda _f: order.append("B"))
+                futs.append(f)
+            await asyncio.gather(*futs)
+
+    _serve(run())
+    assert len(order) == 16
+    # B's k-th completion must land by slot 2k+1 (strict alternation while
+    # both tenants have work) — a flooding tenant cannot starve B
+    b_slots = [i for i, t in enumerate(order) if t == "B"]
+    assert len(b_slots) == 4
+    for k, slot in enumerate(b_slots):
+        assert slot <= 2 * k + 1, (order, b_slots)
+
+
+# ---------------------------------------------------------------------------
+# Backpressure: bounded admission, 429-style rejection, recovery
+# ---------------------------------------------------------------------------
+
+
+def test_backpressure_queue_full_and_recovery(registry, traces):
+    async def run():
+        server = TraceServer(registry, batch_size=8, max_queue=4)
+        async with server:
+            futs = [
+                server.submit(ServeRequest(model="base",
+                                           trace=traces["short"]))
+                for _ in range(4)
+            ]
+            with pytest.raises(ServeError) as ei:
+                server.submit(ServeRequest(model="base",
+                                           trace=traces["short"]))
+            err = ei.value
+            assert err.code == "QUEUE_FULL"
+            assert err.retry_after_s is not None and err.retry_after_s > 0
+            d = err.to_dict()
+            assert d["error"] == "QUEUE_FULL" and "retry_after_s" in d
+            rejected_at = server.stats().rejected
+
+            await asyncio.gather(*futs)          # drain
+            # after draining, admission works again
+            r = await server.submit(ServeRequest(model="base",
+                                                 trace=traces["short"]))
+            assert r.num_instructions == len(traces["short"])
+            return rejected_at, server.stats()
+
+    rejected_at, stats = _serve(run())
+    assert rejected_at == 1
+    assert stats.rejected == 1 and stats.completed == 5
+
+
+# ---------------------------------------------------------------------------
+# Feature coalescing: in-memory dedup and store-backed reuse
+# ---------------------------------------------------------------------------
+
+
+def test_feature_coalescing_across_models_and_store(registry, traces,
+                                                    tmp_path):
+    store = ArtifactStore(str(tmp_path / "s"))
+
+    async def run(reg):
+        server = TraceServer(reg, batch_size=8, store=store)
+        async with server:
+            futs = [
+                server.submit(ServeRequest(model=m, trace=traces["mid"]))
+                for m in ("base", "tuned", "base")
+            ]
+            await asyncio.gather(*futs)
+        return server.stats()
+
+    s1 = _serve(run(registry))
+    # one extraction serves all three requests (two models, one digest)
+    assert s1.features_extracted == 1
+    assert s1.features_from_store == 0
+    assert s1.features_coalesced == 2
+
+    # a fresh server over the same store: zero extractions, store hit
+    reg2 = ModelRegistry()
+    for name in ("base", "tuned"):
+        reg2.register(name, registry.resolve(name))
+    s2 = _serve(run(reg2))
+    assert s2.features_extracted == 0
+    assert s2.features_from_store == 1
+    assert s2.features_coalesced == 2
+
+
+# ---------------------------------------------------------------------------
+# Error surface: the stable code vocabulary
+# ---------------------------------------------------------------------------
+
+
+def test_error_codes_unknown_model_bad_request(registry, traces):
+    async def run():
+        server = TraceServer(registry, batch_size=8)
+        async with server:
+            with pytest.raises(ServeError) as ei:
+                server.submit(ServeRequest(model="nope",
+                                           trace=traces["short"]))
+            assert ei.value.code == "UNKNOWN_MODEL"
+
+            empty = np.empty(0, traces["short"].functional.dtype)
+            with pytest.raises(ServeError) as ei:
+                server.submit(ServeRequest(model="base", trace=empty))
+            assert ei.value.code == "BAD_REQUEST"
+
+            with pytest.raises(ServeError) as ei:
+                server.submit(ServeRequest(model="base",
+                                           trace=traces["short"],
+                                           metrics=("no_such_metric",)))
+            assert ei.value.code == "BAD_REQUEST"
+
+    _serve(run())
+
+
+def test_error_wrap_mapping_never_leaks():
+    assert ServeError.wrap(MetricNotCollectedError("x")).code == \
+        "METRIC_NOT_COLLECTED"
+    assert ServeError.wrap(MetricNotComputedError("x")).code == \
+        "METRIC_NOT_COMPUTED"
+    e = ServeError.wrap(RuntimeError("secret internal path /etc/x"))
+    assert e.code == "INTERNAL"
+    assert "secret" not in e.message and "/etc" not in e.message
+    # already-a-ServeError passes through untouched
+    orig = ServeError("QUEUE_FULL", "full", retry_after_s=1.0)
+    assert ServeError.wrap(orig) is orig
+    with pytest.raises(ValueError):
+        ServeError("NOT_A_CODE", "x")
+
+
+def test_shutdown_rejects_and_drain_false_fails_pending(registry, traces):
+    async def run():
+        server = TraceServer(registry, batch_size=8)
+        await server.start()
+        fut = server.submit(ServeRequest(model="base",
+                                         trace=traces["short"]))
+        await server.stop(drain=False)
+        with pytest.raises(ServeError) as ei:
+            await fut
+        assert ei.value.code == "SHUTTING_DOWN"
+        with pytest.raises(ServeError) as ei:
+            server.submit(ServeRequest(model="base", trace=traces["short"]))
+        assert ei.value.code == "SHUTTING_DOWN"
+
+    _serve(run())
+
+
+# ---------------------------------------------------------------------------
+# Registry: publish/resolve round-trip through the store
+# ---------------------------------------------------------------------------
+
+
+def test_registry_publish_resolve_roundtrip(models, traces, tmp_path):
+    store = ArtifactStore(str(tmp_path / "s"))
+    reg = ModelRegistry(store)
+    reg.register("served", models["base"], publish=True)
+    assert "served" in reg and len(reg) == 1
+
+    # a fresh registry over the same store resolves the name cold
+    reg2 = ModelRegistry(store)
+    assert "served" in reg2
+    assert dict(reg2.published())["served"]["cfg"]["window"] == CFG.window
+    m = reg2.resolve("served")
+    assert m.cfg == CFG
+    r_direct = models["base"].simulate(traces["short"], batch_size=8)
+    r_resolved = m.simulate(traces["short"], batch_size=8)
+    assert r_resolved.cpi == r_direct.cpi
+
+    # name rebinding is explicit
+    with pytest.raises(ValueError, match="overwrite"):
+        reg2.publish("served", models["tuned"])
+    reg2.publish("served", models["tuned"], overwrite=True)
+    reg3 = ModelRegistry(store)
+    got = reg3.resolve("served")
+    leaves = list(zip(jax.tree.leaves(got.params),
+                      jax.tree.leaves(models["tuned"].params)))
+    assert all(np.array_equal(np.asarray(a), np.asarray(b))
+               for a, b in leaves)
+
+    with pytest.raises(ServeError) as ei:
+        reg3.resolve("never-published")
+    assert ei.value.code == "UNKNOWN_MODEL"
+
+
+# ---------------------------------------------------------------------------
+# Plan switching (multi-device only)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.skipif(len(jax.devices()) < 2,
+                    reason="needs >= 2 devices for a sharded plan")
+def test_set_plan_switch_without_restart(registry, traces):
+    from jax.sharding import Mesh
+
+    mesh = Mesh(np.array(jax.devices()[:2]), ("data",))
+
+    async def run():
+        server = TraceServer(registry, batch_size=8)
+        async with server:
+            r1 = await server.submit(ServeRequest(model="base",
+                                                  trace=traces["long"]))
+            plan = server.set_plan(mesh=mesh)
+            assert plan.kind == "sharded" and plan.num_shards == 2
+            r2 = await server.submit(ServeRequest(model="base",
+                                                  trace=traces["long"]))
+            server.set_plan()                      # back to single-device
+            r3 = await server.submit(ServeRequest(model="base",
+                                                  trace=traces["long"]))
+            stats = server.stats()
+        assert np.asarray(r1.metrics["cpi"]) == pytest.approx(
+            np.asarray(r2.metrics["cpi"]), rel=1e-5)
+        assert np.array_equal(np.asarray(r1.metrics["cpi"]),
+                              np.asarray(r3.metrics["cpi"]))
+        assert stats.plan_kind == "single"
+
+    _serve(run())
+
+
+# ---------------------------------------------------------------------------
+# TCP front end (JSON lines)
+# ---------------------------------------------------------------------------
+
+
+def test_tcp_front_end_simulate_stats_models(registry, traces, models):
+    from repro.launch.serve import serve_forever
+
+    async def run():
+        server = TraceServer(registry, batch_size=8, max_queue=16)
+        async with server:
+            ready = asyncio.get_running_loop().create_future()
+            tcp = asyncio.get_running_loop().create_task(
+                serve_forever(server, "127.0.0.1", 0, ready))
+            _, port = await ready
+            reader, writer = await asyncio.open_connection("127.0.0.1", port)
+
+            def send(obj):
+                writer.write(json.dumps(obj).encode() + b"\n")
+
+            send({"op": "models"})
+            send({"op": "simulate", "model": "base", "tenant": "wire",
+                  "request_id": "w0",
+                  "trace": encode_trace(traces["short"].functional)})
+            send({"op": "simulate", "model": "nope", "request_id": "w1",
+                  "trace": encode_trace(traces["short"].functional)})
+            writer.write(b"this is not json\n")
+            await writer.drain()
+            resps = [json.loads(await reader.readline()) for _ in range(4)]
+            send({"op": "stats"})            # after the simulate completed
+            await writer.drain()
+            resps.append(json.loads(await reader.readline()))
+            writer.close()
+            tcp.cancel()
+        return resps
+
+    resps = _serve(run())
+    by_kind = {}
+    for r in resps:
+        if "models" in r:
+            by_kind["models"] = r
+        elif "stats" in r:
+            by_kind["stats"] = r
+        elif r.get("ok") and "result" in r:
+            by_kind["result"] = r
+        elif r.get("error") == "UNKNOWN_MODEL":
+            by_kind["unknown"] = r
+        elif r.get("error") == "BAD_REQUEST":
+            by_kind["bad"] = r
+    assert set(by_kind) == {"models", "stats", "result", "unknown", "bad"}
+    assert by_kind["models"]["models"] == ["base", "tuned"]
+    assert by_kind["result"]["result"]["request_id"] == "w0"
+    assert by_kind["result"]["result"]["metrics"]["cpi"] > 0
+    assert by_kind["stats"]["stats"]["completed"] >= 1
+
+
+def test_trace_wire_codec_roundtrip(traces):
+    arr = traces["mid"].functional
+    enc = encode_trace(arr)
+    json.dumps(enc)                                  # wire-clean
+    dec = decode_trace(enc)
+    assert dec.dtype == arr.dtype
+    np.testing.assert_array_equal(dec, arr)
+    bad = dict(enc)
+    bad["shape"] = [len(arr) + 1]
+    with pytest.raises(ValueError, match="bytes"):
+        decode_trace(bad)
+
+
+# ---------------------------------------------------------------------------
+# to_dict wire contracts
+# ---------------------------------------------------------------------------
+
+
+def test_to_dict_contracts_json_clean(registry, traces, models, sess):
+    async def run():
+        server = TraceServer(registry, batch_size=8)
+        async with server:
+            r = await server.submit(ServeRequest(
+                model="base", trace=traces["mid"], request_id="rid"))
+            stats = server.stats()
+        return r, stats
+
+    r, stats = _serve(run())
+    assert isinstance(r, ServeResult)
+    d = json.loads(json.dumps(r.to_dict()))
+    assert d["request_id"] == "rid" and d["geometry"] == "w9b8"
+    assert isinstance(d["metrics"]["cpi"], float)
+    sd = json.loads(json.dumps(stats.to_dict()))
+    assert sd["completed"] == 1 and "per_geometry" in sd
+
+    # SimulationResult / SweepReport wire forms (satellite contract)
+    sim = models["base"].simulate(traces["short"], batch_size=8)
+    simd = json.loads(json.dumps(sim.to_dict()))
+    assert simd["metrics"]["cpi"] == pytest.approx(sim.cpi)
+    rep = sess.sweep({"m": models["base"]}, {"t": traces["short"]},
+                     batch_size=8)
+    repd = json.loads(json.dumps(rep.to_dict()))
+    assert repd["results"]["m/t"]["metrics"]["cpi"] == pytest.approx(
+        rep.results["m/t"].cpi)
+    assert repd["num_traces"] == 1

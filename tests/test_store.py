@@ -214,6 +214,93 @@ def test_store_self_gc_with_max_bytes(tmp_path):
 
 
 # ---------------------------------------------------------------------------
+# Pinning: readers block GC (the serving regression)
+# ---------------------------------------------------------------------------
+
+
+def test_store_pin_blocks_gc_same_host(tmp_path):
+    st = ArtifactStore(str(tmp_path / "s"))
+    k1, k2 = content_key("features", 1), content_key("features", 2)
+    st.put("features", k1, {"x": np.arange(10.0)})
+    st.put("features", k2, {"x": np.arange(10.0) + 1})
+    other = ArtifactStore(str(tmp_path / "s"))      # GC from "elsewhere"
+    with st.pin("features", k1) as pinned:
+        assert pinned
+        other.gc(max_age_s=0.0)
+        assert st.has("features", k1)               # pinned entry survives
+        assert not st.has("features", k2)           # unpinned is collected
+        assert other.counters["gc_pin_skips"] == 1
+        # byte-budget pass also skips the pinned entry
+        other.gc(max_bytes=0)
+        assert st.has("features", k1)
+    other.gc(max_age_s=0.0)                         # pin released
+    assert not st.has("features", k1)
+    # explicit delete is an operator decision: it ignores pins
+    st.put("features", k1, {"x": np.arange(10.0)})
+    with st.pin("features", k1):
+        assert st.delete("features", k1)
+    assert not st.has("features", k1)
+
+
+def test_store_pin_missing_entry_and_stale_pid(tmp_path):
+    st = ArtifactStore(str(tmp_path / "s"))
+    # pinning a never-published entry reports pinned=False (caller treats
+    # it as an ordinary miss and recomputes)
+    with st.pin("features", content_key("features", "never")) as pinned:
+        assert not pinned
+    # a stale marker from a dead pid must not block GC forever
+    k = content_key("features", "x")
+    st.put("features", k, {"x": np.arange(3.0)})
+    edir = st._entry_dir("features", k)
+    open(os.path.join(edir, ".pin-999999999-1"), "x").close()
+    st.gc(max_age_s=0.0)
+    assert not st.has("features", k)
+    assert st.counters["gc_pin_skips"] == 0
+
+
+_PIN_CHILD = r"""
+import sys
+from repro.api import ArtifactStore
+st = ArtifactStore(sys.argv[1])
+with st.pin(sys.argv[2], sys.argv[3]) as pinned:
+    print("PINNED" if pinned else "MISSING", flush=True)
+    sys.stdin.readline()                  # hold the pin until released
+print("DONE", flush=True)
+"""
+
+
+def test_store_pin_cross_process(tmp_path):
+    """A serving process streaming an entry pins it; GC in this process
+    must skip it until the reader exits (ISSUE satellite regression)."""
+    root = str(tmp_path / "s")
+    st = ArtifactStore(root)
+    k = content_key("serve_model", "served")
+    st.put("serve_model", k, {"w": np.arange(20.0)})
+    env = dict(os.environ)
+    env["JAX_PLATFORMS"] = "cpu"
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(ROOT, "src")]
+        + ([env["PYTHONPATH"]] if env.get("PYTHONPATH") else [])
+    )
+    p = subprocess.Popen(
+        [sys.executable, "-c", _PIN_CHILD, root, "serve_model", k],
+        stdin=subprocess.PIPE, stdout=subprocess.PIPE, text=True,
+        env=env, cwd=ROOT,
+    )
+    try:
+        assert p.stdout.readline().strip() == "PINNED"
+        st.gc(max_age_s=0.0)
+        assert st.has("serve_model", k)             # reader keeps it alive
+        assert st.counters["gc_pin_skips"] == 1
+    finally:
+        p.stdin.write("\n")
+        p.stdin.flush()
+        assert p.wait(timeout=120) == 0
+    st.gc(max_age_s=0.0)
+    assert not st.has("serve_model", k)
+
+
+# ---------------------------------------------------------------------------
 # Step-cache stats + AOT warmup (engine and trainer)
 # ---------------------------------------------------------------------------
 
