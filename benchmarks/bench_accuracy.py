@@ -6,7 +6,6 @@ per-benchmark CPI error against the detailed simulator's ground truth.
 """
 from __future__ import annotations
 
-import time
 
 import jax
 import jax.numpy as jnp
@@ -56,7 +55,7 @@ def _train_simnet(uarch, window):
     step = make_simnet_step(cfg, AdamWConfig(lr=1e-3))
     rng = np.random.default_rng(0)
     n = len(ds["x"])
-    for ep in range(EPOCHS):
+    for _ep in range(EPOCHS):
         order = rng.permutation(n)
         for lo in range(0, n - 8 + 1, 8):
             idx = order[lo : lo + 8]

@@ -1,0 +1,51 @@
+"""``repro.analysis`` — the repo's own static analyzer + runtime sanitizer.
+
+Static half (stdlib-only — CI's lint job runs it without jax installed):
+
+    python -m repro.analysis --strict src benchmarks
+
+Rule codes TAO001–TAO007 each encode an invariant a past PR earned the
+hard way (see docs/analysis.md for the catalog).  Per-line suppressions
+require a reason::
+
+    x = float(v)  # tao: noqa[TAO002] post-sync epilogue, one call per trace
+
+Runtime half: :func:`repro.analysis.sanitize.sanitized` (and the pytest
+``sanitize`` marker) runs a block with device→host transfers disallowed,
+NaN debugging on, and a hard compile budget — the dynamic enforcement of
+the same invariants TAO002/TAO003 check statically.
+
+Importing this package pulls only the static half; ``sanitize`` imports
+jax lazily on first use.
+"""
+from __future__ import annotations
+
+from .core import Analysis, Finding, Pragma, RULES, SourceFile, register_rule
+
+# importing the rule modules registers their checkers
+from . import rules_imports as _rules_imports      # noqa: F401  TAO001/TAO006
+from . import rules_hotpath as _rules_hotpath      # noqa: F401  TAO002
+from . import rules_cachekey as _rules_cachekey    # noqa: F401  TAO003
+from . import rules_contracts as _rules_contracts  # noqa: F401  TAO004/TAO007
+from . import rules_bitwise as _rules_bitwise      # noqa: F401  TAO005
+from .schemas import WIRE_SCHEMAS
+
+__all__ = [
+    "Analysis",
+    "Finding",
+    "Pragma",
+    "RULES",
+    "SourceFile",
+    "WIRE_SCHEMAS",
+    "register_rule",
+    "run_paths",
+]
+
+
+def run_paths(paths, *, select=None):
+    """Analyze files/directories; returns the driver's result dict
+    (``findings`` / ``suppressed`` / ``unused_suppressions``)."""
+    analysis = Analysis(select=select)
+    for p in paths:
+        analysis.add_path(p)
+    return analysis.run()

@@ -1,0 +1,94 @@
+"""CLI driver: ``python -m repro.analysis [--strict] paths...``.
+
+Exit status 1 on any unsuppressed finding; ``--strict`` additionally
+fails on unused suppressions (stale ``# tao: noqa`` lines), which is how
+CI keeps the suppression inventory honest.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import List, Optional
+
+from . import RULES, run_paths
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="Tao repo static analyzer (rule codes TAO001-TAO007; "
+        "see docs/analysis.md)",
+    )
+    parser.add_argument(
+        "paths", nargs="*", default=["src"],
+        help="files or directories to scan (default: src)",
+    )
+    parser.add_argument(
+        "--strict", action="store_true",
+        help="also fail on unused suppressions",
+    )
+    parser.add_argument(
+        "--select", metavar="CODES",
+        help="comma-separated rule codes to run (default: all)",
+    )
+    parser.add_argument(
+        "--format", choices=("text", "json"), default="text",
+        help="output format",
+    )
+    parser.add_argument(
+        "--list-rules", action="store_true",
+        help="print the rule catalog and exit",
+    )
+    args = parser.parse_args(argv)
+
+    if args.list_rules:
+        for code in sorted(RULES):
+            print(f"{code}  {RULES[code]}")
+        return 0
+
+    select = None
+    if args.select:
+        select = [c.strip().upper() for c in args.select.split(",") if c.strip()]
+        unknown = [c for c in select if c not in RULES]
+        if unknown:
+            parser.error(f"unknown rule code(s): {unknown}")
+
+    result = run_paths(args.paths, select=select)
+    findings = result["findings"]
+    unused = result["unused_suppressions"]
+    failing = list(findings) + (list(unused) if args.strict else [])
+
+    if args.format == "json":
+        print(json.dumps(
+            {
+                "findings": [f.to_dict() for f in findings],
+                "unused_suppressions": [f.to_dict() for f in unused],
+                "suppressed": [
+                    {**f.to_dict(), "reason": reason}
+                    for f, reason in result["suppressed"]
+                ],
+            },
+            indent=2,
+        ))
+        return 1 if failing else 0
+
+    for f in findings:
+        print(f.format())
+    for f in unused:
+        print(f.format())
+    n_sup = len(result["suppressed"])
+    if failing:
+        print(
+            f"\n{len(findings)} finding(s), {len(unused)} unused "
+            f"suppression(s){' (strict)' if args.strict else ''}, "
+            f"{n_sup} suppressed",
+            file=sys.stderr,
+        )
+        return 1
+    print(f"clean: 0 findings ({n_sup} suppressed with reasons)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,390 @@
+"""Shared machinery of the ``repro.analysis`` static analyzer.
+
+One pass, three layers:
+
+  * **pragmas** — ``# tao: ...`` comments parsed off the token stream
+    (never out of string literals).  The grammar is small and closed:
+
+      ``# tao: noqa[TAO002] <reason>``      suppress listed codes on this
+                                            line; the reason is REQUIRED
+      ``# tao: hot``                        this def is a hot-path seed
+                                            (TAO002 reachability root)
+      ``# tao: cold``                       this def is explicitly cold:
+                                            reachability does not enter it
+      ``# tao: bitwise``                    this def is under the bitwise
+                                            NumPy-equality contract (TAO005)
+      ``# tao: step-builder[label]``        this def builds a cached step
+                                            (``ignore=a,b`` skips params)
+      ``# tao: step-key[label]``            the cache-key tuple on this line
+                                            belongs to builder ``label``
+
+  * **SourceFile** — one parsed module: AST, pragma maps, and the def
+    table the reachability / pairing rules consume.
+
+  * **Analysis** — the driver: runs every registered checker over every
+    file, applies suppressions (a suppression without a reason never
+    suppresses — it becomes a TAO000 finding instead), and reports
+    unused suppressions so stale ``noqa`` lines cannot accumulate.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import io
+import re
+import tokenize
+from pathlib import Path
+from typing import Callable, Dict, Iterable, List, Optional, Sequence, Tuple
+
+__all__ = [
+    "Finding",
+    "Pragma",
+    "SourceFile",
+    "Analysis",
+    "RULES",
+    "register_rule",
+]
+
+
+# code -> one-line description (filled by register_rule; TAO000 is the
+# analyzer's own hygiene code and is never suppressible)
+RULES: Dict[str, str] = {
+    "TAO000": "malformed/bare `# tao:` pragma (suppressions require a reason)",
+}
+
+_CHECKERS: List[Callable] = []       # per-file checkers
+_FINALIZERS: List[Callable] = []     # whole-fileset checkers
+
+
+def register_rule(code: str, description: str, *, finalizer: bool = False):
+    """Decorator: register a checker under a rule code.
+
+    Per-file checkers are called ``check(sf, analysis)`` per SourceFile;
+    finalizers are called ``check(analysis)`` once after every file was
+    scanned (cross-file rules: finalize-key collisions, schema drift).
+    """
+    RULES.setdefault(code, description)
+
+    def wrap(fn):
+        (_FINALIZERS if finalizer else _CHECKERS).append(fn)
+        return fn
+
+    return wrap
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    path: str
+    line: int
+    col: int
+    code: str
+    message: str
+
+    def format(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}: {self.code} {self.message}"
+
+    def to_dict(self) -> Dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass(frozen=True)
+class Pragma:
+    line: int
+    kind: str                 # noqa | hot | cold | bitwise | step-builder | step-key
+    codes: Tuple[str, ...] = ()
+    reason: str = ""
+    label: str = ""
+    ignore: Tuple[str, ...] = ()
+
+
+_PRAGMA_RE = re.compile(r"#\s*tao:\s*(.*?)\s*$")
+_NOQA_RE = re.compile(r"^noqa\s*(?:\[([A-Za-z0-9_,\s]*)\])?\s*:?\s*(.*)$", re.S)
+_LABELED_RE = re.compile(
+    r"^(step-builder|step-key)\s*\[([\w.-]+)\]\s*(?:ignore=([\w,\s]+))?\s*$"
+)
+
+
+def _parse_pragma(line: int, body: str) -> Pragma:
+    if body.startswith("noqa"):
+        m = _NOQA_RE.match(body)
+        codes = tuple(
+            c.strip().upper() for c in (m.group(1) or "").split(",") if c.strip()
+        )
+        return Pragma(line, "noqa", codes=codes, reason=(m.group(2) or "").strip())
+    m = _LABELED_RE.match(body)
+    if m:
+        ignore = tuple(
+            s.strip() for s in (m.group(3) or "").split(",") if s.strip()
+        )
+        return Pragma(line, m.group(1), label=m.group(2), ignore=ignore)
+    if body in ("hot", "cold", "bitwise"):
+        return Pragma(line, body)
+    return Pragma(line, "malformed", reason=body)
+
+
+@dataclasses.dataclass
+class FuncInfo:
+    """One def in the module's function table."""
+
+    qualname: str
+    name: str
+    node: ast.AST            # FunctionDef | AsyncFunctionDef
+    parent: Optional[str]    # enclosing qualname ("" for module level)
+    in_class: Optional[str]  # nearest enclosing class name
+    hot: bool = False
+    cold: bool = False
+    bitwise: bool = False
+    builder: Optional[Pragma] = None   # step-builder pragma
+
+
+class SourceFile:
+    """A parsed module plus its pragma and def tables."""
+
+    def __init__(self, path: Path, display: str, text: str):
+        self.path = path
+        self.display = display
+        self.text = text
+        self.tree = ast.parse(text, filename=display)
+        self.pragmas: Dict[int, List[Pragma]] = {}
+        self.noqa: Dict[int, Pragma] = {}
+        self._scan_comments()
+        self.funcs: Dict[str, FuncInfo] = {}
+        self._build_func_table()
+
+    # ---- classification helpers -----------------------------------------
+
+    @property
+    def is_compat(self) -> bool:
+        return self.path.name == "compat.py"
+
+    @property
+    def is_kernel(self) -> bool:
+        return self.path.name == "kernel.py" and "kernels" in self.path.parts
+
+    # ---- comments --------------------------------------------------------
+
+    def _scan_comments(self) -> None:
+        try:
+            tokens = tokenize.generate_tokens(io.StringIO(self.text).readline)
+            for tok in tokens:
+                if tok.type != tokenize.COMMENT:
+                    continue
+                m = _PRAGMA_RE.search(tok.string)
+                if m is None:
+                    continue
+                p = _parse_pragma(tok.start[0], m.group(1))
+                self.pragmas.setdefault(p.line, []).append(p)
+                if p.kind == "noqa":
+                    self.noqa[p.line] = p
+        except tokenize.TokenError:
+            pass  # ast.parse already succeeded; comments best-effort
+
+    def pragmas_for_def(self, node: ast.AST) -> List[Pragma]:
+        """Pragmas attached to a def: trailing on the ``def`` line or on
+        the line directly above it (above any decorators too)."""
+        lines = [node.lineno, node.lineno - 1]
+        deco = getattr(node, "decorator_list", [])
+        if deco:
+            lines.append(min(d.lineno for d in deco) - 1)
+        out: List[Pragma] = []
+        for ln in lines:
+            out.extend(self.pragmas.get(ln, ()))
+        return out
+
+    # ---- def table -------------------------------------------------------
+
+    def _build_func_table(self) -> None:
+        sf = self
+
+        class V(ast.NodeVisitor):
+            def __init__(self):
+                self.stack: List[str] = []
+                self.classes: List[str] = []
+
+            def visit_ClassDef(self, node):
+                self.stack.append(node.name)
+                self.classes.append(node.name)
+                self.generic_visit(node)
+                self.classes.pop()
+                self.stack.pop()
+
+            def _def(self, node):
+                qual = ".".join(self.stack + [node.name])
+                fi = FuncInfo(
+                    qualname=qual,
+                    name=node.name,
+                    node=node,
+                    parent=".".join(self.stack) if self.stack else "",
+                    in_class=self.classes[-1] if self.classes else None,
+                )
+                for p in sf.pragmas_for_def(node):
+                    if p.kind == "hot":
+                        fi.hot = True
+                    elif p.kind == "cold":
+                        fi.cold = True
+                    elif p.kind == "bitwise":
+                        fi.bitwise = True
+                    elif p.kind == "step-builder":
+                        fi.builder = p
+                sf.funcs[qual] = fi
+                self.stack.append(node.name)
+                self.generic_visit(node)
+                self.stack.pop()
+
+            visit_FunctionDef = _def
+            visit_AsyncFunctionDef = _def
+
+        V().visit(self.tree)
+
+    def statement_at(self, line: int) -> Optional[ast.stmt]:
+        """The innermost statement whose span covers ``line``."""
+        best: Optional[ast.stmt] = None
+        for node in ast.walk(self.tree):
+            if not isinstance(node, ast.stmt):
+                continue
+            end = getattr(node, "end_lineno", node.lineno)
+            if node.lineno <= line <= end:
+                if best is None or (
+                    node.lineno >= best.lineno
+                    and end <= getattr(best, "end_lineno", best.lineno)
+                ):
+                    best = node
+        return best
+
+
+def body_nodes(fn: ast.AST) -> Iterable[ast.AST]:
+    """Walk a function's lexical body, NOT descending into nested defs
+    (nested defs have their own FuncInfo and are visited separately)."""
+    stack = list(ast.iter_child_nodes(fn))
+    while stack:
+        node = stack.pop()
+        yield node
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef)):
+            continue
+        stack.extend(ast.iter_child_nodes(node))
+
+
+def attr_chain(node: ast.AST) -> Optional[str]:
+    """``self.ecfg.collect`` -> "self.ecfg.collect"; None when the chain
+    does not bottom out in a Name."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+class Analysis:
+    """Driver: scan files, run checkers, apply suppressions."""
+
+    def __init__(self, select: Optional[Sequence[str]] = None):
+        self.select = set(select) if select else None
+        self.files: List[SourceFile] = []
+        self.errors: List[Finding] = []
+        # cross-file fact stores (filled by per-file checkers, consumed
+        # by finalizers)
+        self.metric_specs: List[Dict] = []     # TAO004 facts
+        self.wire_classes: Dict[str, Dict] = {}  # TAO007 facts
+
+    # ---- input -----------------------------------------------------------
+
+    def add_path(self, path: str) -> None:
+        p = Path(path)
+        if p.is_dir():
+            for f in sorted(p.rglob("*.py")):
+                if any(part.startswith(".") for part in f.parts):
+                    continue
+                self._add_file(f)
+        elif p.suffix == ".py":
+            self._add_file(p)
+        else:
+            raise FileNotFoundError(f"not a python file or directory: {path}")
+
+    def _add_file(self, p: Path) -> None:
+        text = p.read_text(encoding="utf-8")
+        try:
+            self.files.append(SourceFile(p, str(p), text))
+        except SyntaxError as e:
+            self.errors.append(
+                Finding(str(p), e.lineno or 1, e.offset or 0, "TAO000",
+                        f"file does not parse: {e.msg}")
+            )
+
+    # ---- run -------------------------------------------------------------
+
+    def run(self) -> Dict[str, List]:
+        raw: List[Finding] = list(self.errors)
+        for sf in self.files:
+            for check in _CHECKERS:
+                raw.extend(check(sf, self))
+        for check in _FINALIZERS:
+            raw.extend(check(self))
+
+        if self.select is not None:
+            raw = [f for f in raw if f.code in self.select or f.code == "TAO000"]
+
+        noqa_by_file = {sf.display: sf.noqa for sf in self.files}
+        used: Dict[Tuple[str, int], bool] = {}
+        findings: List[Finding] = []
+        suppressed: List[Tuple[Finding, str]] = []
+        for f in raw:
+            p = noqa_by_file.get(f.path, {}).get(f.line)
+            if (
+                p is not None
+                and f.code != "TAO000"
+                and f.code in p.codes
+                and p.reason
+            ):
+                used[(f.path, p.line)] = True
+                suppressed.append((f, p.reason))
+            else:
+                findings.append(f)
+
+        # pragma hygiene: malformed pragmas, bare/codeless noqa, unknown
+        # codes, unused suppressions
+        unused: List[Finding] = []
+        for sf in self.files:
+            for plist in sf.pragmas.values():
+                for p in plist:
+                    if p.kind == "malformed":
+                        findings.append(Finding(
+                            sf.display, p.line, 0, "TAO000",
+                            f"unrecognized tao pragma: {p.reason!r}",
+                        ))
+                    elif p.kind == "noqa":
+                        if not p.codes:
+                            findings.append(Finding(
+                                sf.display, p.line, 0, "TAO000",
+                                "bare `tao: noqa` — name the code(s): "
+                                "`# tao: noqa[TAOxxx] <reason>`",
+                            ))
+                            continue
+                        unknown = [c for c in p.codes if c not in RULES]
+                        if unknown:
+                            findings.append(Finding(
+                                sf.display, p.line, 0, "TAO000",
+                                f"unknown rule code(s) {unknown} in suppression",
+                            ))
+                        if not p.reason:
+                            findings.append(Finding(
+                                sf.display, p.line, 0, "TAO000",
+                                f"suppression of {list(p.codes)} carries no "
+                                "reason — `# tao: noqa[TAOxxx] <reason>`",
+                            ))
+                        elif not used.get((sf.display, p.line)):
+                            unused.append(Finding(
+                                sf.display, p.line, 0, "TAO000",
+                                f"unused suppression of {list(p.codes)} "
+                                "(nothing fired on this line — delete it)",
+                            ))
+
+        findings.sort(key=lambda f: (f.path, f.line, f.col, f.code))
+        unused.sort(key=lambda f: (f.path, f.line))
+        return {
+            "findings": findings,
+            "suppressed": suppressed,
+            "unused_suppressions": unused,
+        }

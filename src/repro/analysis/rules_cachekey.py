@@ -1,0 +1,153 @@
+"""TAO003 — step-cache-key completeness.
+
+The process-wide step caches (``engine/runner.py`` ``_STEP_CACHE``,
+``train/trainer.py`` ``cached_train_step``) key a compiled step by a tuple
+of everything the builder closure read.  Anything the builder reads but
+the key omits is a **stale-cache bug**: two configs that differ only in
+the omitted field silently share one compiled step.  PR 2 (backend left
+out of the key) and PR 5 (plan added to the key by hand) were exactly
+this class; this rule makes the invariant mechanical.
+
+Wiring: the builder def carries ``# tao: step-builder[label]`` (with an
+optional ``ignore=a,b`` list for parameters that are deliberately
+key-free, e.g. the cached-entry callables threaded through for warmup);
+the line holding the key tuple carries ``# tao: step-key[label]``.  For
+each label the rule collects what the builder *reads* — maximal
+``self.*`` attribute chains in Load context that are not themselves the
+callee of a call, plus any referenced parameter — and requires each read
+to appear in the key tuple, where a key element satisfies a read if it
+is the read itself or a prefix of it (keying ``self.cfg`` covers
+``self.cfg.d_model``: the whole config hashes in).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, List, Optional, Set, Tuple
+
+from .core import Analysis, Finding, SourceFile, attr_chain, register_rule
+
+
+def _outermost_load_attrs(root: ast.AST) -> List[ast.Attribute]:
+    """Heads of dotted chains (``self.a.b``, not its sub-chains) that are
+    read, not written or deleted."""
+    inner = set()
+    for node in ast.walk(root):
+        if isinstance(node, ast.Attribute) and isinstance(node.value, ast.Attribute):
+            inner.add(node.value)
+    return [
+        n for n in ast.walk(root)
+        if isinstance(n, ast.Attribute)
+        and n not in inner
+        and isinstance(n.ctx, ast.Load)
+    ]
+
+
+def _builder_reads(fn: ast.AST, ignore: Tuple[str, ...]) -> Set[str]:
+    """Everything a builder closure reads that must therefore be keyed."""
+    call_funcs = {
+        node.func for node in ast.walk(fn) if isinstance(node, ast.Call)
+    }
+    reads: Set[str] = set()
+    for node in _outermost_load_attrs(fn):
+        if node in call_funcs:
+            continue  # a method being called, not a config value read
+        chain = attr_chain(node)
+        if chain and chain.startswith("self."):
+            reads.add(chain)
+
+    args = fn.args
+    params = [
+        a.arg
+        for a in (
+            list(args.posonlyargs) + list(args.args) + list(args.kwonlyargs)
+        )
+    ]
+    if args.vararg:
+        params.append(args.vararg.arg)
+    if args.kwarg:
+        params.append(args.kwarg.arg)
+    wanted = {p for p in params if p != "self" and p not in ignore}
+    if wanted:
+        referenced = {
+            n.id for n in ast.walk(fn)
+            if isinstance(n, ast.Name) and isinstance(n.ctx, ast.Load)
+        }
+        reads.update(wanted & referenced)
+    return reads
+
+
+def _key_elements(sf: SourceFile, line: int) -> Optional[List[str]]:
+    """Unparsed elements of the key tuple on a ``step-key`` line: the
+    outermost Tuple inside the statement covering that line."""
+    stmt = sf.statement_at(line)
+    if stmt is None:
+        return None
+    for node in ast.walk(stmt):  # walk is breadth-first: outermost first
+        if isinstance(node, ast.Tuple):
+            return [ast.unparse(e) for e in node.elts]
+    return None
+
+
+def _satisfied(read: str, keys: List[str]) -> bool:
+    return any(read == k or read.startswith(k + ".") for k in keys)
+
+
+@register_rule(
+    "TAO003",
+    "step-cache key tuple omits a value the step-builder closure reads "
+    "(stale-cache hazard)",
+)
+def check_cache_keys(sf: SourceFile, analysis: Analysis) -> Iterator[Finding]:
+    builders: Dict[str, List] = {}
+    for fi in sf.funcs.values():
+        if fi.builder is not None:
+            builders.setdefault(fi.builder.label, []).append(fi)
+
+    keys_by_label: Dict[str, List] = {}
+    for plist in sf.pragmas.values():
+        for p in plist:
+            if p.kind == "step-key":
+                keys_by_label.setdefault(p.label, []).append(p)
+
+    for label, fis in sorted(builders.items()):
+        key_pragmas = keys_by_label.pop(label, [])
+        if not key_pragmas:
+            for fi in fis:
+                yield Finding(
+                    sf.display, fi.node.lineno, fi.node.col_offset, "TAO003",
+                    f"step-builder[{label}] has no matching "
+                    f"`# tao: step-key[{label}]` line in this module",
+                )
+            continue
+        elements: List[str] = []
+        for p in key_pragmas:
+            elts = _key_elements(sf, p.line)
+            if elts is None:
+                yield Finding(
+                    sf.display, p.line, 0, "TAO003",
+                    f"step-key[{label}] line holds no tuple literal to "
+                    "check against",
+                )
+            else:
+                elements.extend(elts)
+        if not elements:
+            continue
+        for fi in fis:
+            for read in sorted(_builder_reads(fi.node, fi.builder.ignore)):
+                if not _satisfied(read, elements):
+                    yield Finding(
+                        sf.display, fi.node.lineno, fi.node.col_offset,
+                        "TAO003",
+                        f"step-builder[{label}] `{fi.qualname}` reads "
+                        f"`{read}` but the step-key tuple does not include "
+                        "it — two configs differing only there would share "
+                        "a compiled step",
+                    )
+
+    for label, plist in sorted(keys_by_label.items()):
+        for p in plist:
+            yield Finding(
+                sf.display, p.line, 0, "TAO003",
+                f"step-key[{label}] has no matching "
+                f"`# tao: step-builder[{label}]` def in this module",
+            )

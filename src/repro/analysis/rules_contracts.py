@@ -1,0 +1,357 @@
+"""TAO004 (MetricSpec contract) and TAO007 (wire-contract drift).
+
+**TAO004** — the engine enforces the MetricSpec contract at runtime
+(``engine/runner.py``: finalize-key collisions, reserved
+``SimulationResult`` attrs, the reserved ``__grid__`` carry slot), but
+only for the spec combination a given run requests.  This rule lifts the
+same checks to the registry level: every ``MetricSpec(...)`` /
+``windowed_spec(...)`` constructed anywhere in the scanned tree is
+checked against every other one, so a plug-in spec that collides with a
+built-in fails CI even if no test happens to request both.
+
+**TAO007** — ``to_dict()`` of the serve-protocol classes is parsed
+statically (dict literals, conditional subscript stores, one level of
+``**self.method()`` expansion, ``dataclasses.asdict(self)`` via the
+dataclass's own annotated fields) and diffed against the declared
+``schemas.WIRE_SCHEMAS``.  Adding a field to ``ServerStats`` without
+updating the schema registry — the silent-drift path for the JSON-lines
+protocol — is a finding on the ``to_dict`` line.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, List, Optional, Set, Tuple
+
+from .core import Analysis, Finding, SourceFile, attr_chain, register_rule
+from .schemas import WIRE_SCHEMAS
+
+# mirrors engine/runner.py (_RESERVED_RESULT_ATTRS, _GRID_KEY); the
+# analyzer keeps its own copy so the static half stays stdlib-importable
+_RESERVED_RESULT_ATTRS = frozenset(
+    ("num_instructions", "seconds", "mips", "metrics")
+)
+_GRID_KEY = "__grid__"
+
+
+# ---------------------------------------------------------------------------
+# TAO004 — MetricSpec registry contract
+# ---------------------------------------------------------------------------
+
+
+def _const_str(node: Optional[ast.AST]) -> Optional[str]:
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return node.value
+    return None
+
+
+def _returned_dict_keys(fn: ast.AST) -> Tuple[Set[str], bool]:
+    """Statically-known string keys of every dict a function returns,
+    plus a ``dynamic`` flag when any returned dict has computed keys
+    (f-strings, comprehensions) the analyzer cannot enumerate."""
+    keys: Set[str] = set()
+    dynamic = False
+    bodies: List[ast.AST] = []
+    if isinstance(fn, ast.Lambda):
+        bodies = [fn.body]
+    else:
+        bodies = [
+            n.value for n in ast.walk(fn)
+            if isinstance(n, ast.Return) and n.value is not None
+        ]
+    for body in bodies:
+        if isinstance(body, ast.Dict):
+            for k in body.keys:
+                s = _const_str(k)
+                if s is not None:
+                    keys.add(s)
+                else:
+                    dynamic = True
+        elif isinstance(body, ast.DictComp):
+            dynamic = True
+        else:
+            dynamic = True
+    return keys, dynamic
+
+
+def _spec_fact(sf: SourceFile, call: ast.Call) -> Optional[Dict]:
+    """A ``MetricSpec(...)`` or ``windowed_spec(...)`` call site as a
+    registry fact: spec name + statically-known finalize keys."""
+    fname = attr_chain(call.func) or ""
+    tail = fname.rsplit(".", 1)[-1]
+    if tail not in ("MetricSpec", "windowed_spec"):
+        return None
+
+    args: Dict[str, ast.AST] = {}
+    pos = ("name", "init", "update", "finalize", "num_chunks")
+    for i, a in enumerate(call.args):
+        if i < len(pos):
+            args[pos[i]] = a
+    for kw in call.keywords:
+        if kw.arg:
+            args[kw.arg] = kw.value
+
+    name = _const_str(args.get("name"))
+    if name is None:
+        return None  # factory internals / dynamic name: nothing to pin
+
+    if tail == "windowed_spec":
+        # the factory's finalize emits exactly {name: curve}
+        keys, dynamic = {name}, False
+    else:
+        fin = args.get("finalize")
+        keys, dynamic = set(), True
+        if isinstance(fin, ast.Lambda):
+            keys, dynamic = _returned_dict_keys(fin)
+        elif isinstance(fin, ast.Name):
+            for fi in sf.funcs.values():
+                if fi.name == fin.id and fi.parent == "":
+                    keys, dynamic = _returned_dict_keys(fi.node)
+                    break
+    return {
+        "path": sf.display,
+        "line": call.lineno,
+        "col": call.col_offset,
+        "name": name,
+        "keys": keys,
+        "dynamic": dynamic,
+    }
+
+
+@register_rule(
+    "TAO004",
+    "MetricSpec contract violation: reserved __grid__/result-attr names "
+    "or finalize-key collisions across registered specs",
+)
+def collect_metric_specs(sf: SourceFile, analysis: Analysis) -> Iterator[Finding]:
+    for node in ast.walk(sf.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        fact = _spec_fact(sf, node)
+        if fact is None:
+            continue
+        analysis.metric_specs.append(fact)
+        if fact["name"] == _GRID_KEY:
+            yield Finding(
+                sf.display, node.lineno, node.col_offset, "TAO004",
+                f"metric spec named `{_GRID_KEY}` — that carry slot is "
+                "reserved for the engine's window grid",
+            )
+        bad = fact["keys"] & _RESERVED_RESULT_ATTRS
+        if bad:
+            yield Finding(
+                sf.display, node.lineno, node.col_offset, "TAO004",
+                f"spec `{fact['name']}` finalizes reserved key(s) "
+                f"{sorted(bad)} — SimulationResult instance attributes "
+                "would shadow them",
+            )
+
+
+@register_rule(
+    "TAO004",
+    "MetricSpec finalize-key collision (cross-file)",
+    finalizer=True,
+)
+def check_spec_collisions(analysis: Analysis) -> Iterator[Finding]:
+    seen: Dict[str, Dict] = {}   # finalize key -> first fact emitting it
+    names: Dict[str, Dict] = {}  # spec name -> first fact
+    for fact in analysis.metric_specs:
+        prev = names.get(fact["name"])
+        if prev is not None and (prev["path"], prev["line"]) != (
+            fact["path"], fact["line"]
+        ):
+            yield Finding(
+                fact["path"], fact["line"], fact["col"], "TAO004",
+                f"spec name `{fact['name']}` already constructed at "
+                f"{prev['path']}:{prev['line']} — register_metric would "
+                "refuse or silently shadow it",
+            )
+        names.setdefault(fact["name"], fact)
+        for key in sorted(fact["keys"]):
+            prev = seen.get(key)
+            if prev is not None and prev["name"] != fact["name"]:
+                yield Finding(
+                    fact["path"], fact["line"], fact["col"], "TAO004",
+                    f"spec `{fact['name']}` finalizes key `{key}` also "
+                    f"emitted by spec `{prev['name']}` "
+                    f"({prev['path']}:{prev['line']}) — requesting both "
+                    "raises at runtime",
+                )
+            seen.setdefault(key, fact)
+
+
+# ---------------------------------------------------------------------------
+# TAO007 — wire-contract drift
+# ---------------------------------------------------------------------------
+
+
+def _dataclass_fields(cls: ast.ClassDef) -> Set[str]:
+    return {
+        t.target.id
+        for t in cls.body
+        if isinstance(t, ast.AnnAssign) and isinstance(t.target, ast.Name)
+    }
+
+
+def _method(cls: ast.ClassDef, name: str) -> Optional[ast.FunctionDef]:
+    for node in cls.body:
+        if isinstance(node, ast.FunctionDef) and node.name == name:
+            return node
+    return None
+
+
+def _under_if(node: ast.AST, fn: ast.AST) -> bool:
+    """Whether a statement sits under any If inside ``fn`` (conditional
+    emission -> the key is optional on the wire)."""
+    for outer in ast.walk(fn):
+        if isinstance(outer, ast.If):
+            for inner in ast.walk(outer):
+                if inner is node:
+                    return True
+    return False
+
+
+def _dict_literal_keys(
+    d: ast.Dict, cls: ast.ClassDef
+) -> Tuple[Set[str], bool]:
+    """Keys of a dict literal; ``**self.method()`` entries expand one
+    level through the class's own method."""
+    keys: Set[str] = set()
+    dynamic = False
+    for k, v in zip(d.keys, d.values):
+        if k is None:  # **expansion
+            expanded = False
+            if (
+                isinstance(v, ast.Call)
+                and attr_chain(v.func)
+                and attr_chain(v.func).startswith("self.")
+                and "." not in attr_chain(v.func)[5:]
+            ):
+                m = _method(cls, attr_chain(v.func)[5:])
+                if m is not None:
+                    sub, dyn = _returned_dict_keys(m)
+                    keys |= sub
+                    dynamic |= dyn
+                    expanded = True
+            if not expanded:
+                dynamic = True
+            continue
+        s = _const_str(k)
+        if s is not None:
+            keys.add(s)
+        else:
+            dynamic = True
+    return keys, dynamic
+
+
+def _to_dict_keys(
+    cls: ast.ClassDef, fn: ast.FunctionDef
+) -> Tuple[Set[str], Set[str], bool]:
+    """(required, optional, dynamic) key sets a ``to_dict`` emits."""
+    required: Set[str] = set()
+    optional: Set[str] = set()
+    dynamic = False
+
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Return) and isinstance(node.value, ast.Dict):
+            keys, dyn = _dict_literal_keys(node.value, cls)
+            required |= keys
+            dynamic |= dyn
+        elif isinstance(node, (ast.Assign, ast.AnnAssign)):
+            # out = {...}  |  out: Dict = {...}  |  out = dataclasses.asdict(self)
+            if isinstance(node.value, ast.Dict):
+                keys, dyn = _dict_literal_keys(node.value, cls)
+                required |= keys
+                dynamic |= dyn
+            elif (
+                isinstance(node.value, ast.Call)
+                and (attr_chain(node.value.func) or "").endswith("asdict")
+            ):
+                required |= _dataclass_fields(cls)
+            # out["k"] = v  (conditional store -> optional wire key;
+            # out[k] = ... with a computed key is a re-store, not new)
+            targets = (
+                node.targets if isinstance(node, ast.Assign) else [node.target]
+            )
+            for tgt in targets:
+                if isinstance(tgt, ast.Subscript):
+                    s = _const_str(tgt.slice)
+                    if s is None:
+                        continue
+                    if _under_if(node, fn):
+                        optional.add(s)
+                    else:
+                        required.add(s)
+    optional -= required
+    return required, optional, dynamic
+
+
+@register_rule(
+    "TAO007",
+    "wire-contract drift: to_dict() key set differs from the declared "
+    "schema in repro/analysis/schemas.py",
+)
+def check_wire_contracts(sf: SourceFile, analysis: Analysis) -> Iterator[Finding]:
+    if "tests" in sf.path.parts:
+        return
+    for node in ast.walk(sf.tree):
+        if not isinstance(node, ast.ClassDef) or node.name not in WIRE_SCHEMAS:
+            continue
+        # only the real definitions, not fixtures named alike elsewhere:
+        # the schema maps class names, so any same-named class is held to
+        # the contract — that is the point.
+        fn = _method(node, "to_dict")
+        if fn is None:
+            continue
+        analysis.wire_classes[node.name] = {"path": sf.display, "line": fn.lineno}
+        schema = WIRE_SCHEMAS[node.name]
+        required, optional, dynamic = _to_dict_keys(node, fn)
+        if dynamic:
+            yield Finding(
+                sf.display, fn.lineno, fn.col_offset, "TAO007",
+                f"{node.name}.to_dict emits keys the analyzer cannot "
+                "enumerate statically — keep the wire dict a literal",
+            )
+            continue
+        missing = schema.required - required
+        extra = required - schema.required
+        opt_missing = schema.optional - optional
+        opt_extra = optional - schema.optional
+        for label, diff in (
+            ("misses required key(s)", missing),
+            ("emits undeclared key(s)", extra),
+            ("misses optional key(s)", opt_missing),
+            ("emits undeclared optional key(s)", opt_extra),
+        ):
+            if diff:
+                yield Finding(
+                    sf.display, fn.lineno, fn.col_offset, "TAO007",
+                    f"{node.name}.to_dict {label} {sorted(diff)} vs the "
+                    "declared wire schema — update "
+                    "src/repro/analysis/schemas.py in the same change",
+                )
+
+
+@register_rule(
+    "TAO007",
+    "wire-schema class missing from the scanned tree",
+    finalizer=True,
+)
+def check_wire_coverage(analysis: Analysis) -> Iterator[Finding]:
+    for name, schema in sorted(WIRE_SCHEMAS.items()):
+        if name in analysis.wire_classes or not schema.home:
+            continue
+        # complain only when the class's home file was actually scanned —
+        # a partial scan of other files is not drift
+        home = next(
+            (
+                sf for sf in analysis.files
+                if sf.display.replace("\\", "/").endswith(schema.home)
+            ),
+            None,
+        )
+        if home is not None:
+            yield Finding(
+                home.display, 1, 0, "TAO007",
+                f"declared wire class `{name}` defines no to_dict here — "
+                "renamed without updating repro/analysis/schemas.py?",
+            )

@@ -1,0 +1,134 @@
+"""TAO002 — host synchronization inside a hot path.
+
+The engine's throughput story (PR 1-7, and the failure mode SimNet/CAPSim
+both report) rests on the hot loops being **host-sync-free**: the jitted
+step is dispatched batch after batch and the single ``jax.device_get`` at
+end of trace is the only device→host round trip.  A stray ``.item()``,
+``float()``, ``np.asarray`` or ``block_until_ready`` in that loop stalls
+the dispatch queue once per batch and the regression is invisible in unit
+tests (results stay correct — only MIPS dies).
+
+Mechanics: functions marked ``# tao: hot`` are reachability seeds (the
+cached step builders' drivers in ``engine/runner.py``, ``core/transfer.py``,
+``serve/server.py``, plus traced-side MetricSpec updates).  Reachability
+propagates through same-module calls (``foo(...)`` and ``self.foo(...)``)
+and into lexically nested defs; ``# tao: cold`` stops propagation where a
+callee is cold by design (post-sync finalization, producer-thread prep).
+Within the hot set, the five host-sync forms are flagged — unless their
+argument is an **explicit** ``jax.device_get(...)`` call, which is the
+sanctioned, visible way to cross the boundary (one obvious sync beats a
+hidden one; the runtime sanitizer enforces the same contract with
+``jax.transfer_guard``).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, List, Set
+
+from .core import (
+    Analysis,
+    Finding,
+    SourceFile,
+    attr_chain,
+    body_nodes,
+    register_rule,
+)
+
+_SYNC_METHODS = ("item", "tolist", "block_until_ready")
+_SYNC_CALLS = {
+    "float": "float()",
+    "np.asarray": "np.asarray()",
+    "numpy.asarray": "numpy.asarray()",
+}
+
+
+def _is_device_get(node: ast.AST) -> bool:
+    """True for ``jax.device_get(...)`` / ``device_get(...)`` calls — the
+    explicit sync form the rule accepts as an argument."""
+    if not isinstance(node, ast.Call):
+        return False
+    chain = attr_chain(node.func)
+    return chain in ("jax.device_get", "device_get")
+
+
+def _callees(sf: SourceFile, fi) -> Set[str]:
+    """Qualnames of same-module functions ``fi`` may call: plain-name
+    calls match any def with that simple name; ``self.x(...)`` matches
+    methods named ``x``."""
+    names: Set[str] = set()
+    for node in body_nodes(fi.node):
+        if not isinstance(node, ast.Call):
+            continue
+        fn = node.func
+        if isinstance(fn, ast.Name):
+            names.add(fn.id)
+        elif (
+            isinstance(fn, ast.Attribute)
+            and isinstance(fn.value, ast.Name)
+            and fn.value.id == "self"
+        ):
+            names.add(fn.attr)
+    out: Set[str] = set()
+    for qual, other in sf.funcs.items():
+        if other.name in names:
+            out.add(qual)
+    return out
+
+
+@register_rule(
+    "TAO002",
+    "host sync (.item/.tolist/float/np.asarray/block_until_ready) in a "
+    "function reachable from a `# tao: hot` seed",
+)
+def check_hot_path(sf: SourceFile, analysis: Analysis) -> Iterator[Finding]:
+    seeds = [q for q, fi in sf.funcs.items() if fi.hot]
+    if not seeds:
+        return
+
+    origin: Dict[str, str] = {}   # hot qualname -> seed it is reachable from
+    work: List[str] = []
+    for q in seeds:
+        origin[q] = q
+        work.append(q)
+    while work:
+        q = work.pop()
+        fi = sf.funcs[q]
+        nxt: Set[str] = _callees(sf, fi)
+        # lexically nested defs run in the hot region too
+        nxt.update(
+            other for other, o in sf.funcs.items()
+            if o.parent == q
+        )
+        for callee in nxt:
+            if callee in origin or sf.funcs[callee].cold:
+                continue
+            origin[callee] = origin[q]
+            work.append(callee)
+
+    for qual in sorted(origin):
+        fi = sf.funcs[qual]
+        via = (
+            "" if qual == origin[qual]
+            else f" (reachable from hot seed `{origin[qual]}`)"
+        )
+        for node in body_nodes(fi.node):
+            if not isinstance(node, ast.Call):
+                continue
+            fn = node.func
+            label = None
+            if isinstance(fn, ast.Attribute) and fn.attr in _SYNC_METHODS:
+                label = f".{fn.attr}()"
+            else:
+                chain = attr_chain(fn)
+                if chain in _SYNC_CALLS:
+                    label = _SYNC_CALLS[chain]
+            if label is None:
+                continue
+            if node.args and _is_device_get(node.args[0]):
+                continue  # explicit device_get: the sanctioned sync form
+            yield Finding(
+                sf.display, node.lineno, node.col_offset, "TAO002",
+                f"host sync `{label}` in hot path `{qual}`{via} — move it "
+                "past the streaming loop or make the sync explicit via "
+                "jax.device_get",
+            )

@@ -1,0 +1,147 @@
+"""TAO001 compat-bypass and TAO006 deprecated-shim rules.
+
+**TAO001** — jax API drift is shimmed in exactly one file,
+``repro/compat.py`` (PR 1 consolidated the 0.4.x..0.6+ renames there; PR 5
+removed the runner's duplicated ``shard_map`` fallback).  Any direct
+``jax.experimental`` / ``jax.sharding`` import or attribute access outside
+``compat.py`` re-opens that drift surface, so it is flagged.  The one
+allowance: ``kernels/*/kernel.py`` may import ``jax.experimental.pallas``
+(and ``...pallas.tpu``) — Pallas has no compat alias and kernel modules
+are the declared lowering boundary.
+
+**TAO006** — ``simulate_trace`` / ``train_tao`` are DeprecationWarning
+shims since PR 3.  New call sites outside the shims' own modules (and the
+tests that pin shim behavior) silently re-grow the pre-facade API.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from .core import Analysis, Finding, SourceFile, attr_chain, register_rule
+
+_BANNED_ROOTS = ("jax.experimental", "jax.sharding")
+_PALLAS_OK = ("jax.experimental.pallas",)
+
+_DEPRECATED = {
+    "simulate_trace": "TrainedModel.simulate / Session.sweep (repro.api)",
+    "train_tao": "Session.train / TrainedModel.transfer (repro.api)",
+}
+# modules that define (or lazily re-export) the shims themselves
+_SHIM_FILES = ("simulate.py", "transfer.py")
+
+
+def _banned(modname: str) -> bool:
+    return any(
+        modname == r or modname.startswith(r + ".") for r in _BANNED_ROOTS
+    )
+
+
+def _pallas_allowed(modname: str) -> bool:
+    return any(
+        modname == r or modname.startswith(r + ".") for r in _PALLAS_OK
+    )
+
+
+def _iter_compat_bypass(sf: SourceFile) -> Iterator[Finding]:
+    if sf.is_compat:
+        return
+    outer_attrs = _outermost_attrs(sf.tree)
+    for node in ast.walk(sf.tree):
+        if isinstance(node, ast.Import):
+            for alias in node.names:
+                if not _banned(alias.name):
+                    continue
+                if sf.is_kernel and _pallas_allowed(alias.name):
+                    continue
+                yield Finding(
+                    sf.display, node.lineno, node.col_offset, "TAO001",
+                    f"direct `import {alias.name}` bypasses repro.compat — "
+                    "route jax API drift through the compat shims",
+                )
+        elif isinstance(node, ast.ImportFrom):
+            mod = node.module or ""
+            if node.level or not _banned(mod):
+                continue
+            if sf.is_kernel and (
+                _pallas_allowed(mod)
+                or (mod == "jax.experimental"
+                    and all(a.name == "pallas" for a in node.names))
+            ):
+                continue
+            names = ", ".join(a.name for a in node.names)
+            yield Finding(
+                sf.display, node.lineno, node.col_offset, "TAO001",
+                f"direct `from {mod} import {names}` bypasses repro.compat — "
+                "import (or add) the shim in repro/compat.py instead",
+            )
+        elif isinstance(node, ast.Attribute) and node in outer_attrs:
+            # only the outermost node of a chain (one finding for
+            # jax.sharding.Mesh, not one per link)
+            chain = attr_chain(node)
+            if chain is not None and (
+                chain.startswith("jax.experimental")
+                or chain.startswith("jax.sharding")
+            ):
+                yield Finding(
+                    sf.display, node.lineno, node.col_offset, "TAO001",
+                    f"`{chain}` accessed directly — use repro.compat "
+                    "(one-file fix for the next jax rename)",
+                )
+
+
+def _outermost_attrs(tree: ast.AST) -> set:
+    """Attribute nodes that are not themselves the ``.value`` of an
+    enclosing Attribute (i.e. the head of each dotted chain)."""
+    inner = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Attribute) and isinstance(
+            node.value, ast.Attribute
+        ):
+            inner.add(node.value)
+    return {
+        n for n in ast.walk(tree)
+        if isinstance(n, ast.Attribute) and n not in inner
+    }
+
+
+@register_rule(
+    "TAO001",
+    "compat bypass: jax.experimental/jax.sharding outside repro/compat.py "
+    "(pallas allowed in kernels/*/kernel.py)",
+)
+def check_compat_bypass(sf: SourceFile, analysis: Analysis) -> Iterator[Finding]:
+    return _iter_compat_bypass(sf)
+
+
+@register_rule(
+    "TAO006",
+    "deprecated shim call (simulate_trace/train_tao) outside the shims "
+    "and their tests",
+)
+def check_deprecated_shims(sf: SourceFile, analysis: Analysis) -> Iterator[Finding]:
+    if sf.path.name in _SHIM_FILES or "tests" in sf.path.parts:
+        return
+    if sf.path.name == "__init__.py" and sf.path.parent.name == "core":
+        return  # the lazy re-export point (PEP 562)
+    for node in ast.walk(sf.tree):
+        if isinstance(node, ast.Call):
+            fn = node.func
+            name = (
+                fn.id if isinstance(fn, ast.Name)
+                else fn.attr if isinstance(fn, ast.Attribute)
+                else None
+            )
+            if name in _DEPRECATED:
+                yield Finding(
+                    sf.display, node.lineno, node.col_offset, "TAO006",
+                    f"deprecated shim `{name}()` — use {_DEPRECATED[name]}",
+                )
+        elif isinstance(node, ast.ImportFrom):
+            for alias in node.names:
+                if alias.name in _DEPRECATED:
+                    yield Finding(
+                        sf.display, node.lineno, node.col_offset, "TAO006",
+                        f"importing deprecated shim `{alias.name}` — use "
+                        f"{_DEPRECATED[alias.name]}",
+                    )

@@ -1,0 +1,88 @@
+"""Runtime sanitizer: the dynamic half of ``repro.analysis``.
+
+TAO002/TAO003 catch host syncs and stale cache keys *statically*; this
+module enforces the same invariants at runtime for the tests that opt in
+(pytest marker ``sanitize``, wired in ``tests/conftest.py``):
+
+  * ``jax.transfer_guard_device_to_host("disallow")`` — any implicit
+    device→host transfer (a hidden ``float()``/``np.asarray`` on a
+    device array) raises instead of silently stalling the dispatch
+    queue.  Explicit ``jax.device_get`` — the sanctioned end-of-trace
+    sync — stays allowed, exactly mirroring TAO002's exemption.
+    **CPU-backend caveat**: CPU jax arrays alias host memory, so the
+    pull is zero-copy and no guardable transfer event exists — the guard
+    arms but cannot fire (and the full two-direction guard is unusable:
+    it flags every eager ``jnp.zeros`` constant as host→device).  On CPU
+    CI the teeth of a sanitized block are therefore ``debug_nans`` and
+    the compile budget; the transfer guard bites on accelerator
+    backends, where the stall it polices is also the one that matters.
+  * ``jax.debug_nans`` — jitted computations re-run un-jitted on a NaN
+    output and raise at the producing primitive.
+  * **compile budget** — snapshots the process-wide step-cache compile
+    counters (``repro.engine.runner.cache_stats()['compiles']`` and
+    ``repro.train.trainer.train_step_compiles()``) on entry and raises
+    ``CompileBudgetExceeded`` if the block compiled more than allowed:
+    the one-compile-per-geometry invariant as a hard runtime check.
+
+jax (and the engine/train modules) import lazily so the static analyzer —
+which shares this package — stays importable in CI's jax-less lint job.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Iterator, Optional
+
+__all__ = ["CompileBudgetExceeded", "compiles_now", "sanitized"]
+
+
+class CompileBudgetExceeded(AssertionError):
+    """A sanitized block compiled more step executables than budgeted."""
+
+
+def compiles_now() -> int:
+    """Total step compiles so far, engine + trainer, process-wide."""
+    from ..engine import runner as _runner
+    from ..train import trainer as _trainer
+
+    return int(_runner.cache_stats()["compiles"]) + int(
+        _trainer.train_step_compiles()
+    )
+
+
+@contextlib.contextmanager
+def sanitized(
+    *,
+    transfer_guard: Optional[str] = "disallow",
+    debug_nans: bool = True,
+    compile_budget: Optional[int] = None,
+) -> Iterator[None]:
+    """Run a block with the repo's runtime invariants hard-enforced.
+
+    ``transfer_guard`` guards **implicit device→host** transfers only
+    (explicit ``jax.device_get`` always passes; see the module note for
+    the CPU-backend caveat).  Pass ``None`` to leave transfers alone,
+    e.g. for code paths that legitimately sync mid-stream.
+
+    ``compile_budget`` bounds *new* step compiles inside the block
+    (``None`` = unbounded; ``0`` = the warm-cache contract: everything
+    was compiled before the block started).
+    """
+    import jax
+
+    start = compiles_now() if compile_budget is not None else 0
+    with contextlib.ExitStack() as stack:
+        if transfer_guard is not None:
+            stack.enter_context(
+                jax.transfer_guard_device_to_host(transfer_guard)
+            )
+        if debug_nans:
+            stack.enter_context(jax.debug_nans(True))
+        yield
+    if compile_budget is not None:
+        spent = compiles_now() - start
+        if spent > compile_budget:
+            raise CompileBudgetExceeded(
+                f"sanitized block compiled {spent} step(s), budget was "
+                f"{compile_budget} — a cache key miss or geometry change "
+                "slipped into the hot path"
+            )

@@ -19,10 +19,12 @@ import os
 import queue
 import shutil
 import threading
-from typing import Any, Dict, Optional
+from typing import Dict, Optional
 
 import jax
 import numpy as np
+
+from ..compat import SingleDeviceSharding
 
 __all__ = [
     "save_pytree",
@@ -101,7 +103,7 @@ def restore_pytree(template, directory: str):
             arr = np.frombuffer(f.read(), dtype=dtype).reshape(rec["shape"]).copy()
         sharding = getattr(leaf, "sharding", None)
         if sharding is not None and not isinstance(
-            sharding, jax.sharding.SingleDeviceSharding
+            sharding, SingleDeviceSharding
         ):
             leaves.append(jax.device_put(arr, sharding))
         else:

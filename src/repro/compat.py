@@ -8,6 +8,10 @@ from __future__ import annotations
 import jax
 
 __all__ = [
+    "Mesh",
+    "NamedSharding",
+    "PartitionSpec",
+    "SingleDeviceSharding",
     "shard_map",
     "make_mesh",
     "activate_mesh",
@@ -16,6 +20,15 @@ __all__ = [
     "enable_compilation_cache_flags",
     "register_monitoring_listener",
 ]
+
+# The sharding types the rest of the repo may name.  They have moved once
+# already (jax.experimental.maps/pjit era -> jax.sharding); importing them
+# from here keeps the next move a one-file fix.  repro.analysis TAO001
+# flags any direct jax.sharding/jax.experimental use outside this module.
+Mesh = jax.sharding.Mesh
+NamedSharding = jax.sharding.NamedSharding
+PartitionSpec = jax.sharding.PartitionSpec
+SingleDeviceSharding = jax.sharding.SingleDeviceSharding
 
 
 def on_tpu() -> bool:

@@ -6,7 +6,7 @@ Usage: ``get_arch("qwen2-0.5b")`` -> ArchConfig;
 from __future__ import annotations
 
 import importlib
-from typing import Dict, List
+from typing import List
 
 from ..models.config import ArchConfig
 

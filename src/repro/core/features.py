@@ -187,6 +187,7 @@ SIGNED_LOG_COEFFS = tuple(
 SIGNED_LOG_SQRT2 = np.float32(math.sqrt(2.0))
 
 
+# tao: bitwise
 def signed_log(d: np.ndarray) -> np.ndarray:
     """Signed-log-compress deltas to float32, bit-reproducibly (see above)."""
     d = np.asarray(d).astype(np.float32)

@@ -19,12 +19,12 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Dict, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp
 
-from ..train.optim import AdamWConfig, AdamWState, adamw_init, adamw_update
+from ..train.optim import AdamWConfig, AdamWState, adamw_update
 from ..train.trainer import cached_train_step
 from .model import TaoConfig, apply_adapt, apply_embed, apply_pred, multi_metric_loss
 
@@ -90,12 +90,13 @@ def make_joint_step(cfg: TaoConfig, opt_cfg: AdamWConfig, method: str = "tao"):
     """
     if method not in METHODS:
         raise ValueError(f"method {method!r} not in {METHODS}")
-    return cached_train_step(
+    return cached_train_step(  # tao: step-key[joint-step]
         ("joint", cfg, opt_cfg, method),
         lambda entry: _build_joint_step(cfg, opt_cfg, method, entry),
     ).fn
 
 
+# tao: step-builder[joint-step] ignore=entry
 def _build_joint_step(cfg: TaoConfig, opt_cfg: AdamWConfig, method: str, entry):
     use_adapt = method in ("tao", "gradnorm")  # gradnorm baseline keeps its
     # own adaptation-free design in the paper; give it the same capacity but

@@ -7,7 +7,7 @@ are provided as the Fig. 14 baselines.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Sequence, Tuple
+from typing import List, Sequence, Tuple
 
 import numpy as np
 

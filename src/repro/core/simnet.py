@@ -20,7 +20,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..nn.core import dense, gelu, init_dense
-from ..train.optim import AdamWConfig, adamw_init, adamw_update
+from ..train.optim import AdamWConfig, adamw_update
 
 __all__ = ["SimNetConfig", "init_simnet", "simnet_forward", "simnet_features", "make_simnet_step"]
 

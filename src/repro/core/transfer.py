@@ -48,6 +48,7 @@ class TrainResult:
     steps: int
 
 
+# tao: step-builder[train-step]
 def _make_step(cfg: TaoConfig, opt_cfg: AdamWConfig, trainable: str, plan=None):
     """trainable: 'all' or 'headonly' (freeze shared embeddings).
 
@@ -95,7 +96,9 @@ def _make_step(cfg: TaoConfig, opt_cfg: AdamWConfig, trainable: str, plan=None):
 
     # the entry itself is callable (dispatching its AOT executable when
     # warmup_train_step has compiled one), so callers use it like the fn
-    return cached_train_step(("tao", cfg, opt_cfg, trainable, plan), build)
+    return cached_train_step(  # tao: step-key[train-step]
+        ("tao", cfg, opt_cfg, trainable, plan), build
+    )
 
 
 def warmup_train_step(
@@ -166,6 +169,7 @@ def warmup_train_step(
     return entry
 
 
+# tao: hot
 def _run_epochs(
     params,
     step,
@@ -197,8 +201,9 @@ def _run_epochs(
     losses, evals = [], []
     steps = 0
     put = plan.device_put if plan is not None and plan.sharded else None
-    for ep in range(epochs):
-        ep_loss, nb = 0.0, 0
+    for _ep in range(epochs):
+        nb = 0
+        ep_losses: list = []
         batches = dataset.batches(batch_size, rng=rng)
         if prefetch:
             # double-buffered host→device transfer (and, on accelerator
@@ -209,13 +214,22 @@ def _run_epochs(
             batches = (put(b) for b in batches)
         for batch in batches:
             params, opt, loss = step(params, opt, batch)
-            ep_loss += float(loss)
+            # keep the device scalar: a float() here would sync the
+            # dispatch queue once per step and serialize the prefetch
+            ep_losses.append(loss)
             nb += 1
             steps += 1
+        # one explicit sync per epoch; summing the host scalars in step
+        # order keeps the loss trajectory bit-identical to the old
+        # per-step accumulation
+        ep_losses = jax.device_get(ep_losses)
+        ep_loss = 0.0
+        for x in ep_losses:
+            ep_loss += float(x)  # tao: noqa[TAO002] host numpy scalar from the per-epoch device_get above, not a device sync
         ep_loss /= max(nb, 1)
         losses.append(ep_loss)
         if eval_fn is not None:
-            evals.append(float(eval_fn(params)))
+            evals.append(float(jax.device_get(eval_fn(params))))
         if target_loss is not None and ep_loss <= target_loss:
             break
     return params, losses, evals, steps

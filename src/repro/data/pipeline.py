@@ -13,7 +13,7 @@ same counter-based determinism.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterator, Optional, Tuple
+from typing import Dict, Iterator, Tuple
 
 import jax
 import numpy as np

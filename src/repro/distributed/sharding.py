@@ -17,7 +17,8 @@ import threading
 from typing import Dict, Optional, Sequence, Tuple, Union
 
 import jax
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..compat import Mesh, NamedSharding, PartitionSpec as P
 
 __all__ = [
     "LOGICAL_RULES",

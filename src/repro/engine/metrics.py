@@ -103,6 +103,7 @@ class StepContext:
                             # each local row (>= num_windows on padding rows)
     num_windows: Any = None  # int32 scalar: real windows in the whole trace
 
+    # tao: hot
     def at_last(self, x) -> Any:
         """Value of ``x`` at the globally-last valid position of the batch
         (meaningful only when ``last_key >= 0``)."""
@@ -131,6 +132,7 @@ class StepContext:
         b = (self.win_index * num_chunks) // jnp.maximum(self.num_windows, 1)
         return jnp.clip(b, 0, num_chunks - 1)
 
+    # tao: hot
     def windowed_sum(self, values, num_chunks: int) -> Any:
         """Scatter already-masked per-position ``values`` (``(B_local*W,)``;
         multiply by ``ctx.valid`` / ``ctx.on`` first) into a
@@ -183,6 +185,7 @@ def _cpi_init():
     }
 
 
+# tao: hot
 def _cpi_update(carry, ctx: StepContext):
     part = ctx.psum((ctx.fetch_lat * ctx.valid).sum(dtype=jnp.float32))
     return {
@@ -195,6 +198,7 @@ def _cpi_update(carry, ctx: StepContext):
     }
 
 
+# tao: cold
 def _cpi_finalize(carry, n: int) -> Dict[str, float]:
     total = float(carry["fetch_sum"] + carry["last_exec"])
     return {"cpi": total / max(n, 1), "total_cycles": total}
@@ -208,12 +212,14 @@ def _int_count_init():
     return jnp.zeros((), jnp.int32)
 
 
+# tao: hot
 def _branch_update(carry, ctx: StepContext):
     return carry + ctx.psum(
         ((ctx.mispred_prob > 0.5) & ctx.is_branch).sum(dtype=jnp.int32)
     )
 
 
+# tao: cold
 def _branch_finalize(carry, n: int) -> Dict[str, float]:
     return {"branch_mpki": 1000.0 * float(carry) / max(n, 1)}
 
@@ -221,12 +227,14 @@ def _branch_finalize(carry, n: int) -> Dict[str, float]:
 BRANCH_MPKI = MetricSpec("branch_mpki", _int_count_init, _branch_update, _branch_finalize)
 
 
+# tao: hot
 def _l1d_update(carry, ctx: StepContext):
     return carry + ctx.psum(
         ((ctx.dlevel >= DLEVEL_L2) & ctx.is_mem).sum(dtype=jnp.int32)
     )
 
 
+# tao: cold
 def _l1d_finalize(carry, n: int) -> Dict[str, float]:
     return {"l1d_mpki": 1000.0 * float(carry) / max(n, 1)}
 
@@ -240,6 +248,7 @@ def _dlevel_hist_init():
     return jnp.zeros((NUM_DLEVELS,), jnp.int32)
 
 
+# tao: hot
 def _dlevel_hist_update(carry, ctx: StepContext):
     onehot = jax.nn.one_hot(ctx.dlevel, NUM_DLEVELS, dtype=jnp.int32)
     return carry + ctx.psum(
@@ -250,6 +259,7 @@ def _dlevel_hist_update(carry, ctx: StepContext):
 _DLEVEL_NAMES = ("none", "l1", "l2", "dram")
 
 
+# tao: cold
 def _dlevel_hist_finalize(carry, n: int) -> Dict[str, float]:
     return {
         f"dlevel_{_DLEVEL_NAMES[i]}": float(carry[i]) for i in range(NUM_DLEVELS)
@@ -300,6 +310,7 @@ def windowed_spec(
             "count": jnp.zeros((num_chunks,), jnp.int32),
         }
 
+    # tao: hot
     def update(carry, ctx: "StepContext"):
         vals = value(ctx).astype(jnp.float32) * ctx.valid
         pop = ctx.on if count is None else count(ctx)
@@ -309,6 +320,7 @@ def windowed_spec(
             + ctx.windowed_sum(pop.astype(jnp.int32), num_chunks),
         }
 
+    # tao: cold
     def finalize(carry, n: int) -> Dict[str, Any]:
         cnt = np.asarray(carry["count"], dtype=np.int64)
         curve = np.asarray(carry["sum"], dtype=np.float32) / np.maximum(cnt, 1)

@@ -34,9 +34,7 @@ from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-
-from ..compat import shard_map
+from ..compat import Mesh, NamedSharding, PartitionSpec as P, shard_map
 from ..distributed.sharding import logical_to_spec
 
 __all__ = ["AxisContext", "ExecutionPlan"]

@@ -50,8 +50,7 @@ from typing import Dict, Iterator, Optional, Tuple, Union
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, PartitionSpec as P
-
+from ..compat import Mesh, PartitionSpec as P
 from ..core.dataset import INPUT_KEYS, num_windows, stream_batches
 from ..core.features import FeatureSet, extract_features
 from ..core.model import TaoConfig, tao_forward
@@ -460,6 +459,7 @@ class StreamingEngine:
 
     # ---- jitted step ---------------------------------------------------
 
+    # tao: step-builder[engine-step] ignore=entry
     def _build_step(self, w_eff: int, entry: _CachedStep):
         cfg = self.cfg
         collect = self.ecfg.collect
@@ -557,7 +557,7 @@ class StreamingEngine:
             # resolved plan (not the raw mesh) is the partitioning key, so
             # EngineConfig(mesh=m) and EngineConfig(plan=resolve(m)) also
             # share one.
-            key = (
+            key = (  # tao: step-key[engine-step]
                 self.cfg,
                 self.ecfg.batch_size,
                 self.ecfg.collect,
@@ -709,6 +709,7 @@ class StreamingEngine:
             # needs them re-laid-out across its batch axes
             yield self.plan.device_put(batch) if self.plan.sharded else batch
 
+    # tao: hot
     def simulate(
         self,
         func_trace: np.ndarray,
@@ -801,10 +802,11 @@ class StreamingEngine:
             k: None for k in PER_INSTRUCTION_KEYS
         }
         if self.ecfg.collect and pers:
+            # one explicit sync for every batch's arrays (was a hidden
+            # np.asarray device->host pull per batch per key)
+            pers = jax.device_get(pers)
             for k in arrays:
-                arrays[k] = np.concatenate(
-                    [np.asarray(p[k]) for p in pers]
-                )[:count]
+                arrays[k] = np.concatenate([p[k] for p in pers])[:count]
 
         return SimulationResult(
             num_instructions=count,

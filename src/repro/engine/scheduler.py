@@ -174,6 +174,9 @@ class TraceSweeper:
         }
 
     # host-side preparation that the producer thread runs ahead of the device
+    # producer-thread / inline feature prep: host NumPy on the raw trace,
+    # runs before the trace's first dispatch
+    # tao: cold
     def _prepare(
         self,
         job: SweepJob,
@@ -217,6 +220,7 @@ class TraceSweeper:
         cache[dg] = fs
         return fs
 
+    # tao: hot
     def run(self, jobs: Iterable[SweepJob]) -> SweepReport:
         jobs = list(jobs)
         if not jobs:
@@ -326,7 +330,7 @@ class TraceSweeper:
             ),
             traces_per_s=len(jobs) / secs,
             mips=n_instr / 1e6 / secs,
-            queue_occupancy_mean=float(np.mean(occ)) if occ else 0.0,
+            queue_occupancy_mean=float(np.mean(occ)) if occ else 0.0,  # tao: noqa[TAO002] occ is a host list of queue depths; runs once after the sweep loop
             queue_occupancy_max=int(np.max(occ)) if occ else 0,
             queue_depth=self.depth,
             prepared_async=self.async_prepare,

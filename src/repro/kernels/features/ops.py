@@ -55,6 +55,7 @@ ADDR_EXACT_LIMIT = 2**30
 DEFAULT_CHUNK = 512
 
 
+# tao: bitwise
 def signed_log_device(d: jnp.ndarray) -> jnp.ndarray:
     """Bit-exact jax twin of ``core.features.signed_log``.
 

@@ -26,7 +26,6 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 
 import argparse
 import json
-import re
 import time
 import traceback
 from typing import Dict, Optional, Tuple
@@ -35,6 +34,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..compat import NamedSharding, PartitionSpec
 from ..configs import ARCH_IDS, get_arch
 from ..data.pipeline import make_lm_batch_specs
 from ..distributed.sharding import logical_to_spec, mesh_context, tree_shardings
@@ -164,8 +164,8 @@ def lower_cell(arch: str, shape: str, mesh, *, microbatches: int = 0,
             cache_sh = _shardings_for(c_axes, cache_sds, mesh)
             tok_sds = jax.ShapeDtypeStruct((B,), jnp.int32)
             pos_sds = jax.ShapeDtypeStruct((), jnp.int32)
-            rep = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
-            tok_sh = jax.sharding.NamedSharding(
+            rep = NamedSharding(mesh, PartitionSpec())
+            tok_sh = NamedSharding(
                 mesh,
                 logical_to_spec(("batch",), shape=(B,), mesh=mesh),
             )

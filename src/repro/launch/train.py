@@ -18,14 +18,13 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from ..ckpt import CheckpointManager
 from ..configs import get_arch
 from ..data.pipeline import LMDataPipeline
 from ..distributed.sharding import mesh_context
 from ..models.backbone import Model
-from ..train.trainer import TrainConfig, TrainState, init_state, make_train_step
+from ..train.trainer import TrainConfig, init_state, make_train_step
 from .mesh import make_mesh
 
 

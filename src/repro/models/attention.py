@@ -413,7 +413,6 @@ def _sharded_seq_write(old: jnp.ndarray, rows: jnp.ndarray, pos) -> jnp.ndarray:
     if mesh is None or "model" not in mesh.shape or old.shape[2] % mesh.shape["model"]:
         return local_update(old, rows, jnp.int32(0))
 
-    from jax.sharding import PartitionSpec as P
 
     cache_spec = logical_to_spec(
         ("stack", "cache_batch", "cache_seq") + trail, old.shape, mesh

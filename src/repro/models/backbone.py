@@ -14,9 +14,8 @@ activation working set is one layer deep.
 from __future__ import annotations
 
 import dataclasses
-import functools
 import math
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -6,7 +6,7 @@ all three position streams coincide, which reduces exactly to RoPE.
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax.numpy as jnp
 

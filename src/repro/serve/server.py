@@ -263,6 +263,7 @@ class TraceServer:
 
     # ---- admission -------------------------------------------------------
 
+    # tao: hot
     def submit(self, req: ServeRequest) -> "asyncio.Future":
         """Admit one request (event-loop thread only).  Returns a future
         resolving to a ``ServeResult``; raises ``ServeError`` — QUEUE_FULL
@@ -282,7 +283,7 @@ class TraceServer:
             )
         model = self.registry.resolve(req.model)     # UNKNOWN_MODEL
         trace = req.trace
-        arr = trace.functional if hasattr(trace, "functional") else np.asarray(trace)
+        arr = trace.functional if hasattr(trace, "functional") else np.asarray(trace)  # tao: noqa[TAO002] admission-time view of the tenant's host trace array, no device data exists yet
         n = len(arr)
         if n < 1:
             raise ServeError(
@@ -380,6 +381,8 @@ class TraceServer:
             self._feat_cache.popitem(last=False)
         return ent
 
+    # feature-pool thread: host NumPy pre-pass before any device work
+    # tao: cold
     def _extract_sync(self, arr: np.ndarray, digest: str, cfg):
         """Runs on the extract pool: store lookup, else extract + publish
         (the identical key scheme as TraceSweeper / TrainedModel, so the
@@ -474,6 +477,7 @@ class TraceServer:
         if not p.future.done():
             p.future.set_exception(err)
 
+    # tao: hot
     async def _run(self) -> None:
         while True:
             p = self._next()

@@ -17,7 +17,7 @@ from __future__ import annotations
 
 import base64
 import dataclasses
-from typing import Any, Dict, Optional, Tuple, Union
+from typing import Any, Dict, Optional, Tuple
 
 import numpy as np
 

@@ -2,7 +2,6 @@
 from __future__ import annotations
 
 import dataclasses
-import itertools
 from typing import Dict, List
 
 import numpy as np

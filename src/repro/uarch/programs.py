@@ -18,7 +18,7 @@ r16-r25 data pointers/values, r26-r31 constants.
 """
 from __future__ import annotations
 
-from typing import Callable, Dict, List
+from typing import Callable, Dict
 
 import numpy as np
 

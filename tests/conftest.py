@@ -6,12 +6,28 @@ os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-import numpy as np
 import pytest
 
-from repro.uarch import UARCH_A, UARCH_B, get_benchmark, run_detailed, run_functional
+from repro.uarch import UARCH_A, get_benchmark, run_detailed, run_functional
 
 TRACE_LEN = 6000
+
+
+@pytest.fixture(autouse=True)
+def _sanitize_marker(request):
+    """Tests marked ``@pytest.mark.sanitize`` run with the repo's runtime
+    invariants hard-enforced: implicit device->host transfers raise
+    (explicit jax.device_get stays allowed) and NaNs fail at the producing
+    primitive.  Marker kwargs pass through to ``sanitized`` — e.g.
+    ``@pytest.mark.sanitize(compile_budget=0)`` for warm-cache tests."""
+    marker = request.node.get_closest_marker("sanitize")
+    if marker is None:
+        yield
+        return
+    from repro.analysis.sanitize import sanitized
+
+    with sanitized(**marker.kwargs):
+        yield
 
 
 @pytest.fixture(scope="session")

@@ -1,0 +1,616 @@
+"""`repro.analysis` — fixture tests for every rule code plus the
+suppression grammar and the runtime sanitizer plumbing.
+
+Each rule gets at least one positive fixture (the bug class it encodes,
+reduced to a few lines) and one negative fixture (the sanctioned idiom it
+must NOT flag).  Fixtures are written to tmp_path and run through the real
+driver, so pragma parsing, def-table construction, suppression handling
+and the finalizers are all exercised end to end.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import RULES, WIRE_SCHEMAS, run_paths
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+def _run(tmp_path, files, select=None):
+    for rel, text in files.items():
+        p = tmp_path / rel
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(textwrap.dedent(text))
+    return run_paths([str(tmp_path)], select=select)
+
+
+def _codes(res):
+    return [f.code for f in res["findings"]]
+
+
+def _clean(res):
+    assert res["findings"] == [], [f.format() for f in res["findings"]]
+
+
+# ---------------------------------------------------------------------------
+# TAO001 — compat bypass
+# ---------------------------------------------------------------------------
+
+
+def test_tao001_direct_import_flagged(tmp_path):
+    res = _run(tmp_path, {"mod.py": "import jax.sharding\n"})
+    assert _codes(res) == ["TAO001"]
+    assert "repro.compat" in res["findings"][0].message
+
+
+def test_tao001_from_import_and_attribute_flagged(tmp_path):
+    res = _run(
+        tmp_path,
+        {
+            "mod.py": """\
+            from jax.experimental import pallas
+            import jax
+
+            def f(mesh):
+                return jax.sharding.NamedSharding(mesh, None)
+            """
+        },
+    )
+    assert _codes(res) == ["TAO001", "TAO001"]
+    # one finding per dotted chain, not one per attribute link
+    assert sum("jax.sharding.NamedSharding" in f.message for f in res["findings"]) == 1
+
+
+def test_tao001_pallas_allowed_only_in_kernel_modules(tmp_path):
+    src = "from jax.experimental import pallas as pl\n"
+    res = _run(
+        tmp_path,
+        {
+            "kernels/attention/kernel.py": src,  # declared lowering boundary
+            "kernels/attention/ops.py": src,     # not a kernel module
+        },
+    )
+    assert [(f.code, Path(f.path).name) for f in res["findings"]] == [
+        ("TAO001", "ops.py")
+    ]
+
+
+def test_tao001_compat_itself_exempt(tmp_path):
+    res = _run(tmp_path, {"compat.py": "import jax.experimental.pallas\n"})
+    _clean(res)
+
+
+# ---------------------------------------------------------------------------
+# TAO002 — host sync in hot path
+# ---------------------------------------------------------------------------
+
+
+def test_tao002_sync_in_hot_seed_flagged(tmp_path):
+    res = _run(
+        tmp_path,
+        {
+            "mod.py": """\
+            # tao: hot
+            def run(xs):
+                total = 0.0
+                for x in xs:
+                    total += float(x)
+                return total
+            """
+        },
+    )
+    assert _codes(res) == ["TAO002"]
+    assert "float()" in res["findings"][0].message
+
+
+def test_tao002_reaches_callees_and_nested_defs(tmp_path):
+    res = _run(
+        tmp_path,
+        {
+            "mod.py": """\
+            # tao: hot
+            def run(xs):
+                def inner(x):
+                    return x.tolist()
+                return [collect(inner(x)) for x in xs]
+
+            def collect(x):
+                return x.item()
+            """
+        },
+    )
+    msgs = sorted(f.message for f in res["findings"])
+    assert _codes(res) == ["TAO002", "TAO002"]
+    assert any("`.item()`" in m and "reachable from hot seed `run`" in m for m in msgs)
+    assert any("`.tolist()`" in m and "run.inner" in m for m in msgs)
+
+
+def test_tao002_explicit_device_get_sanctioned(tmp_path):
+    res = _run(
+        tmp_path,
+        {
+            "mod.py": """\
+            import jax
+
+            # tao: hot
+            def run(xs):
+                out = step(xs)
+                return float(jax.device_get(out))
+
+            def step(xs):
+                return xs
+            """
+        },
+    )
+    _clean(res)
+
+
+def test_tao002_cold_stops_propagation(tmp_path):
+    res = _run(
+        tmp_path,
+        {
+            "mod.py": """\
+            # tao: hot
+            def run(xs):
+                return finalize(xs)
+
+            # post-sync epilogue, runs once per trace
+            # tao: cold
+            def finalize(xs):
+                return [x.item() for x in xs]
+            """
+        },
+    )
+    _clean(res)
+
+
+# ---------------------------------------------------------------------------
+# TAO003 — step-cache-key completeness
+# ---------------------------------------------------------------------------
+
+_BUILDER = """\
+class Runner:
+    # tao: step-builder[step] ignore=entry
+    def _build(self, entry, batch):
+        return self.cfg.d_model + self.backend + batch
+
+    def _get(self, batch):
+        key = (  # tao: step-key[step]
+            {key}
+        )
+        return key
+"""
+
+
+def test_tao003_missing_key_member_flagged(tmp_path):
+    res = _run(
+        tmp_path, {"mod.py": _BUILDER.format(key='"tag", self.cfg, batch,')}
+    )
+    assert _codes(res) == ["TAO003"]
+    assert "`self.backend`" in res["findings"][0].message
+
+
+def test_tao003_prefix_key_covers_deep_read(tmp_path):
+    # keying self.cfg covers self.cfg.d_model: the whole config hashes in
+    res = _run(
+        tmp_path,
+        {"mod.py": _BUILDER.format(key='"tag", self.cfg, self.backend, batch,')},
+    )
+    _clean(res)
+
+
+def test_tao003_unpaired_pragmas_flagged(tmp_path):
+    res = _run(
+        tmp_path,
+        {
+            "mod.py": """\
+            class Runner:
+                # tao: step-builder[orphan-builder]
+                def _build(self):
+                    return self.cfg
+
+                def _get(self):
+                    return (  # tao: step-key[orphan-key]
+                        "tag", self.cfg,
+                    )
+            """
+        },
+    )
+    msgs = " | ".join(f.message for f in res["findings"])
+    assert _codes(res) == ["TAO003", "TAO003"]
+    assert "orphan-builder" in msgs and "orphan-key" in msgs
+
+
+# ---------------------------------------------------------------------------
+# TAO004 — MetricSpec registry contract
+# ---------------------------------------------------------------------------
+
+
+def test_tao004_reserved_names_flagged(tmp_path):
+    res = _run(
+        tmp_path,
+        {
+            "mod.py": """\
+            from repro.engine.metrics import MetricSpec
+
+            GRID = MetricSpec("__grid__", None, None, lambda s: {"g": s})
+            BAD = MetricSpec("x", None, None, lambda s: {"mips": s})
+            """
+        },
+    )
+    msgs = sorted(f.message for f in res["findings"])
+    assert _codes(res) == ["TAO004", "TAO004"]
+    assert any("__grid__" in m for m in msgs)
+    assert any("reserved key(s) ['mips']" in m for m in msgs)
+
+
+def test_tao004_cross_file_finalize_collision(tmp_path):
+    res = _run(
+        tmp_path,
+        {
+            "a.py": 'SPEC_A = MetricSpec("a", None, None, lambda s: {"curve": s})\n',
+            "b.py": 'SPEC_B = MetricSpec("b", None, None, lambda s: {"curve": s})\n',
+        },
+    )
+    assert _codes(res) == ["TAO004"]
+    assert "finalizes key `curve` also emitted by spec `a`" in res["findings"][0].message
+
+
+def test_tao004_distinct_specs_clean(tmp_path):
+    res = _run(
+        tmp_path,
+        {
+            "a.py": 'SPEC_A = MetricSpec("a", None, None, lambda s: {"a_curve": s})\n',
+            "b.py": 'SPEC_B = windowed_spec("b", "cycles")\n',
+        },
+    )
+    _clean(res)
+
+
+# ---------------------------------------------------------------------------
+# TAO005 — fused multiply-add under the bitwise contract
+# ---------------------------------------------------------------------------
+
+
+def test_tao005_mul_add_in_bitwise_fn_flagged(tmp_path):
+    res = _run(
+        tmp_path,
+        {
+            "mod.py": """\
+            # tao: bitwise
+            @some_decorator
+            def poly(x, c):
+                return x * 2.0 + c
+
+            def unmarked(x, c):
+                return x * 2.0 + c
+            """
+        },
+    )
+    # pragma attaches above the decorator; the unmarked twin stays clean
+    assert _codes(res) == ["TAO005"]
+    assert res["findings"][0].line == 4  # the contractable expression
+
+
+def test_tao005_separated_ops_clean(tmp_path):
+    res = _run(
+        tmp_path,
+        {
+            "mod.py": """\
+            # tao: bitwise
+            def poly(x, c):
+                p = x * 2.0
+                return p + c
+            """
+        },
+    )
+    _clean(res)
+
+
+# ---------------------------------------------------------------------------
+# TAO006 — deprecated shims
+# ---------------------------------------------------------------------------
+
+
+def test_tao006_shim_call_and_import_flagged(tmp_path):
+    res = _run(
+        tmp_path,
+        {
+            "mod.py": """\
+            from repro.core import simulate_trace
+
+            def f(p, t, c):
+                return simulate_trace(p, t, c)
+            """
+        },
+    )
+    assert _codes(res) == ["TAO006", "TAO006"]
+    assert all("repro.api" in f.message for f in res["findings"])
+
+
+def test_tao006_shim_definition_modules_exempt(tmp_path):
+    res = _run(
+        tmp_path,
+        {"simulate.py": "def simulate_trace(p, t, c):\n    return None\n"},
+    )
+    _clean(res)
+
+
+# ---------------------------------------------------------------------------
+# TAO007 — wire-contract drift
+# ---------------------------------------------------------------------------
+
+_SERVE_ERROR = """\
+import dataclasses
+
+@dataclasses.dataclass
+class ServeError:
+    error: str
+    message: str
+
+    def to_dict(self):
+        out = dataclasses.asdict(self)
+        if self.error == "busy":
+            out["retry_after_s"] = 1.0
+            out["request_id"] = "r"
+        return out
+"""
+
+
+def test_tao007_matching_schema_clean(tmp_path):
+    res = _run(tmp_path, {"mod.py": _SERVE_ERROR})
+    _clean(res)
+
+
+def test_tao007_undeclared_key_flagged(tmp_path):
+    res = _run(
+        tmp_path,
+        {
+            "mod.py": """\
+            class ServeError:
+                def to_dict(self):
+                    return {"error": 1, "message": 2, "stowaway": 3}
+            """
+        },
+    )
+    assert set(_codes(res)) == {"TAO007"}
+    assert any(
+        "emits undeclared key(s) ['stowaway']" in f.message
+        for f in res["findings"]
+    )
+
+
+def test_tao007_missing_key_flagged(tmp_path):
+    res = _run(
+        tmp_path,
+        {
+            "mod.py": """\
+            class ServeError:
+                def to_dict(self):
+                    return {"error": 1}
+            """
+        },
+    )
+    assert any(
+        f.code == "TAO007" and "misses required key(s) ['message']" in f.message
+        for f in res["findings"]
+    )
+
+
+def test_tao007_dynamic_keys_flagged(tmp_path):
+    res = _run(
+        tmp_path,
+        {
+            "mod.py": """\
+            class ServeError:
+                def to_dict(self):
+                    k = "message"
+                    return {"error": 1, k: 2}
+            """
+        },
+    )
+    assert _codes(res) == ["TAO007"]
+    assert "cannot" in res["findings"][0].message
+
+
+def test_tao007_coverage_fires_only_for_scanned_home(tmp_path):
+    # a file at the schema's declared home with the class renamed away
+    res = _run(
+        tmp_path,
+        {"serve/types.py": "class RenamedError:\n    pass\n"},
+    )
+    assert all(c == "TAO007" for c in _codes(res)) and _codes(res)
+    assert any("`ServeError`" in f.message for f in res["findings"])
+    # ...but a partial scan elsewhere is not drift
+    res = _run(tmp_path / "other", {"mod.py": "x = 1\n"})
+    _clean(res)
+
+
+def test_wire_schema_matches_runtime_dataclass():
+    """The declared ServerStats schema tracks the real dataclass — the
+    asdict() path TAO007 expands statically."""
+    import dataclasses
+
+    from repro.serve.types import ServerStats
+
+    names = {f.name for f in dataclasses.fields(ServerStats)}
+    assert names == WIRE_SCHEMAS["ServerStats"].required
+
+
+# ---------------------------------------------------------------------------
+# TAO000 — pragma hygiene + the suppression grammar
+# ---------------------------------------------------------------------------
+
+
+def test_reasoned_suppression_suppresses_and_is_recorded(tmp_path):
+    res = _run(
+        tmp_path,
+        {
+            "mod.py": (
+                "import jax.sharding"
+                "  # tao: noqa[TAO001] fixture: reasoned suppressions work\n"
+            )
+        },
+    )
+    _clean(res)
+    assert len(res["suppressed"]) == 1
+    finding, reason = res["suppressed"][0]
+    assert finding.code == "TAO001" and "reasoned" in reason
+    assert res["unused_suppressions"] == []
+
+
+def test_reasonless_suppression_does_not_suppress(tmp_path):
+    res = _run(
+        tmp_path,
+        {"mod.py": "import jax.sharding  # tao: noqa[TAO001]\n"},
+    )
+    # the TAO001 still fires AND the bad pragma is a TAO000
+    assert sorted(_codes(res)) == ["TAO000", "TAO001"]
+    assert any("no reason" in f.message for f in res["findings"])
+
+
+def test_bare_and_unknown_code_noqa_flagged(tmp_path):
+    res = _run(
+        tmp_path,
+        {
+            "mod.py": """\
+            x = 1  # tao: noqa
+            y = 2  # tao: noqa[TAO999] no such rule
+            """
+        },
+    )
+    msgs = " | ".join(f.message for f in res["findings"])
+    assert "bare `tao: noqa`" in msgs
+    assert "unknown rule code(s) ['TAO999']" in msgs
+
+
+def test_unused_suppression_reported(tmp_path):
+    res = _run(
+        tmp_path,
+        {"mod.py": "x = 1  # tao: noqa[TAO002] nothing fires here\n"},
+    )
+    _clean(res)
+    assert len(res["unused_suppressions"]) == 1
+    assert "delete it" in res["unused_suppressions"][0].message
+
+
+def test_malformed_pragma_flagged(tmp_path):
+    # trailing prose after hot/cold/bitwise is NOT part of the grammar —
+    # explanations belong on their own comment line above
+    res = _run(
+        tmp_path,
+        {
+            "mod.py": """\
+            # tao: hot because the loop is hot
+            def run(xs):
+                return xs
+            """
+        },
+    )
+    assert _codes(res) == ["TAO000"]
+    assert "unrecognized tao pragma" in res["findings"][0].message
+
+
+def test_select_filters_rules_but_keeps_hygiene(tmp_path):
+    res = _run(
+        tmp_path,
+        {
+            "mod.py": """\
+            import jax.sharding
+            from repro.core import simulate_trace
+            """
+        },
+        select=["TAO006"],
+    )
+    assert _codes(res) == ["TAO006"]
+
+
+def test_rule_registry_is_complete():
+    assert {f"TAO00{i}" for i in range(8)} <= set(RULES)
+
+
+# ---------------------------------------------------------------------------
+# the CLI (what CI runs) and the repo's own tree
+# ---------------------------------------------------------------------------
+
+
+def _cli(*args, cwd=None):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src")
+    return subprocess.run(
+        [sys.executable, "-m", "repro.analysis", *args],
+        capture_output=True,
+        text=True,
+        env=env,
+        cwd=cwd or REPO,
+    )
+
+
+def test_cli_exit_codes(tmp_path):
+    bad = tmp_path / "bad.py"
+    bad.write_text("import jax.sharding\n")
+    good = tmp_path / "good.py"
+    good.write_text("x = 1\n")
+
+    r = _cli(str(bad))
+    assert r.returncode == 1 and "TAO001" in r.stdout
+
+    r = _cli(str(good))
+    assert r.returncode == 0 and "clean" in r.stdout
+
+    r = _cli("--list-rules")
+    assert r.returncode == 0 and "TAO003" in r.stdout
+
+
+def test_repo_tree_is_clean_under_strict():
+    """The gate CI applies: src + benchmarks, strict, zero findings."""
+    res = run_paths([str(REPO / "src"), str(REPO / "benchmarks")])
+    _clean(res)
+    assert res["unused_suppressions"] == []
+    # every suppression in the tree carries a reason (the driver enforces
+    # it, but assert the shipped state explicitly)
+    assert all(reason for _, reason in res["suppressed"])
+
+
+# ---------------------------------------------------------------------------
+# runtime sanitizer
+# ---------------------------------------------------------------------------
+
+
+def test_compile_budget_exceeded_raises(monkeypatch):
+    from repro.analysis import sanitize as S
+
+    counts = iter([10, 13])  # 3 compiles inside the block, budget 2
+    monkeypatch.setattr(S, "compiles_now", lambda: next(counts))
+    with pytest.raises(S.CompileBudgetExceeded, match="budget was 2"):
+        with S.sanitized(transfer_guard=None, debug_nans=False, compile_budget=2):
+            pass
+
+
+def test_compile_budget_within_budget_passes(monkeypatch):
+    from repro.analysis import sanitize as S
+
+    counts = iter([10, 12])
+    monkeypatch.setattr(S, "compiles_now", lambda: next(counts))
+    with S.sanitized(transfer_guard=None, debug_nans=False, compile_budget=2):
+        pass
+
+
+def test_compile_budget_is_assertion_error():
+    from repro.analysis.sanitize import CompileBudgetExceeded
+
+    assert issubclass(CompileBudgetExceeded, AssertionError)
+
+
+def test_debug_nans_catches_nan_inside_sanitized():
+    import jax.numpy as jnp
+
+    from repro.analysis.sanitize import sanitized
+
+    with pytest.raises(FloatingPointError):
+        with sanitized(transfer_guard=None):
+            jnp.log(jnp.array(-1.0)).block_until_ready()

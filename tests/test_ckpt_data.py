@@ -1,6 +1,5 @@
 """Checkpointing (fault tolerance) + data pipeline determinism."""
 import os
-import shutil
 
 import jax
 import jax.numpy as jnp

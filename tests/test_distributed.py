@@ -1,13 +1,11 @@
 """Multi-device integration tests (subprocess with 8 placeholder devices):
 sharded training runs, elastic restart across mesh shapes, and one real
 dry-run cell end to end."""
-import json
 import os
 import subprocess
 import sys
 import textwrap
 
-import pytest
 
 ROOT = os.path.join(os.path.dirname(__file__), "..")
 SRC = os.path.join(ROOT, "src")

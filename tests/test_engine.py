@@ -126,6 +126,7 @@ def test_engine_matches_legacy_metrics(params, trace):
     np.testing.assert_array_equal(eng.dlevel, legacy.dlevel)
 
 
+@pytest.mark.sanitize
 def test_engine_single_compile_across_uneven_batches(params, trace):
     engine = StreamingEngine(params, CFG, EngineConfig(batch_size=13))
     r1 = engine.simulate(trace)                                   # ragged tail
@@ -140,6 +141,7 @@ def test_engine_single_compile_across_uneven_batches(params, trace):
             r.fetch_lat
 
 
+@pytest.mark.sanitize
 def test_engine_collect_off_keeps_metrics_on_device(params, trace):
     eng = simulate_trace(params, trace, CFG, collect=False)
     with pytest.raises(MetricNotCollectedError):
@@ -174,6 +176,7 @@ def test_engine_sharded_path_matches(params, trace):
     np.testing.assert_allclose(b.fetch_lat, legacy.fetch_lat, rtol=1e-5, atol=1e-5)
 
 
+@pytest.mark.sanitize
 def test_engine_feature_backends_bitwise_identical(params, trace):
     """The "pallas" backend must reproduce the "numpy" backend exactly:
     same FeatureSet bits in, same jitted step, same metrics out."""

@@ -2,7 +2,7 @@
 import numpy as np
 import pytest
 
-from repro.core.features import NUM_OPCODES, FeatureConfig, extract_features
+from repro.core.features import FeatureConfig, extract_features
 from repro.uarch.isa import FUNC_TRACE_DTYPE, NUM_REGS, Op
 
 

@@ -3,7 +3,6 @@ XLA's own cost_analysis on loop-free graphs, and trip-count folding is
 checked scanned-vs-unrolled."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.launch.hloanalysis import analyze_hlo

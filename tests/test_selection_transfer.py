@@ -1,12 +1,10 @@
 """Mahalanobis design selection (§4.3) + transfer-learning regimes (§5.5)."""
 import jax
 import numpy as np
-import pytest
 
 from repro.core.selection import (
     mahalanobis_matrix,
     measure_design_metrics,
-    select_pair_euclidean,
     select_pair_mahalanobis,
     select_random,
 )

@@ -21,7 +21,6 @@ import numpy as np
 import pytest
 
 from repro.api import (
-    EngineConfig,
     ModelRegistry,
     ServeError,
     ServeRequest,
@@ -87,6 +86,7 @@ def _serve(coro):
 # ---------------------------------------------------------------------------
 
 
+@pytest.mark.sanitize
 def test_warm_server_mixed_load_zero_compiles(registry, traces, models):
     load = {
         "alice": [("base", "long"), ("tuned", "short")],

@@ -1,9 +1,8 @@
 """Logical-axis sharding rule engine (pure spec logic, no multi-device)."""
-import jax
 import pytest
 from jax.sharding import PartitionSpec as P
 
-from repro.distributed.sharding import LOGICAL_RULES, logical_to_spec
+from repro.distributed.sharding import logical_to_spec
 
 
 class FakeMesh:

@@ -94,7 +94,7 @@ def test_full_paper_pipeline():
     il = jnp.ones((2,))
     rng = np.random.default_rng(0)
     first = last = None
-    for epoch in range(6):
+    for _epoch in range(6):
         for ba, bb in zip(ds_a.batches(8, rng=rng), ds_b.batches(8, rng=rng)):
             ba["labels"] = {k: jnp.asarray(v) for k, v in ba.pop("labels").items()}
             bb["labels"] = {k: jnp.asarray(v) for k, v in bb.pop("labels").items()}

@@ -5,7 +5,6 @@ import numpy as np
 import pytest
 
 from repro.core import (
-    TaoConfig,
     init_tao,
     multi_metric_loss,
     simulate_trace,

@@ -13,7 +13,6 @@ except ModuleNotFoundError:
 from repro.uarch import (
     ALL_BENCHMARKS,
     UARCH_A,
-    UARCH_B,
     UARCH_C,
     MicroArchConfig,
     enumerate_design_space,
@@ -24,7 +23,7 @@ from repro.uarch import (
 )
 from repro.uarch.branch import PREDICTOR_NAMES, make_predictor
 from repro.uarch.cache import TLB, Cache
-from repro.uarch.isa import KIND_NOP, KIND_REAL, KIND_SQUASHED, Op
+from repro.uarch.isa import KIND_REAL
 
 
 def test_design_space_size_matches_paper():
@@ -113,7 +112,7 @@ def test_wider_machine_not_slower():
 def test_predictor_learns_biased_branch(name):
     bp = make_predictor(name)
     correct = 0
-    for i in range(500):
+    for _i in range(500):
         pred = bp.predict(0x400)
         taken = True  # always-taken branch
         correct += pred == taken
