@@ -1,0 +1,180 @@
+"""Resilience benchmark: latency under injected faults + recovery time.
+
+Quantifies what the chaos suite only asserts: with a seeded
+:class:`~repro.resilience.FaultPlan` dropping a fixed fraction of
+dispatches, how much does tail latency degrade (retries are paid inline
+by the affected requests), and once a circuit breaker has tripped on a
+hard-failing ``model/geometry``, how long until the server is serving
+that bucket again?  CI tracks both per PR via ``BENCH_resilience.json``:
+a regression in ``resilience/degraded_p99`` means retry backoff got more
+expensive; a regression in ``resilience/recovery`` means the breaker
+probe path got slower.
+
+Three phases over the same closed-loop workload:
+
+1. **clean** — no faults, baseline p50/p99.
+2. **degraded** — ``serve.dispatch`` fails with seeded probability;
+   the retry policy re-runs victims, so the load still completes.
+3. **recovery** — a burst of hard failures trips the per-geometry
+   breaker; we then measure wall time from the trip until a request for
+   that geometry completes again (cooldown + half-open probe).
+"""
+from __future__ import annotations
+
+import asyncio
+import time
+
+import jax
+import numpy as np
+
+from repro.api import (
+    ModelRegistry,
+    ServeError,
+    ServeRequest,
+    TraceServer,
+    TrainedModel,
+)
+from repro.core import init_tao
+from repro.resilience import FaultPlan, FaultSpec, RetryPolicy, inject
+
+from .common import SCALE, TEST_LEN, Timer, emit, session, set_extra, tao_config
+
+_N_REQUESTS = {"tiny": 16, "small": 48}.get(SCALE, 96)
+# seeded so the degraded phase replays the identical fault sequence
+# run-to-run: the p99 delta is attributable to code, not dice
+_FAULT_P = 0.2
+_FAULT_SEED = 17
+_RETRY = RetryPolicy(max_attempts=3, base_delay_s=0.002, multiplier=2.0)
+_BREAKER_THRESHOLD = 3
+_COOLDOWN_S = 0.1
+
+
+def _build():
+    cfg = tao_config()
+    s = session()
+    traces = [
+        s.capture("mcf", TEST_LEN),
+        s.capture("dee", max(cfg.window * 3, TEST_LEN // 2)),
+    ]
+    registry = ModelRegistry()
+    for i, name in enumerate(("base", "tuned")):
+        registry.register(name, TrainedModel(
+            params=init_tao(jax.random.PRNGKey(i), cfg), cfg=cfg, name=name))
+    return registry, traces
+
+
+async def _closed_loop(server, traces, n):
+    """Sequential closed loop; returns (latencies, failures).  Failed
+    requests (retry budget exhausted under the plan) are counted, not
+    fatal — availability under faults is part of the measurement."""
+    lat, failures = [], 0
+    for i in range(n):
+        req = ServeRequest(
+            model=("base", "tuned")[i % 2],
+            trace=traces[i % len(traces)],
+            tenant=f"t{i % 4}",
+        )
+        try:
+            r = await server.submit(req)
+            lat.append(r.total_s)
+        except ServeError as e:
+            failures += 1
+            if e.code == "CIRCUIT_OPEN":
+                await asyncio.sleep(e.retry_after_s or _COOLDOWN_S)
+    return np.array(lat), failures
+
+
+async def _measure_recovery(server, traces):
+    """Trip the breaker for base/traces[0]'s geometry with hard transient
+    faults, then poll until a request for that bucket completes again."""
+    # every attempt fails: max_attempts fires per request, so
+    # _BREAKER_THRESHOLD failed requests open the circuit
+    trip_plan = FaultPlan(
+        FaultSpec("serve.dispatch",
+                  times=_RETRY.max_attempts * _BREAKER_THRESHOLD,
+                  transient=True, message="bench breaker trip"),
+        seed=_FAULT_SEED,
+    )
+    req = ServeRequest(model="base", trace=traces[0])
+    with inject(trip_plan):
+        for _ in range(_BREAKER_THRESHOLD):
+            try:
+                await server.submit(req)
+            except ServeError:
+                pass  # INTERNAL while tripping — expected
+    t_open = time.perf_counter()
+    sheds = 0
+    while True:
+        try:
+            await server.submit(req)
+            return time.perf_counter() - t_open, sheds
+        except ServeError as e:
+            if e.code != "CIRCUIT_OPEN":
+                raise
+            sheds += 1
+            await asyncio.sleep(e.retry_after_s or _COOLDOWN_S / 4)
+
+
+def run() -> None:
+    registry, traces = _build()
+
+    async def drive():
+        server = TraceServer(
+            registry, batch_size=8, max_queue=128,
+            retry=_RETRY,
+            breaker_threshold=_BREAKER_THRESHOLD,
+            breaker_cooldown_s=_COOLDOWN_S,
+        )
+        async with server:
+            server.warmup([len(t) for t in traces])
+            # prime feature caches for every model x trace pair so the
+            # clean phase measures steady state, not first-touch extraction
+            await _closed_loop(server, traces, 2 * len(traces))
+            clean, clean_failures = await _closed_loop(
+                server, traces, _N_REQUESTS)
+
+            plan = FaultPlan(
+                FaultSpec("serve.dispatch", p=_FAULT_P, times=None,
+                          transient=True, message="bench degraded mode"),
+                seed=_FAULT_SEED,
+            )
+            with inject(plan):
+                with Timer() as degraded_wall:
+                    degraded, degraded_failures = await _closed_loop(
+                        server, traces, _N_REQUESTS)
+            mid_stats = server.stats()
+
+            recovery_s, recovery_sheds = await _measure_recovery(
+                server, traces)
+            stats = server.stats()
+        return (clean, clean_failures, degraded, degraded_failures,
+                degraded_wall.seconds, mid_stats, recovery_s,
+                recovery_sheds, stats)
+
+    (clean, clean_failures, degraded, degraded_failures, degraded_wall,
+     mid_stats, recovery_s, recovery_sheds, stats) = asyncio.run(drive())
+
+    assert clean_failures == 0, "clean phase must not fail"
+    p50_c, p99_c = np.percentile(clean, 50), np.percentile(clean, 99)
+    p50_d, p99_d = np.percentile(degraded, 50), np.percentile(degraded, 99)
+
+    emit("resilience/clean_p99", p99_c * 1e6, f"n={len(clean)}")
+    emit("resilience/degraded_p99", p99_d * 1e6,
+         f"retries={mid_stats.retries} failed={degraded_failures} "
+         f"x{p99_d / max(p99_c, 1e-9):.2f}")
+    emit("resilience/recovery", recovery_s * 1e6,
+         f"sheds={recovery_sheds} "
+         f"breaker_sheds={stats.breaker_sheds}")
+    set_extra("resilience", {
+        "latency_p50_clean_s": float(p50_c),
+        "latency_p99_clean_s": float(p99_c),
+        "latency_p50_degraded_s": float(p50_d),
+        "latency_p99_degraded_s": float(p99_d),
+        "degraded_wall_s": float(degraded_wall),
+        "degraded_failures": degraded_failures,
+        "degraded_retries": mid_stats.retries,
+        "fault_p": _FAULT_P,
+        "recovery_s": float(recovery_s),
+        "recovery_sheds": recovery_sheds,
+        "stats": stats.to_dict(),
+    })

@@ -14,6 +14,9 @@
   bench_kernels    (systems) chunked attention / SSD formulations
   bench_serve      (systems) "serve": open-loop multi-tenant TraceServer
                      load (p50/p99 latency, traces/s, batch fill ratio)
+  bench_resilience (systems) "resilience": degraded-mode tail latency
+                     under a seeded fault plan + breaker recovery time
+                     (CI uploads ``BENCH_resilience.json``)
 
 Prints ``name,us_per_call,derived`` CSV.  BENCH_SCALE=tiny|small|full
 controls trace lengths / epochs (CPU container defaults to small; CI smoke
@@ -36,6 +39,7 @@ from . import (
     bench_accuracy,
     bench_dse,
     bench_kernels,
+    bench_resilience,
     bench_serve,
     bench_shard,
     bench_sweeps,
@@ -57,6 +61,7 @@ SUITES = {
     "kernels": bench_kernels.run,
     "shard": bench_shard.run,
     "serve": bench_serve.run,
+    "resilience": bench_resilience.run,
 }
 
 

@@ -4,7 +4,7 @@ Static half (stdlib-only — CI's lint job runs it without jax installed):
 
     python -m repro.analysis --strict src benchmarks
 
-Rule codes TAO001–TAO007 each encode an invariant a past PR earned the
+Rule codes TAO001–TAO008 each encode an invariant a past PR earned the
 hard way (see docs/analysis.md for the catalog).  Per-line suppressions
 require a reason::
 
@@ -28,7 +28,8 @@ from . import rules_hotpath as _rules_hotpath      # noqa: F401  TAO002
 from . import rules_cachekey as _rules_cachekey    # noqa: F401  TAO003
 from . import rules_contracts as _rules_contracts  # noqa: F401  TAO004/TAO007
 from . import rules_bitwise as _rules_bitwise      # noqa: F401  TAO005
-from .schemas import WIRE_SCHEMAS
+from . import rules_robustness as _rules_robustness  # noqa: F401  TAO008 + TAO007 codes
+from .schemas import WIRE_ERROR_CODES, WIRE_SCHEMAS
 
 __all__ = [
     "Analysis",
@@ -36,6 +37,7 @@ __all__ = [
     "Pragma",
     "RULES",
     "SourceFile",
+    "WIRE_ERROR_CODES",
     "WIRE_SCHEMAS",
     "register_rule",
     "run_paths",

@@ -17,6 +17,9 @@ One pass, three layers:
                                             (``ignore=a,b`` skips params)
       ``# tao: step-key[label]``            the cache-key tuple on this line
                                             belongs to builder ``label``
+      ``# tao: fault-boundary <why>``       the broad exception handler on
+                                            this line is a deliberate
+                                            resilience seam (TAO008)
 
   * **SourceFile** — one parsed module: AST, pragma maps, and the def
     table the reachability / pairing rules consume.
@@ -90,7 +93,7 @@ class Finding:
 @dataclasses.dataclass(frozen=True)
 class Pragma:
     line: int
-    kind: str                 # noqa | hot | cold | bitwise | step-builder | step-key
+    kind: str                 # noqa | hot | cold | bitwise | step-builder | step-key | fault-boundary
     codes: Tuple[str, ...] = ()
     reason: str = ""
     label: str = ""
@@ -119,6 +122,12 @@ def _parse_pragma(line: int, body: str) -> Pragma:
         return Pragma(line, m.group(1), label=m.group(2), ignore=ignore)
     if body in ("hot", "cold", "bitwise"):
         return Pragma(line, body)
+    if body == "fault-boundary" or body.startswith("fault-boundary "):
+        # trailing free text is the why — encouraged, not parsed
+        return Pragma(
+            line, "fault-boundary",
+            reason=body[len("fault-boundary"):].strip(),
+        )
     return Pragma(line, "malformed", reason=body)
 
 

@@ -1,0 +1,156 @@
+"""TAO008 (silent exception swallowing) + the error-code half of TAO007.
+
+**TAO008** — the resilience layer (PR 9) legitimizes a few broad
+exception handlers: fault boundaries that convert arbitrary failures
+into retries, quarantines, or clean closes.  Everywhere else, a bare
+``except:`` or a swallow-only ``except Exception: pass`` is how faults
+become silent corruption — exactly what the chaos suite exists to
+prevent.  This rule flags both, unless the handler line (or the line
+directly above it) carries a ``# tao: fault-boundary <why>`` pragma
+naming the site a deliberate seam.  A fault-boundary pragma that
+annotates no handler is itself a finding, so stale annotations cannot
+accumulate.
+
+**TAO007 (codes)** — the ``ServeError`` code vocabulary is a wire
+contract exactly like the ``to_dict`` key sets: the ``ERROR_CODES``
+tuple in ``serve/types.py`` is read statically and diffed against
+``schemas.WIRE_ERROR_CODES``, so adding DEADLINE_EXCEEDED (or dropping
+QUEUE_FULL) without updating the declared contract fails CI.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator, Set
+
+from .core import Analysis, Finding, SourceFile, register_rule
+from .schemas import WIRE_ERROR_CODES
+
+_BROAD = frozenset({"Exception", "BaseException"})
+
+
+def _type_names(node: ast.AST) -> Set[str]:
+    """Exception-type names an ``except ...:`` clause mentions (tuple
+    clauses contribute every member)."""
+    out: Set[str] = set()
+    elts = node.elts if isinstance(node, ast.Tuple) else [node]
+    for n in elts:
+        if isinstance(n, ast.Name):
+            out.add(n.id)
+        elif isinstance(n, ast.Attribute):
+            out.add(n.attr)
+    return out
+
+
+def _swallows(handler: ast.ExceptHandler) -> bool:
+    """True when the handler body does nothing at all (``pass`` /
+    ``...`` only) — the failure vanishes without a trace."""
+    for stmt in handler.body:
+        if isinstance(stmt, ast.Pass):
+            continue
+        if (
+            isinstance(stmt, ast.Expr)
+            and isinstance(stmt.value, ast.Constant)
+            and stmt.value.value is Ellipsis
+        ):
+            continue
+        return False
+    return True
+
+
+@register_rule(
+    "TAO008",
+    "silent exception swallowing: bare `except:` or a swallow-only "
+    "`except Exception:` outside a `# tao: fault-boundary` site",
+)
+def check_fault_boundaries(sf: SourceFile, analysis: Analysis) -> Iterator[Finding]:
+    if "tests" in sf.path.parts:
+        return  # tests provoke failures on purpose
+    marked = {
+        p.line
+        for plist in sf.pragmas.values()
+        for p in plist
+        if p.kind == "fault-boundary"
+    }
+    handlers = [
+        n for n in ast.walk(sf.tree) if isinstance(n, ast.ExceptHandler)
+    ]
+    handler_lines = {h.lineno for h in handlers}
+
+    for h in handlers:
+        annotated = h.lineno in marked or (h.lineno - 1) in marked
+        if h.type is None:
+            if not annotated:
+                yield Finding(
+                    sf.display, h.lineno, h.col_offset, "TAO008",
+                    "bare `except:` swallows everything up to "
+                    "KeyboardInterrupt — name the exceptions, or mark a "
+                    "deliberate seam with `# tao: fault-boundary <why>`",
+                )
+            continue
+        if (
+            _type_names(h.type) & _BROAD
+            and _swallows(h)
+            and not annotated
+        ):
+            yield Finding(
+                sf.display, h.lineno, h.col_offset, "TAO008",
+                "`except Exception`/`BaseException` with an empty body "
+                "turns faults into silent corruption — handle or narrow "
+                "it, or mark a deliberate seam with "
+                "`# tao: fault-boundary <why>`",
+            )
+
+    # pragma hygiene: an annotation that guards nothing is stale
+    for ln in sorted(marked):
+        if ln not in handler_lines and (ln + 1) not in handler_lines:
+            yield Finding(
+                sf.display, ln, 0, "TAO008",
+                "`# tao: fault-boundary` annotates no except handler "
+                "(place it on the `except` line or directly above it)",
+            )
+
+
+@register_rule(
+    "TAO007",
+    "wire-contract drift: serve/types.py ERROR_CODES differs from "
+    "schemas.WIRE_ERROR_CODES",
+)
+def check_error_codes(sf: SourceFile, analysis: Analysis) -> Iterator[Finding]:
+    if not sf.display.replace("\\", "/").endswith("serve/types.py"):
+        return
+    for node in ast.walk(sf.tree):
+        if not isinstance(node, ast.Assign) or not any(
+            isinstance(t, ast.Name) and t.id == "ERROR_CODES"
+            for t in node.targets
+        ):
+            continue
+        if not isinstance(node.value, (ast.Tuple, ast.List)):
+            yield Finding(
+                sf.display, node.lineno, node.col_offset, "TAO007",
+                "ERROR_CODES is not a literal tuple — the analyzer cannot "
+                "hold the failure surface to the declared contract",
+            )
+            return
+        codes: Set[str] = set()
+        for elt in node.value.elts:
+            if isinstance(elt, ast.Constant) and isinstance(elt.value, str):
+                codes.add(elt.value)
+            else:
+                yield Finding(
+                    sf.display, elt.lineno, elt.col_offset, "TAO007",
+                    "non-literal entry in ERROR_CODES — keep the code "
+                    "vocabulary a tuple of string literals",
+                )
+                return
+        for label, diff in (
+            ("drops declared error code(s)", WIRE_ERROR_CODES - codes),
+            ("adds undeclared error code(s)", codes - WIRE_ERROR_CODES),
+        ):
+            if diff:
+                yield Finding(
+                    sf.display, node.lineno, node.col_offset, "TAO007",
+                    f"ERROR_CODES {label} {sorted(diff)} vs "
+                    "schemas.WIRE_ERROR_CODES — update "
+                    "src/repro/analysis/schemas.py in the same change",
+                )
+        return

@@ -57,6 +57,7 @@ WIRE_SCHEMAS: Dict[str, WireSchema] = {
                 "num_shards",
                 "features_extracted",
                 "features_from_store",
+                "jobs_skipped",
                 "results",
             }
         ),
@@ -104,6 +105,12 @@ WIRE_SCHEMAS: Dict[str, WireSchema] = {
                 "batch_fill_ratio",
                 "plan_kind",
                 "num_shards",
+                "retries",
+                "deadline_exceeded",
+                "quarantined",
+                "bisections",
+                "breaker_sheds",
+                "breakers",
                 "per_geometry",
                 "per_tenant",
             }
@@ -116,3 +123,24 @@ WIRE_SCHEMAS: Dict[str, WireSchema] = {
         optional=frozenset({"retry_after_s", "request_id"}),
     ),
 }
+
+
+# The closed ServeError code vocabulary, declared here exactly like the
+# dict shapes above: TAO007 statically reads the ``ERROR_CODES`` tuple in
+# serve/types.py and diffs it against this set, so a code added to (or
+# dropped from) the failure surface cannot skip the contract review.
+WIRE_ERROR_CODES: FrozenSet[str] = frozenset(
+    {
+        "QUEUE_FULL",
+        "UNKNOWN_MODEL",
+        "BAD_REQUEST",
+        "GEOMETRY_MISMATCH",
+        "METRIC_NOT_COMPUTED",
+        "METRIC_NOT_COLLECTED",
+        "SHUTTING_DOWN",
+        "DEADLINE_EXCEEDED",
+        "TRACE_REJECTED",
+        "CIRCUIT_OPEN",
+        "INTERNAL",
+    }
+)

@@ -793,6 +793,10 @@ class Session:
                     "explicit dataset="
                 )
             dataset = self.dataset(uarch, traces, streaming=streaming)
+        # skey doubles as the crash-resume identity: with a store, every
+        # epoch checkpoints a progress manifest, so a SIGKILLed train
+        # resumes from the last completed epoch (bit-identical losses and
+        # params) instead of starting over
         res = train_tao_impl(
             self.cfg,
             dataset,
@@ -805,6 +809,8 @@ class Session:
             seed=self.seed if seed is None else seed,
             target_loss=target_loss,
             plan=plan,
+            store=self.store if skey is not None else None,
+            resume_key=skey,
         )
         if skey is not None:
             self.store.put(
@@ -946,6 +952,7 @@ class Session:
         async_prepare: Optional[bool] = None,
         mesh=None,
         plan: Optional[ExecutionPlan] = None,
+        resume_key: Optional[str] = None,
     ) -> SweepReport:
         """Async DSE sweep: every (model, trace) pair streams through one
         shared compiled step; each distinct trace is prepared once (shared
@@ -957,7 +964,13 @@ class Session:
         pass ``plan=``/``mesh=`` (or construct the session with one) and
         every job's step fans out over the plan's ``data`` axes while the
         one-compile-per-geometry guarantee still holds
-        (``report.num_compiles``, ``report.plan_kind``)."""
+        (``report.num_compiles``, ``report.plan_kind``).
+
+        ``resume_key=`` (any stable string naming the sweep; needs the
+        session store) makes the sweep crash-resumable: each completed job
+        publishes a progress manifest, and a re-run with the same key
+        skips finished jobs entirely (``report.jobs_skipped``) with
+        bit-identical results."""
         models = _named("model", models, lambda m: m.name)
         traces = _named("trace", traces, lambda t: t.name)
         for name, m in models.items():
@@ -984,7 +997,7 @@ class Session:
         return TraceSweeper(
             self.cfg, ecfg, depth=depth, async_prepare=async_prepare,
             store=self.store,
-        ).run(jobs)
+        ).run(jobs, resume_key=resume_key)
 
     # ---- zero cold start ------------------------------------------------
 

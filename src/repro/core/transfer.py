@@ -182,6 +182,12 @@ def _run_epochs(
     target_loss: Optional[float] = None,
     prefetch: bool = True,
     plan=None,
+    start_epoch: int = 0,
+    rng_state: Optional[Dict] = None,
+    losses: Optional[List[float]] = None,
+    evals: Optional[List[float]] = None,
+    steps: int = 0,
+    checkpoint_cb: Optional[Callable] = None,
 ) -> Tuple[Dict, List[float], List[float], int]:
     # lazy: engine.runner imports core.dataset — a module-level import here
     # would close the cycle through the repro.core package init
@@ -198,10 +204,15 @@ def _run_epochs(
         opt = plan.replicate(opt)
 
     rng = np.random.default_rng(seed)
-    losses, evals = [], []
-    steps = 0
+    if rng_state is not None:
+        # crash-resume: fast-forward the shuffle stream to where the
+        # checkpointed epoch left it, so the remaining epochs draw exactly
+        # the batches an uninterrupted run would have drawn
+        rng.bit_generator.state = rng_state
+    losses = list(losses) if losses else []
+    evals = list(evals) if evals else []
     put = plan.device_put if plan is not None and plan.sharded else None
-    for _ep in range(epochs):
+    for ep in range(start_epoch, epochs):
         nb = 0
         ep_losses: list = []
         batches = dataset.batches(batch_size, rng=rng)
@@ -230,6 +241,13 @@ def _run_epochs(
         losses.append(ep_loss)
         if eval_fn is not None:
             evals.append(float(jax.device_get(eval_fn(params))))
+        if checkpoint_cb is not None:
+            # rng state captured AFTER this epoch's batches were drawn —
+            # exactly what the next epoch of a resumed run must start from
+            checkpoint_cb(
+                ep, params, opt, losses, evals, steps,
+                rng.bit_generator.state,
+            )
         if target_loss is not None and ep_loss <= target_loss:
             break
     return params, losses, evals, steps
@@ -248,6 +266,9 @@ def train_tao_impl(
     seed: int = 0,
     target_loss: Optional[float] = None,
     plan=None,
+    store=None,
+    resume_key: Optional[str] = None,
+    manifest_every: int = 1,
 ) -> TrainResult:
     """Train (or fine-tune) a single-µarch Tao model.
 
@@ -265,9 +286,19 @@ def train_tao_impl(
     by GSPMD.  ``train_step_compiles`` still counts one trace per
     (batch, window) geometry per plan.
 
+    With ``store`` (an ``ArtifactStore``) and ``resume_key`` (the run's
+    recipe identity — ``Session.train`` passes its params content key),
+    every ``manifest_every``-th epoch publishes a crash-resume manifest
+    (params, optimizer state, loss history, shuffle-rng state) through the
+    store; a re-run after a SIGKILL picks up from the last checkpointed
+    epoch with zero redundant step executions, and its loss trajectory
+    and final params are bit-identical to an uninterrupted run.
+
     Internal implementation behind ``repro.api.Session.train`` /
     ``TrainedModel.transfer`` (and the ``train_tao`` deprecation shim).
     """
+    if manifest_every < 1:
+        raise ValueError(f"manifest_every must be >= 1, got {manifest_every}")
     key = jax.random.PRNGKey(seed)
     params = init_params if init_params is not None else init_tao(key, cfg)
     opt_cfg = AdamWConfig(lr=lr)
@@ -281,10 +312,41 @@ def train_tao_impl(
         opt = adamw_init({"adapt": params["adapt"], "pred": params["pred"]})
     else:
         opt = adamw_init(params)
+
+    start_epoch, rng_state, steps0 = 0, None, 0
+    losses0: List[float] = []
+    evals0: List[float] = []
+    checkpoint_cb = None
+    if store is not None and resume_key is not None:
+        # lazy: resilience.manifest pulls in the store package
+        from ..resilience.manifest import load_train_epoch, publish_train_epoch
+
+        state = load_train_epoch(store, resume_key, epochs)
+        if state is not None and state.get("rng_state") is not None:
+            params = state["params"]
+            # stored as a plain dict (the typed-path serializer holds
+            # dict/list/tuple trees only) — rebuild the NamedTuple
+            opt = type(opt)(**state["opt"])
+            start_epoch = state["epoch"] + 1
+            rng_state = state["rng_state"]
+            losses0 = state["losses"]
+            evals0 = state["eval_losses"]
+            steps0 = state["steps"]
+
+        def checkpoint_cb(ep, p, o, ls, ev, st, rs):
+            if (ep + 1) % manifest_every and ep != epochs - 1:
+                return
+            publish_train_epoch(
+                store, resume_key, ep, jax.device_get(p),
+                jax.device_get(o)._asdict(), ls, ev, st, rs,
+            )
+
     t0 = time.perf_counter()
     params, losses, evals, steps = _run_epochs(
         params, step, dataset, epochs, batch_size, opt, eval_fn, seed,
-        target_loss, plan=plan,
+        target_loss, plan=plan, start_epoch=start_epoch, rng_state=rng_state,
+        losses=losses0, evals=evals0, steps=steps0,
+        checkpoint_cb=checkpoint_cb,
     )
     return TrainResult(
         params=params,

@@ -55,6 +55,7 @@ from ..core.dataset import INPUT_KEYS, num_windows, stream_batches
 from ..core.features import FeatureSet, extract_features
 from ..core.model import TaoConfig, tao_forward
 from ..uarch.isa import NUM_REGS
+from ..resilience.faults import fault_point
 from .aot import abstract_like, compile_bytes_estimate
 from .metrics import DEFAULT_METRICS, MetricSpec, StepContext, resolve_metrics
 from .plan import ExecutionPlan
@@ -567,6 +568,7 @@ class StreamingEngine:
             )
             entry = _STEP_CACHE.get(key)
             if entry is None:
+                fault_point("engine.compile", payload=f"w{w_eff}")
                 _STEP_STATS["misses"] += 1
                 entry = _CachedStep()
                 entry.fn = self._build_step(w_eff, entry)
@@ -716,6 +718,7 @@ class StreamingEngine:
         features: Optional[FeatureSet] = None,
     ) -> SimulationResult:
         t0 = time.perf_counter()
+        fault_point("engine.simulate")
         cfg = self.cfg
         n = len(features) if features is not None else len(func_trace)
         if n == 0:

@@ -43,7 +43,9 @@ import numpy as np
 
 from ..core.features import FeatureSet, extract_features
 from ..core.model import TaoConfig
-from ..store.content import array_digest, content_key
+from ..resilience.faults import fault_point
+from ..store.content import array_digest, config_token, content_key, tree_digest
+from .metrics import resolve_metrics
 from .plan import ExecutionPlan
 from .runner import EngineConfig, SimulationResult, StreamingEngine
 
@@ -84,6 +86,10 @@ class SweepReport:
     # device per trace)
     features_extracted: int = 0
     features_from_store: int = 0
+    # jobs satisfied from crash-resume progress manifests (store entries
+    # published by an earlier, possibly killed, run with the same
+    # resume_key) — skipped entirely: no extraction, no device work
+    jobs_skipped: int = 0
 
     def stats(self) -> Dict[str, Union[float, int, str]]:
         return {
@@ -96,6 +102,7 @@ class SweepReport:
             "num_shards": self.num_shards,
             "features_extracted": self.features_extracted,
             "features_from_store": self.features_from_store,
+            "jobs_skipped": self.jobs_skipped,
         }
 
     def to_dict(self) -> Dict:
@@ -184,6 +191,7 @@ class TraceSweeper:
         digests: Dict[int, str],
         counts: Dict[str, int],
     ) -> Optional[FeatureSet]:
+        fault_point("scheduler.prepare", payload=job.key)
         if self.ecfg.feature_backend == "pallas":
             # device-side extraction happens in the consumer (the device is
             # the contended resource); nothing to pre-compute on host.
@@ -220,19 +228,72 @@ class TraceSweeper:
         cache[dg] = fs
         return fs
 
+    def _progress_token(self) -> str:
+        """Everything a sweep result is a function of besides (params,
+        trace): model config, batch geometry, collect flag, spec set —
+        part of every progress-manifest key so a resumed run with a
+        different recipe never reuses stale results."""
+        specs = resolve_metrics(self.ecfg.metrics)
+        return "|".join((
+            str(config_token(self.cfg)),
+            f"b{self.ecfg.batch_size}",
+            f"c{int(self.ecfg.collect)}",
+            ",".join(s.name for s in specs),
+        ))
+
     # tao: hot
-    def run(self, jobs: Iterable[SweepJob]) -> SweepReport:
+    def run(
+        self, jobs: Iterable[SweepJob], *, resume_key: Optional[str] = None
+    ) -> SweepReport:
         jobs = list(jobs)
         if not jobs:
             raise ValueError("sweep needs at least one job")
         keys = [j.key for j in jobs]
         if len(set(keys)) != len(keys):
             raise ValueError(f"duplicate sweep job keys: {keys}")
+        if resume_key is not None and self.store is None:
+            raise ValueError("resume_key needs a store to hold the manifests")
 
         feat_cache: Dict[str, FeatureSet] = {}  # trace digest -> features
         digests: Dict[int, str] = {}            # id(trace) -> digest (memo)
         feat_counts = {"extracted": 0, "from_store": 0}
         occ: List[int] = []
+        results: Dict[str, SimulationResult] = {}
+        n_instr = 0
+        n_total = len(jobs)
+
+        # crash-resume: load the done set up front and only feed the
+        # remainder to the producer — completed jobs cost zero extractions
+        # and zero device work on the resumed run
+        skipped = 0
+        progress_keys: Dict[str, str] = {}
+        if resume_key is not None:
+            from ..resilience import manifest as _manifest
+
+            token = self._progress_token()
+            pdigests: Dict[int, str] = {}       # id(params) -> digest (memo)
+            remaining: List[SweepJob] = []
+            for job in jobs:
+                dg = digests.get(id(job.trace))
+                if dg is None:
+                    dg = array_digest(job.trace)
+                    digests[id(job.trace)] = dg
+                pd = pdigests.get(id(job.params))
+                if pd is None:
+                    pd = tree_digest(job.params)
+                    pdigests[id(job.params)] = pd
+                pkey = _manifest.sweep_progress_key(
+                    resume_key, job.key, dg, pd, token
+                )
+                progress_keys[job.key] = pkey
+                res = _manifest.load_sweep_result(self.store, pkey)
+                if res is not None:
+                    results[job.key] = res
+                    n_instr += res.num_instructions
+                    skipped += 1
+                else:
+                    remaining.append(job)
+            jobs = remaining
 
         # consumer state: engines share jitted steps via the process-wide
         # step cache; one per params object so a model's engine is reused
@@ -240,11 +301,10 @@ class TraceSweeper:
         engines: Dict[int, StreamingEngine] = {}
         entries: Dict[int, object] = {}   # id(_CachedStep) -> _CachedStep
         baseline: Dict[int, int] = {}     # compiles before this sweep used it
-        results: Dict[str, SimulationResult] = {}
-        n_instr = 0
 
         def consume(job: SweepJob, features: Optional[FeatureSet]) -> None:
             nonlocal n_instr
+            fault_point("scheduler.consume", payload=job.key)
             engine = engines.get(id(job.params))
             if engine is None:
                 engine = StreamingEngine(job.params, self.cfg, self.ecfg)
@@ -258,6 +318,12 @@ class TraceSweeper:
             res = engine.simulate(job.trace, features=features)
             results[job.key] = res
             n_instr += res.num_instructions
+            if resume_key is not None:
+                from ..resilience import manifest as _manifest
+
+                _manifest.publish_sweep_result(
+                    self.store, progress_keys[job.key], res
+                )
 
         t0 = time.perf_counter()
         if not self.async_prepare:
@@ -323,12 +389,12 @@ class TraceSweeper:
         return SweepReport(
             results=results,
             seconds=secs,
-            num_traces=len(jobs),
+            num_traces=n_total,
             num_instructions=n_instr,
             num_compiles=sum(
                 e.compiles - baseline[i] for i, e in entries.items()
             ),
-            traces_per_s=len(jobs) / secs,
+            traces_per_s=n_total / secs,
             mips=n_instr / 1e6 / secs,
             queue_occupancy_mean=float(np.mean(occ)) if occ else 0.0,  # tao: noqa[TAO002] occ is a host list of queue depths; runs once after the sweep loop
             queue_occupancy_max=int(np.max(occ)) if occ else 0,
@@ -338,6 +404,7 @@ class TraceSweeper:
             num_shards=self.plan.num_shards,
             features_extracted=feat_counts["extracted"],
             features_from_store=feat_counts["from_store"],
+            jobs_skipped=skipped,
         )
 
 

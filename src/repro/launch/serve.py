@@ -18,9 +18,16 @@ Requests (``op`` selects the verb)::
 
 Responses are ``{"ok": true, ...}`` or ``{"ok": false, "error": CODE,
 "message": ..., "retry_after_s": ...}`` with the stable ``ServeError``
-code vocabulary — QUEUE_FULL carries the 429-style backoff hint.
-Responses are written as requests complete (pipelined clients match them
-up by ``request_id``).
+code vocabulary — QUEUE_FULL and CIRCUIT_OPEN carry the 429-style
+backoff hint.  Responses are written as requests complete (pipelined
+clients match them up by ``request_id``).
+
+The front end is hostile-input hardened (docs/resilience.md): a line
+over ``--max-line-bytes`` or a connection closed mid-line gets a
+structured BAD_REQUEST and a clean close (never a stack trace, never an
+unbounded buffer); a tenant that disconnects mid-reply loses only its
+own responses; per-connection in-flight requests are capped so one
+pipelining client cannot hold unbounded server memory.
 
 ``--demo`` needs no store: it registers two freshly initialized models,
 drives mixed-tenant load in-process, and prints the ``ServerStats``
@@ -30,9 +37,11 @@ from __future__ import annotations
 
 import argparse
 import asyncio
+import contextlib
 import json
 from typing import Optional
 
+from ..resilience.faults import fault_point
 from ..serve import (
     ModelRegistry,
     ServeError,
@@ -43,12 +52,22 @@ from ..serve import (
 
 __all__ = ["main", "serve_forever"]
 
+# longest request line accepted (also the asyncio reader's buffer limit,
+# so a tenant streaming garbage without a newline is bounded too)
+DEFAULT_MAX_LINE_BYTES = 1 << 20
+# in-flight requests per connection before reads backpressure
+_MAX_CONN_TASKS = 64
+
 
 async def _handle_line(server: TraceServer, line: bytes, writer, wlock) -> None:
     async def reply(obj: dict) -> None:
-        async with wlock:
-            writer.write(json.dumps(obj).encode() + b"\n")
-            await writer.drain()
+        try:
+            async with wlock:
+                fault_point("tcp.reply")
+                writer.write(json.dumps(obj).encode() + b"\n")
+                await writer.drain()
+        except (ConnectionError, OSError):  # tao: fault-boundary tenant disconnected mid-reply; only its own responses are lost
+            pass
 
     try:
         req = json.loads(line)
@@ -78,6 +97,10 @@ async def _handle_line(server: TraceServer, line: bytes, writer, wlock) -> None:
             tenant=req.get("tenant", "default"),
             metrics=tuple(req["metrics"]) if req.get("metrics") else None,
             request_id=rid,
+            deadline_s=(
+                float(req["deadline_s"]) if req.get("deadline_s") is not None
+                else None
+            ),
         )
     except ServeError as e:
         await reply({"ok": False, **e.to_dict()})
@@ -97,13 +120,46 @@ async def _handle_line(server: TraceServer, line: bytes, writer, wlock) -> None:
 async def _serve_connection(server: TraceServer, reader, writer) -> None:
     wlock = asyncio.Lock()
     tasks = set()
+
+    async def reply_err(message: str) -> None:
+        obj = {"ok": False, "error": "BAD_REQUEST", "message": message}
+        try:
+            async with wlock:
+                writer.write(json.dumps(obj).encode() + b"\n")
+                await writer.drain()
+        except (ConnectionError, OSError):  # tao: fault-boundary peer is already gone; nothing left to tell it
+            pass
+
     try:
         while True:
-            line = await reader.readline()
-            if not line:
+            try:
+                line = await reader.readuntil(b"\n")
+            except asyncio.LimitOverrunError:
+                # oversized line: the buffered prefix is garbage we refuse
+                # to hold — structured error, then close
+                await reply_err(
+                    "request line exceeds the server's --max-line-bytes limit"
+                )
+                break
+            except asyncio.IncompleteReadError as e:
+                # EOF mid-line: a truncated request gets a structured
+                # error; a bare EOF (clean disconnect) gets a clean close
+                if e.partial.strip():
+                    await reply_err(
+                        "truncated request (connection closed mid-line)"
+                    )
+                break
+            except (ConnectionResetError, OSError):
                 break
             if not line.strip():
                 continue
+            while len(tasks) >= _MAX_CONN_TASKS:
+                # backpressure one pipelining connection instead of
+                # buffering unbounded in-flight requests for it
+                done, _ = await asyncio.wait(
+                    tasks, return_when=asyncio.FIRST_COMPLETED
+                )
+                tasks.difference_update(done)
             t = asyncio.get_running_loop().create_task(
                 _handle_line(server, line, writer, wlock)
             )
@@ -113,17 +169,23 @@ async def _serve_connection(server: TraceServer, reader, writer) -> None:
             await asyncio.gather(*tasks, return_exceptions=True)
     finally:
         writer.close()
+        with contextlib.suppress(ConnectionError, OSError):
+            await writer.wait_closed()
 
 
 async def serve_forever(
     server: TraceServer, host: str, port: int,
     ready: Optional["asyncio.Future"] = None,
+    max_line_bytes: int = DEFAULT_MAX_LINE_BYTES,
 ) -> None:
     """Run the TCP front end until cancelled (``server`` must be started).
     ``ready``, when given, resolves to the bound ``(host, port)`` — pass
-    ``port=0`` for an ephemeral port and read the real one from it."""
+    ``port=0`` for an ephemeral port and read the real one from it.
+    ``max_line_bytes`` bounds both a single request line and the
+    per-connection read buffer."""
     tcp = await asyncio.start_server(
-        lambda r, w: _serve_connection(server, r, w), host, port
+        lambda r, w: _serve_connection(server, r, w), host, port,
+        limit=max_line_bytes,
     )
     addr = tcp.sockets[0].getsockname()
     print(f"serving on {addr[0]}:{addr[1]} "
@@ -198,7 +260,8 @@ async def _main_async(args) -> None:
             info = server.warmup(lengths, models=names)
             print(f"warmup: {info['geometries']} geometries, "
                   f"{info['aot_compiled']} AOT-compiled")
-        await serve_forever(server, args.host, args.port)
+        await serve_forever(server, args.host, args.port,
+                            max_line_bytes=args.max_line_bytes)
 
 
 def main(argv=None) -> None:
@@ -216,6 +279,10 @@ def main(argv=None) -> None:
                     choices=("numpy", "pallas"))
     ap.add_argument("--warmup", default=None,
                     help="comma-separated trace lengths to AOT-compile for")
+    ap.add_argument("--max-line-bytes", type=int,
+                    default=DEFAULT_MAX_LINE_BYTES,
+                    help="longest accepted request line (and the "
+                         "per-connection read-buffer cap)")
     ap.add_argument("--demo", action="store_true",
                     help="self-contained in-process demo (no store needed)")
     args = ap.parse_args(argv)

@@ -1,0 +1,33 @@
+"""Fault injection + resilience primitives (see docs/resilience.md).
+
+Four pieces, each deliberately tiny and jax-free:
+
+  * :mod:`.faults` — ``FaultPlan``/``inject()``/``fault_point()``: a
+    deterministic, seedable chaos harness armed over named sites threaded
+    through the store, engine, scheduler, serve, and launch layers.
+  * :mod:`.retry` — ``RetryPolicy`` (bounded exponential backoff) and the
+    transient-vs-poison failure classifier the server's dispatch uses.
+  * :mod:`.breaker` — a per-``model/geometry`` ``CircuitBreaker`` that
+    sheds load with ``retry_after_s`` instead of queueing doomed work.
+  * :mod:`.manifest` — crash-resume progress manifests for sweeps and
+    training, published through the artifact store.  (Imported lazily —
+    ``from repro.resilience import manifest`` — because it pulls in the
+    store package, which itself hooks ``fault_point``.)
+"""
+from __future__ import annotations
+
+from .breaker import CircuitBreaker
+from .faults import SITES, FaultError, FaultPlan, FaultSpec, fault_point, inject
+from .retry import RetryPolicy, is_transient
+
+__all__ = [
+    "SITES",
+    "CircuitBreaker",
+    "FaultError",
+    "FaultPlan",
+    "FaultSpec",
+    "RetryPolicy",
+    "fault_point",
+    "inject",
+    "is_transient",
+]

@@ -38,6 +38,17 @@ The server is asyncio-native and single-loop: ``submit``/``stats`` must
 run on the event loop thread; feature extraction and device dispatch are
 pushed to small executors (extraction eagerly on accelerator backends,
 inline with dispatch on CPU — the sweep scheduler's measured policy).
+
+Failure handling (see docs/resilience.md): requests carry deadlines
+(queued-too-long or hung-on-device both fail ``DEADLINE_EXCEEDED``, and
+a hung dispatch thread is abandoned, not joined); transient dispatch
+failures retry with bounded exponential backoff (``RetryPolicy``);
+deterministic failures are isolated by batch bisection — the poison
+trace's digest is quarantined and rejected with ``TRACE_REJECTED`` while
+cohabitant requests of the same dispatch group re-run bit-identically;
+and a per-``model/geometry`` circuit breaker sheds admissions with
+``CIRCUIT_OPEN`` + ``retry_after_s`` after repeated hard failures
+instead of queueing doomed work.
 """
 from __future__ import annotations
 
@@ -57,6 +68,9 @@ from ..core.features import extract_features
 from ..engine.metrics import DEFAULT_METRICS, resolve_metrics
 from ..engine.plan import ExecutionPlan
 from ..engine.runner import EngineConfig
+from ..resilience.breaker import CircuitBreaker
+from ..resilience.faults import fault_point
+from ..resilience.retry import RetryPolicy, is_transient
 from ..store.content import array_digest, content_key
 from .registry import ModelRegistry
 from .types import ServeError, ServeRequest, ServeResult, ServerStats
@@ -79,6 +93,8 @@ class _Pending:
     t_submit: float
     coalesced: bool = False
     extract_s: float = 0.0
+    attempts: int = 0                # dispatch tries so far (retry counter)
+    deadline_at: Optional[float] = None   # perf_counter() bound, or None
 
 
 class _Bucket:
@@ -131,6 +147,7 @@ class _Bucket:
 
 _LATENCY_WINDOW = 4096   # completions kept for the percentile estimators
 _FEATURE_CACHE = 64      # trace digests whose features stay resident
+_QUARANTINE_CAP = 256    # poison trace digests remembered (LRU)
 
 
 class TraceServer:
@@ -159,9 +176,16 @@ class TraceServer:
         plan: Optional[ExecutionPlan] = None,
         mesh=None,
         extract_async: Optional[bool] = None,
+        deadline_s: Optional[float] = None,
+        retry: Optional[RetryPolicy] = None,
+        breaker_threshold: int = 8,
+        breaker_cooldown_s: float = 1.0,
+        group_size: int = 1,
     ):
         if max_queue < 1:
             raise ValueError(f"max_queue must be >= 1, got {max_queue}")
+        if group_size < 1:
+            raise ValueError(f"group_size must be >= 1, got {group_size}")
         self.registry = registry
         self.batch_size = batch_size
         self.feature_backend = feature_backend
@@ -182,6 +206,19 @@ class TraceServer:
             extract_async = jax.default_backend() != "cpu"
         self.extract_async = extract_async
 
+        # resilience: deadlines, bounded retry, per-key breakers, poison
+        # quarantine, and the dispatch group size batch bisection splits
+        self.deadline_s = deadline_s
+        self.retry = retry if retry is not None else RetryPolicy()
+        self.group_size = group_size
+        self._breaker_threshold = breaker_threshold
+        self._breaker_cooldown_s = breaker_cooldown_s
+        self._breakers: Dict[str, CircuitBreaker] = {}
+        self._quarantine: "collections.OrderedDict[str, str]" = (
+            collections.OrderedDict()
+        )
+        self._requeues = 0                  # backoff timers not yet re-queued
+
         self._buckets: "collections.OrderedDict[tuple, _Bucket]" = (
             collections.OrderedDict()
         )
@@ -192,6 +229,7 @@ class TraceServer:
         self._task: Optional[asyncio.Task] = None
         self._stopping = False
         self._draining = False
+        self._killing = False               # stop(drain=False): fail requeues
         self._started_at: Optional[float] = None
 
         # feature coalescing: trace digest -> executor future of FeatureSet
@@ -212,7 +250,8 @@ class TraceServer:
         self.counters: Dict[str, int] = {
             "admitted": 0, "completed": 0, "failed": 0, "rejected": 0,
             "features_extracted": 0, "features_from_store": 0,
-            "features_coalesced": 0,
+            "features_coalesced": 0, "retries": 0, "deadline_exceeded": 0,
+            "quarantined": 0, "bisections": 0, "breaker_sheds": 0,
         }
         self._tenants: Dict[str, Dict[str, int]] = {}
         self._lat_total: "collections.deque" = collections.deque(
@@ -235,10 +274,12 @@ class TraceServer:
         return self
 
     async def stop(self, *, drain: bool = True) -> None:
-        """Stop admitting; ``drain=True`` serves the queue out first,
+        """Stop admitting; ``drain=True`` serves the queue out first
+        (including retries still waiting on their backoff timers),
         ``drain=False`` fails queued requests with SHUTTING_DOWN."""
         self._stopping = True
         if not drain:
+            self._killing = True
             while True:
                 p = self._next()
                 if p is None:
@@ -255,6 +296,10 @@ class TraceServer:
         self._extract_pool.shutdown(wait=True)
         self._dispatch_pool.shutdown(wait=True)
 
+    async def shutdown(self, *, drain: bool = True) -> None:
+        """Alias for :meth:`stop` (the operator-facing verb)."""
+        await self.stop(drain=drain)
+
     async def __aenter__(self) -> "TraceServer":
         return await self.start()
 
@@ -268,6 +313,7 @@ class TraceServer:
         """Admit one request (event-loop thread only).  Returns a future
         resolving to a ``ServeResult``; raises ``ServeError`` — QUEUE_FULL
         (with ``retry_after_s``), UNKNOWN_MODEL, BAD_REQUEST,
+        TRACE_REJECTED (quarantined poison digest), CIRCUIT_OPEN,
         SHUTTING_DOWN — when the request is not admitted at all."""
         if self._stopping:
             raise ServeError("SHUTTING_DOWN", "server is shutting down")
@@ -306,6 +352,28 @@ class TraceServer:
         digest = (
             trace.digest if hasattr(trace, "digest") else array_digest(arr)
         )
+        if digest in self._quarantine:
+            self.counters["rejected"] += 1
+            self._tenant(req.tenant)["rejected"] += 1
+            raise ServeError(
+                "TRACE_REJECTED",
+                f"trace {digest[:12]} is quarantined "
+                f"({self._quarantine[digest]})",
+                request_id=req.request_id,
+            )
+        br = self._breakers.get(f"{req.model}/{label}")
+        if br is not None and not br.allow():
+            self.counters["breaker_sheds"] += 1
+            self.counters["rejected"] += 1
+            self._tenant(req.tenant)["rejected"] += 1
+            raise ServeError(
+                "CIRCUIT_OPEN",
+                f"circuit open for {req.model}/{label} "
+                f"({br.failures} consecutive failures)",
+                retry_after_s=br.retry_after_s,
+                request_id=req.request_id,
+            )
+        dl = req.deadline_s if req.deadline_s is not None else self.deadline_s
         p = _Pending(
             req=req,
             future=asyncio.get_running_loop().create_future(),
@@ -317,6 +385,8 @@ class TraceServer:
             geometry=label,
             t_submit=time.perf_counter(),
         )
+        if dl is not None:
+            p.deadline_at = p.t_submit + dl
         bkey = (model.cfg, w_eff, specs)
         bucket = self._buckets.get(bkey)
         if bucket is None:
@@ -387,6 +457,7 @@ class TraceServer:
         """Runs on the extract pool: store lookup, else extract + publish
         (the identical key scheme as TraceSweeper / TrainedModel, so the
         server shares warm entries with every other consumer)."""
+        fault_point("serve.extract", payload=digest)
         key = content_key("features", digest, cfg.features)
         if self.store is not None:
             hit = self.store.get("features", key)
@@ -420,37 +491,138 @@ class TraceServer:
                 "GEOMETRY_MISMATCH", str(e), request_id=p.req.request_id
             ) from None
 
-    async def _dispatch(self, p: _Pending) -> None:
-        loop = asyncio.get_running_loop()
-        t_start = time.perf_counter()
-        try:
-            features = None
-            if self.feature_backend == "numpy":
-                t_f = time.perf_counter()
-                features = await self._feature_entry(p)
-                p.extract_s = time.perf_counter() - t_f
-            engine = self._engine_for(p)
-            entry = engine.step_entry_for(p.n)
-            if id(entry) not in self._step_entries:
-                self._step_entries[id(entry)] = entry
-                self._step_baseline[id(entry)] = entry.compiles
-            res = await loop.run_in_executor(
-                self._dispatch_pool, engine.simulate, p.trace_arr, features
+    def _next_group(self) -> List[_Pending]:
+        """The next dispatch group: the fairness pick plus up to
+        ``group_size - 1`` more requests from the same bucket (they share
+        an executable, so they form one continuous batch — and one
+        bisection domain when something in it fails)."""
+        group: List[_Pending] = []
+        p = self._next()
+        if p is None:
+            return group
+        group.append(p)
+        if self.group_size > 1:
+            b = self._buckets.get(
+                (p.model.cfg, min(p.model.cfg.window, p.n), p.specs)
             )
-        except BaseException as e:
-            self._fail(p, ServeError.wrap(e, request_id=p.req.request_id))
+            while b is not None and len(group) < self.group_size:
+                q = b.pop_next()
+                if q is None:
+                    break
+                self._depth -= 1
+                group.append(q)
+        return group
+
+    # dispatch-pool thread: the whole group runs as one unit — a failure
+    # anywhere aborts the batch (as a real poisoned device batch would),
+    # and the async side bisects to isolate the culprit
+    def _simulate_group(self, items: List[tuple]) -> List[object]:
+        out = []
+        for p, features, engine in items:
+            fault_point("serve.dispatch", payload=p.digest)
+            out.append(engine.simulate(p.trace_arr, features))
+        return out
+
+    def _breaker_for(self, p: _Pending) -> CircuitBreaker:
+        key = f"{p.req.model}/{p.geometry}"
+        br = self._breakers.get(key)
+        if br is None:
+            br = CircuitBreaker(
+                failure_threshold=self._breaker_threshold,
+                cooldown_s=self._breaker_cooldown_s,
+            )
+            self._breakers[key] = br
+        return br
+
+    def _expire(self, p: _Pending) -> None:
+        self.counters["deadline_exceeded"] += 1
+        self._breaker_for(p).record_failure()
+        self._fail(p, ServeError(
+            "DEADLINE_EXCEEDED",
+            f"request exceeded its deadline after {p.attempts + 1} "
+            "dispatch attempt(s)",
+            request_id=p.req.request_id,
+        ))
+
+    def _requeue(self, p: _Pending) -> None:
+        """Backoff timer fired: put the request back in its bucket (or
+        fail it when the server was killed without draining)."""
+        self._requeues -= 1
+        if self._killing:
+            self._fail(p, ServeError(
+                "SHUTTING_DOWN", "server is shutting down",
+                request_id=p.req.request_id,
+            ))
             return
-        t_done = time.perf_counter()
-        self._service_ema = (
-            (t_done - t_start) if self._service_ema is None
-            else 0.8 * self._service_ema + 0.2 * (t_done - t_start)
+        bkey = (p.model.cfg, min(p.model.cfg.window, p.n), p.specs)
+        bucket = self._buckets.get(bkey)
+        if bucket is None:
+            bucket = _Bucket(p.geometry)
+            self._buckets[bkey] = bucket
+        bucket.push(p)
+        self._depth += 1
+        self._wake.set()
+
+    def _on_failure(self, p: _Pending, exc: BaseException) -> None:
+        """Classify a singleton dispatch failure: fatal (ServeError) /
+        transient (bounded backoff retry) / poison (quarantine digest,
+        reject TRACE_REJECTED)."""
+        if isinstance(exc, ServeError):
+            self._fail(p, exc)
+            return
+        if is_transient(exc):
+            p.attempts += 1
+            now = time.perf_counter()
+            delay = self.retry.delay(p.attempts)
+            budget_ok = (
+                p.deadline_at is None or now + delay < p.deadline_at
+            )
+            if p.attempts < self.retry.max_attempts and budget_ok:
+                self.counters["retries"] += 1
+                self._requeues += 1
+                asyncio.get_running_loop().call_later(
+                    delay, self._requeue, p
+                )
+                return
+            self._breaker_for(p).record_failure()
+            self._fail(p, ServeError.wrap(exc, request_id=p.req.request_id))
+            return
+        # deterministic poison: remember the digest so resubmits are shed
+        # at admission (the tenant's input is at fault, not capacity — the
+        # breaker does not count it)
+        self._quarantine[p.digest] = type(exc).__name__
+        while len(self._quarantine) > _QUARANTINE_CAP:
+            self._quarantine.popitem(last=False)
+        self.counters["quarantined"] += 1
+        self._fail(p, ServeError(
+            "TRACE_REJECTED",
+            f"trace {p.digest[:12]} poisons its batch "
+            f"({type(exc).__name__}) and was quarantined",
+            request_id=p.req.request_id,
+        ))
+
+    def _abandon_pool(self, pool: ThreadPoolExecutor) -> None:
+        """A dispatch hung past its deadline: abandon the pool (and the
+        thread stuck inside it) so the next dispatch is not head-of-line
+        blocked behind the hang."""
+        if pool is self._dispatch_pool:
+            self._dispatch_pool = ThreadPoolExecutor(
+                max_workers=1, thread_name_prefix="serve-dispatch"
+            )
+        pool.shutdown(wait=False)
+
+    def _complete(self, p: _Pending, res, t_start: float, t_done: float) -> None:
+        bucket = self._buckets.get(
+            (p.model.cfg, min(p.model.cfg.window, p.n), p.specs)
         )
-        bucket = self._buckets.get((p.model.cfg, min(p.model.cfg.window, p.n), p.specs))
         if bucket is not None:
             bucket.served += 1
             nw = num_windows(p.n, p.model.cfg.window, p.model.cfg.window)
             nb = -(-nw // self.batch_size)
             bucket.fill_sum += nw / (nb * self.batch_size)
+        br = self._breakers.get(f"{p.req.model}/{p.geometry}")
+        if br is not None:
+            br.record_success()
         self.counters["completed"] += 1
         self._tenant(p.req.tenant)["completed"] += 1
         self._lat_total.append(t_done - p.t_submit)
@@ -471,6 +643,92 @@ class TraceServer:
         if not p.future.done():
             p.future.set_result(result)
 
+    async def _run_batch(self, group: List[_Pending]) -> None:
+        """Resolve features/engines for a dispatch group and execute it.
+        Per-request failures here (feature extraction, engine resolution)
+        go through the retry/quarantine classifier without touching the
+        group's healthy members."""
+        t_start = time.perf_counter()
+        items: List[tuple] = []
+        for p in group:
+            if p.deadline_at is not None and t_start >= p.deadline_at:
+                self._expire(p)          # spent its budget in the queue
+                continue
+            try:
+                features = None
+                if self.feature_backend == "numpy":
+                    t_f = time.perf_counter()
+                    features = await self._feature_entry(p)
+                    p.extract_s += time.perf_counter() - t_f
+                engine = self._engine_for(p)
+                entry = engine.step_entry_for(p.n)
+                if id(entry) not in self._step_entries:
+                    self._step_entries[id(entry)] = entry
+                    self._step_baseline[id(entry)] = entry.compiles
+                items.append((p, features, engine))
+            except BaseException as e:
+                # a failed extraction future must not poison the cache
+                # for later requests of the same digest
+                self._feat_cache.pop(p.digest, None)
+                self._on_failure(p, e)
+        if items:
+            await self._run_items(items, t_start)
+
+    async def _run_items(self, items: List[tuple], t_start: float) -> None:
+        loop = asyncio.get_running_loop()
+        timeout = None
+        for p, _, _ in items:
+            if p.deadline_at is not None:
+                rem = p.deadline_at - time.perf_counter()
+                timeout = rem if timeout is None else min(timeout, rem)
+        pool = self._dispatch_pool
+        fut = loop.run_in_executor(pool, self._simulate_group, items)
+        try:
+            if timeout is not None:
+                results = await asyncio.wait_for(fut, max(timeout, 0.001))
+            else:
+                results = await fut
+        except asyncio.TimeoutError as e:
+            if timeout is None:
+                # an injected/engine TimeoutError, not the deadline guard
+                await self._on_group_error(items, e, t_start)
+                return
+            self._abandon_pool(pool)
+            now = time.perf_counter()
+            for p, features, engine in items:
+                if p.deadline_at is not None and now >= p.deadline_at:
+                    self._expire(p)
+                else:
+                    # cohabitant of the hung request: re-run on the fresh
+                    # pool (simulate is pure — results are bit-identical)
+                    await self._run_items([(p, features, engine)], t_start)
+            return
+        except BaseException as e:
+            await self._on_group_error(items, e, t_start)
+            return
+        t_done = time.perf_counter()
+        self._service_ema = (
+            (t_done - t_start) if self._service_ema is None
+            else 0.8 * self._service_ema + 0.2 * (t_done - t_start)
+        )
+        for (p, _, _), res in zip(items, results):
+            self._complete(p, res, t_start, t_done)
+
+    async def _on_group_error(
+        self, items: List[tuple], exc: BaseException, t_start: float
+    ) -> None:
+        """Batch bisection: a group failure names no culprit (a poisoned
+        device batch aborts wholesale), so split and re-run each half —
+        re-simulation is pure, so survivors stay bit-identical — until
+        the failure pins to a singleton, which the classifier handles."""
+        if len(items) == 1:
+            self._on_failure(items[0][0], exc)
+            return
+        self.counters["bisections"] += 1
+        mid = len(items) // 2
+        await self._run_items(items[:mid], t_start)
+        await self._run_items(items[mid:], t_start)
+
     def _fail(self, p: _Pending, err: ServeError) -> None:
         self.counters["failed"] += 1
         self._tenant(p.req.tenant)["failed"] += 1
@@ -480,16 +738,20 @@ class TraceServer:
     # tao: hot
     async def _run(self) -> None:
         while True:
-            p = self._next()
-            if p is None:
+            group = self._next_group()
+            if not group:
                 if self._draining:
-                    break
+                    if self._requeues == 0:
+                        break
+                    # retries are parked on backoff timers; let them land
+                    await asyncio.sleep(0.005)
+                    continue
                 self._wake.clear()
                 await self._wake.wait()
                 continue
             for b in self._buckets.values():
                 b.sample_occupancy()
-            await self._dispatch(p)
+            await self._run_batch(group)
 
     # ---- operations ------------------------------------------------------
 
@@ -604,6 +866,12 @@ class TraceServer:
             batch_fill_ratio=sum(fills) / served if served else 0.0,
             plan_kind=plan.kind,
             num_shards=plan.num_shards,
+            retries=self.counters["retries"],
+            deadline_exceeded=self.counters["deadline_exceeded"],
+            quarantined=self.counters["quarantined"],
+            bisections=self.counters["bisections"],
+            breaker_sheds=self.counters["breaker_sheds"],
+            breakers={k: b.snapshot() for k, b in self._breakers.items()},
             per_geometry=per_geo,
             per_tenant={k: dict(v) for k, v in self._tenants.items()},
         )

@@ -79,6 +79,11 @@ def decode_trace(payload: Dict[str, Any]) -> np.ndarray:
 #   METRIC_NOT_COMPUTED requested metric absent from the run's spec set
 #   METRIC_NOT_COLLECTED per-instruction array kept on device
 #   SHUTTING_DOWN       server draining; request not admitted
+#   DEADLINE_EXCEEDED   the per-request deadline elapsed before completion
+#   TRACE_REJECTED      trace quarantined: it deterministically poisons a
+#                       batch (bisection isolated it; resubmits are shed)
+#   CIRCUIT_OPEN        the model/geometry breaker is open; shed with
+#                       retry_after_s instead of queueing doomed work
 #   INTERNAL            anything else (detail stays in server logs)
 ERROR_CODES = (
     "QUEUE_FULL",
@@ -88,6 +93,9 @@ ERROR_CODES = (
     "METRIC_NOT_COMPUTED",
     "METRIC_NOT_COLLECTED",
     "SHUTTING_DOWN",
+    "DEADLINE_EXCEEDED",
+    "TRACE_REJECTED",
+    "CIRCUIT_OPEN",
     "INTERNAL",
 )
 
@@ -172,6 +180,10 @@ class ServeRequest:
     tenant: str = "default"
     metrics: Optional[Tuple] = None     # names / MetricSpec instances
     request_id: Optional[str] = None    # assigned at admission when None
+    # per-request deadline (seconds from admission; None = the server's
+    # default).  Past it the request fails DEADLINE_EXCEEDED — whether it
+    # is still queued or hung on the device.
+    deadline_s: Optional[float] = None
 
 
 @dataclasses.dataclass
@@ -221,6 +233,13 @@ class ServerStats:
     ratio (real windows / padded batch slots — 1.0 means every executable
     launch was full).  Latency percentiles are over a bounded window of
     recent completions.
+
+    Degradation is observable, not silent: ``retries`` (transient-failure
+    redispatches), ``deadline_exceeded``, ``quarantined`` (poison traces
+    isolated by batch bisection), ``bisections`` (split rounds run),
+    ``breaker_sheds`` (admissions refused by an open circuit), and
+    ``breakers`` (per ``model/geometry`` breaker snapshots) count every
+    resilience action the server took.
     """
 
     uptime_s: float
@@ -242,6 +261,12 @@ class ServerStats:
     batch_fill_ratio: float
     plan_kind: str
     num_shards: int
+    retries: int
+    deadline_exceeded: int
+    quarantined: int
+    bisections: int
+    breaker_sheds: int
+    breakers: Dict[str, Dict[str, Any]]
     per_geometry: Dict[str, Dict[str, Any]]
     per_tenant: Dict[str, Dict[str, int]]
 

@@ -54,10 +54,36 @@ import time
 from typing import Any, Dict, Iterator, List, Optional, Tuple
 
 from ..ckpt.checkpoint import load_array_tree, write_array_tree
+from ..resilience.faults import fault_point
 
 __all__ = ["ArtifactStore", "features_to_tree", "tree_to_features"]
 
 _PIN_PREFIX = ".pin-"
+
+
+class _PinLease:
+    """One held pin marker.  Truthy when the marker landed (the entry
+    existed at pin time).  ``release()`` is idempotent: an explicit
+    release followed by the context-manager exit (or any double-unpin)
+    is a no-op, never an unlink of a namesake marker."""
+
+    __slots__ = ("path", "pinned")
+
+    def __init__(self, path: str, pinned: bool):
+        self.path = path
+        self.pinned = pinned
+
+    def __bool__(self) -> bool:
+        return self.pinned
+
+    def release(self) -> None:
+        if not self.pinned:
+            return
+        self.pinned = False
+        try:
+            os.unlink(self.path)
+        except OSError:
+            pass
 
 
 def features_to_tree(fs) -> Dict[str, Any]:
@@ -106,6 +132,7 @@ class ArtifactStore:
             "corrupt_dropped": 0,
             "evicted": 0,
             "gc_pin_skips": 0,
+            "stale_pins_swept": 0,
         }
         self._nonce = 0
 
@@ -132,10 +159,13 @@ class ArtifactStore:
     def pin(self, kind: str, key: str):
         """Hold a read-lock on one entry: while the context is open, no
         ``gc`` sharing this root (any process on this host) will evict it.
-        Yields True when the pin landed, False when the entry does not
-        exist (already evicted / never published) — the caller recomputes.
-        Pins are advisory markers tied to this pid; a crash leaves a stale
-        marker that the next ``gc`` sweeps once the pid is gone."""
+        Yields a truthy ``_PinLease`` when the pin landed, a falsy one
+        when the entry does not exist (already evicted / never published)
+        — the caller recomputes.  The lease's ``release()`` may be called
+        early (and repeatedly: it is idempotent, so the context exit after
+        an explicit release is a no-op).  Pins are advisory markers tied
+        to this pid; a crash leaves a stale marker that the next ``gc``
+        sweeps once the pid is gone."""
         self._nonce += 1
         pinfile = os.path.join(
             self._entry_dir(kind, key),
@@ -146,14 +176,11 @@ class ArtifactStore:
             pinned = True
         except OSError:  # entry dir vanished (or pinfile collision)
             pinned = False
+        lease = _PinLease(pinfile, pinned)
         try:
-            yield pinned
+            yield lease
         finally:
-            if pinned:
-                try:
-                    os.unlink(pinfile)
-                except OSError:
-                    pass
+            lease.release()
 
     @staticmethod
     def _pid_alive(pid: int) -> bool:
@@ -165,14 +192,15 @@ class ArtifactStore:
             return True
         return True
 
-    def _has_live_pin(self, edir: str) -> bool:
-        """True when any pin marker in the entry belongs to a live pid;
-        markers from dead pids are swept as a side effect."""
-        live = False
+    def _sweep_stale_pins(self, edir: str) -> Tuple[bool, int]:
+        """``(any live pin, stale markers removed)`` for one entry dir.
+        Markers from dead pids (readers that were SIGKILLed mid-hold) are
+        unlinked; anything unparseable is treated as stale too."""
+        live, swept = False, 0
         try:
             names = os.listdir(edir)
         except OSError:
-            return False
+            return False, 0
         for name in names:
             if not name.startswith(_PIN_PREFIX):
                 continue
@@ -185,9 +213,15 @@ class ArtifactStore:
             else:
                 try:
                     os.unlink(os.path.join(edir, name))
+                    swept += 1
                 except OSError:
                     pass
-        return live
+        return live, swept
+
+    def _has_live_pin(self, edir: str) -> bool:
+        """True when any pin marker in the entry belongs to a live pid;
+        markers from dead pids are swept as a side effect."""
+        return self._sweep_stale_pins(edir)[0]
 
     # ---- core API --------------------------------------------------------
 
@@ -236,6 +270,7 @@ class ArtifactStore:
                 self.counters["misses"] += 1
                 return None
             try:
+                fault_point("store.load", payload=key)
                 tree, extra = load_array_tree(path)
             except Exception:
                 shutil.rmtree(path, ignore_errors=True)
@@ -315,9 +350,10 @@ class ArtifactStore:
         max_bytes: Optional[int] = None,
         max_age_s: Optional[float] = None,
     ) -> Dict[str, int]:
-        """Drop stale tmp dirs, then entries: first anything unused for
-        longer than ``max_age_s``, then least-recently-used entries until
-        the total is within ``max_bytes``."""
+        """Drop stale tmp dirs and dead-pid pin markers, then entries:
+        first anything unused for longer than ``max_age_s``, then
+        least-recently-used entries until the total is within
+        ``max_bytes``."""
         dropped = 0
         tmp_root = os.path.join(self.root, "tmp")
         now = time.time()
@@ -330,6 +366,13 @@ class ArtifactStore:
                 continue
 
         entries = sorted(self._entries(), key=lambda e: e[2])  # LRU first
+        # sweep dead-pid pin markers over EVERY entry, not just the ones
+        # under eviction pressure — a pin left by a SIGKILLed reader must
+        # not outlive the next gc regardless of cache size or entry age
+        stale = 0
+        for edir, _, _ in entries:
+            stale += self._sweep_stale_pins(edir)[1]
+        self.counters["stale_pins_swept"] += stale
         total = sum(sz for _, sz, _ in entries)
         keep = []
         for edir, size, mtime in entries:
@@ -354,4 +397,4 @@ class ArtifactStore:
                 total -= size
                 dropped += 1
         self.counters["evicted"] += dropped
-        return {"evicted": dropped, "bytes": total}
+        return {"evicted": dropped, "bytes": total, "stale_pins": stale}

@@ -1,0 +1,841 @@
+"""Chaos suite for the PR-9 resilience layer.
+
+Every fault class the harness models is driven end to end through the
+real production paths (no mocks): deterministic fault injection
+(`repro.resilience.faults`) arms named sites inside the store, engine,
+sweep scheduler, trace server, and TCP front end, and the tests assert
+the documented failure semantics — transient faults retry to a
+bit-identical success, poison traces are isolated by batch bisection and
+quarantined, hung dispatches expire against their deadline without
+wedging the server, repeated hard failures trip the per-model/geometry
+circuit breaker (and its cooldown recovers), SIGKILL-style interruptions
+of sweeps and training resume from progress manifests with zero
+redundant work and bit-identical results, and a hostile TCP peer gets a
+structured error plus a clean close, never a stack trace.
+"""
+from __future__ import annotations
+
+import asyncio
+import json
+import os
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.api import (
+    ArtifactStore,
+    ModelRegistry,
+    ServeError,
+    ServeRequest,
+    ServeResult,
+    Session,
+    TraceServer,
+    TrainedModel,
+)
+from repro.core import FeatureConfig, TaoConfig, init_tao
+from repro.core.transfer import train_tao_impl
+from repro.engine import EngineConfig
+from repro.engine.scheduler import SweepJob, TraceSweeper
+from repro.launch.serve import serve_forever
+from repro.resilience import (
+    CircuitBreaker,
+    FaultError,
+    FaultPlan,
+    FaultSpec,
+    RetryPolicy,
+    fault_point,
+    inject,
+    is_transient,
+)
+from repro.serve import encode_trace
+from repro.serve.types import ERROR_CODES
+from repro.store import content_key
+from repro.uarch import UARCH_A
+
+CFG = TaoConfig(
+    window=9, d_model=16, n_heads=2, n_layers=1, d_ff=32, d_cat=8,
+    features=FeatureConfig(n_buckets=64, n_queue=4, n_mem=8),
+)
+
+
+@pytest.fixture(scope="module")
+def sess():
+    return Session(CFG)
+
+
+@pytest.fixture(scope="module")
+def traces(sess):
+    # long/mid share the w9 geometry bucket; extra is a third distinct
+    # digest in the same bucket (bisection tests need cohabitants)
+    return {
+        "long": sess.capture("mcf", 1200),
+        "mid": sess.capture("dee", 600),
+        "extra": sess.capture("mcf", 300),
+    }
+
+
+@pytest.fixture(scope="module")
+def models():
+    return {
+        name: TrainedModel(
+            params=init_tao(jax.random.PRNGKey(i), CFG), cfg=CFG, name=name
+        )
+        for i, name in enumerate(("base", "tuned"))
+    }
+
+
+@pytest.fixture()
+def registry(models):
+    reg = ModelRegistry()
+    for name, m in models.items():
+        reg.register(name, m)
+    return reg
+
+
+def _serve(coro):
+    return asyncio.run(coro)
+
+
+def _same_metrics(a, b) -> bool:
+    return set(a) == set(b) and all(
+        np.array_equal(np.asarray(a[k]), np.asarray(b[k])) for k in a
+    )
+
+
+# ---------------------------------------------------------------------------
+# Harness: deterministic firing rules, arming discipline
+# ---------------------------------------------------------------------------
+
+
+def test_fault_spec_after_times_and_match():
+    plan = FaultPlan(FaultSpec("site.a", after=2, times=2, message="boom"))
+    fired = []
+    with inject(plan):
+        for i in range(6):
+            try:
+                fault_point("site.a", payload=f"p{i}")
+                fired.append(False)
+            except FaultError as e:
+                fired.append(True)
+                assert e.site == "site.a" and e.transient
+                assert "boom" in str(e)
+        fault_point("site.b")                     # unarmed site: no-op
+    assert fired == [False, False, True, True, False, False]
+    assert plan.hits == {"site.a": 6, "site.b": 1}
+    assert [site for site, _, _ in plan.fired] == ["site.a", "site.a"]
+
+    plan2 = FaultPlan(
+        FaultSpec("s", match="poison", times=None, transient=False)
+    )
+    with inject(plan2):
+        fault_point("s", payload="healthy-digest")       # no match, no fire
+        with pytest.raises(FaultError) as ei:
+            fault_point("s", payload="poison-digest")
+        assert not ei.value.transient
+    fault_point("s", payload="poison-digest")     # disarmed after the block
+
+
+def test_fault_plan_seeded_probability_deterministic():
+    def fire_seq(seed):
+        plan = FaultPlan(FaultSpec("s", p=0.5, times=None), seed=seed)
+        out = []
+        with inject(plan):
+            for _ in range(64):
+                try:
+                    fault_point("s")
+                    out.append(0)
+                except FaultError:
+                    out.append(1)
+        return out
+
+    assert fire_seq(3) == fire_seq(3)             # same seed, same chaos
+    assert 0 < sum(fire_seq(3)) < 64
+    assert fire_seq(3) != fire_seq(4)
+
+
+def test_fault_delay_kind_sleeps_instead_of_raising():
+    plan = FaultPlan(FaultSpec("s", kind="delay", delay_s=0.05))
+    with inject(plan):
+        t0 = time.perf_counter()
+        fault_point("s")                          # sleeps, does not raise
+        assert time.perf_counter() - t0 >= 0.04
+        fault_point("s")                          # times=1: second hit clean
+
+
+def test_inject_non_reentrant_and_none_passthrough():
+    fault_point("anything")                       # unarmed: free no-op
+    with inject(None):                            # None plan: pass-through
+        fault_point("anything")
+    with inject(FaultPlan(FaultSpec("s"))):
+        with pytest.raises(RuntimeError, match="already injected"):
+            with inject(FaultPlan()):
+                pass
+    with inject(FaultPlan()):                     # released after exit
+        pass
+
+
+def test_fault_plan_from_env(monkeypatch):
+    monkeypatch.delenv("REPRO_FAULT_PLAN", raising=False)
+    assert FaultPlan.from_env() is None
+    monkeypatch.setenv("REPRO_FAULT_PLAN", json.dumps({
+        "seed": 9,
+        "faults": [{"site": "serve.dispatch", "times": 2, "exc": "OSError"}],
+    }))
+    plan = FaultPlan.from_env()
+    assert plan.seed == 9
+    assert plan.faults[0].site == "serve.dispatch"
+    assert plan.faults[0].times == 2 and plan.faults[0].exc == "OSError"
+    # the exception vocabulary is closed (env plans cannot name arbitrary
+    # types) and the kind vocabulary is checked
+    with pytest.raises(ValueError, match="unknown fault exception"):
+        FaultSpec("s", exc="SystemExit")
+    with pytest.raises(ValueError, match="kind"):
+        FaultSpec("s", kind="explode")
+
+
+def test_retry_policy_schedule_and_classifier():
+    rp = RetryPolicy(max_attempts=4, base_delay_s=0.01, multiplier=2.0,
+                     max_delay_s=0.03)
+    assert rp.delay(1) == pytest.approx(0.01)
+    assert rp.delay(2) == pytest.approx(0.02)
+    assert rp.delay(3) == pytest.approx(0.03)     # capped
+    assert rp.delay(4) == pytest.approx(0.03)
+    with pytest.raises(ValueError):
+        RetryPolicy(max_attempts=0)
+    assert is_transient(FaultError("s", transient=True))
+    assert not is_transient(FaultError("s", transient=False))
+    assert is_transient(OSError("flaky"))
+    assert is_transient(ConnectionResetError())
+    assert is_transient(TimeoutError())
+    assert not is_transient(ValueError("poison"))
+
+
+def test_circuit_breaker_state_machine():
+    t = [0.0]
+    br = CircuitBreaker(failure_threshold=2, cooldown_s=1.0,
+                        clock=lambda: t[0])
+    assert br.allow() and br.state == "closed"
+    br.record_failure()
+    assert br.state == "closed" and br.allow()
+    br.record_failure()                           # threshold: trips open
+    assert br.state == "open" and br.trips == 1
+    assert not br.allow()
+    assert br.retry_after_s == pytest.approx(1.0)
+    t[0] = 1.5
+    assert br.allow()                             # half-open: one probe
+    assert not br.allow()                         # second probe is shed
+    br.record_failure()                           # probe failed: re-open
+    assert br.state == "open" and br.trips == 2
+    t[0] = 3.0
+    assert br.allow()
+    br.record_success()
+    assert br.state == "closed" and br.failures == 0
+    snap = json.loads(json.dumps(br.snapshot()))  # JSON-clean for stats
+    assert snap["state"] == "closed" and snap["trips"] == 2
+    with pytest.raises(ValueError):
+        CircuitBreaker(failure_threshold=0)
+
+
+# ---------------------------------------------------------------------------
+# Server: transient retry, poison bisection, deadlines, breaker
+# ---------------------------------------------------------------------------
+
+
+def test_transient_dispatch_fault_retries_to_success(registry, traces,
+                                                     models):
+    plan = FaultPlan(FaultSpec("serve.dispatch", times=2))  # transient
+
+    async def run():
+        server = TraceServer(
+            registry, batch_size=8,
+            retry=RetryPolicy(max_attempts=3, base_delay_s=0.005),
+        )
+        async with server:
+            with inject(plan):
+                r = await server.submit(
+                    ServeRequest(model="base", trace=traces["long"])
+                )
+            return r, server.stats()
+
+    r, stats = _serve(run())
+    assert isinstance(r, ServeResult)
+    assert stats.retries == 2 and stats.completed == 1 and stats.failed == 0
+    direct = models["base"].simulate(traces["long"], batch_size=8)
+    assert _same_metrics(r.metrics, direct.metrics)  # retry is bit-identical
+
+
+def test_transient_extract_fault_retries_without_poisoning_cache(
+        registry, traces, models):
+    plan = FaultPlan(FaultSpec("serve.extract", times=1, exc="OSError"))
+
+    async def run():
+        server = TraceServer(
+            registry, batch_size=8,
+            retry=RetryPolicy(max_attempts=3, base_delay_s=0.005),
+        )
+        async with server:
+            with inject(plan):
+                r1 = await server.submit(
+                    ServeRequest(model="base", trace=traces["mid"])
+                )
+            # the failed extraction future must not stay cached: a second
+            # request for the same digest extracts (or coalesces) cleanly
+            r2 = await server.submit(
+                ServeRequest(model="tuned", trace=traces["mid"])
+            )
+            return r1, r2, server.stats()
+
+    r1, r2, stats = _serve(run())
+    assert stats.retries >= 1 and stats.failed == 0
+    direct = models["base"].simulate(traces["mid"], batch_size=8)
+    assert _same_metrics(r1.metrics, direct.metrics)
+    assert r2.num_instructions == direct.num_instructions
+
+
+def test_poison_trace_bisected_quarantined_cohabitants_unharmed(
+        registry, traces, models):
+    poison = traces["mid"]
+    plan = FaultPlan(FaultSpec(
+        "serve.dispatch", match=poison.digest, times=None,
+        transient=False, exc="ValueError",
+    ))
+
+    async def run():
+        server = TraceServer(registry, batch_size=8, group_size=4)
+        async with server:
+            with inject(plan):
+                futs = [
+                    server.submit(ServeRequest(model="base", trace=tr))
+                    for tr in (traces["long"], poison, traces["extra"])
+                ]
+                out = await asyncio.gather(*futs, return_exceptions=True)
+                # the quarantined digest is shed at admission on resubmit
+                with pytest.raises(ServeError) as ei:
+                    server.submit(ServeRequest(model="base", trace=poison))
+                assert ei.value.code == "TRACE_REJECTED"
+                # and the server keeps serving other traces
+                again = await server.submit(
+                    ServeRequest(model="base", trace=traces["extra"])
+                )
+            return out, again, server.stats()
+
+    (r_long, r_poison, r_extra), again, stats = _serve(run())
+    assert isinstance(r_poison, ServeError)
+    assert r_poison.code == "TRACE_REJECTED"
+    assert stats.quarantined == 1 and stats.bisections >= 1
+    assert stats.retries == 0                     # poison is never retried
+    # cohabitants of the poisoned dispatch group re-ran bit-identically
+    for r, key in ((r_long, "long"), (r_extra, "extra"), (again, "extra")):
+        direct = models["base"].simulate(traces[key], batch_size=8)
+        assert _same_metrics(r.metrics, direct.metrics)
+
+
+def test_deadline_exceeded_on_hung_dispatch_then_recovers(registry, traces):
+    # one dispatch hangs well past the request deadline: the request fails
+    # DEADLINE_EXCEEDED, the hung pool is abandoned, and the very next
+    # request is served on a fresh dispatch thread
+    plan = FaultPlan(FaultSpec(
+        "serve.dispatch", kind="delay", delay_s=0.8, times=1,
+    ))
+
+    async def run():
+        server = TraceServer(registry, batch_size=8)
+        async with server:
+            with inject(plan):
+                with pytest.raises(ServeError) as ei:
+                    await server.submit(ServeRequest(
+                        model="base", trace=traces["long"], deadline_s=0.15,
+                    ))
+                assert ei.value.code == "DEADLINE_EXCEEDED"
+                r = await server.submit(
+                    ServeRequest(model="base", trace=traces["extra"])
+                )
+            return r, server.stats()
+
+    r, stats = _serve(run())
+    assert stats.deadline_exceeded == 1
+    assert stats.completed == 1 and isinstance(r, ServeResult)
+
+
+def test_deadline_spent_in_queue_expires_without_dispatch(registry, traces):
+    async def run():
+        server = TraceServer(registry, batch_size=8, deadline_s=0.0)
+        async with server:
+            with pytest.raises(ServeError) as ei:
+                await server.submit(
+                    ServeRequest(model="base", trace=traces["extra"])
+                )
+            assert ei.value.code == "DEADLINE_EXCEEDED"
+            # a per-request deadline overrides the server default
+            r = await server.submit(ServeRequest(
+                model="base", trace=traces["extra"], deadline_s=30.0,
+            ))
+            return r, server.stats()
+
+    r, stats = _serve(run())
+    assert stats.deadline_exceeded == 1 and stats.completed == 1
+
+
+def test_breaker_trips_sheds_and_recovers_after_cooldown(registry, traces,
+                                                         models):
+    # 4 injected failures = 2 requests x 2 attempts: both exhaust their
+    # retries, which is exactly the breaker threshold
+    plan = FaultPlan(FaultSpec("serve.dispatch", times=4, transient=True))
+
+    async def run():
+        server = TraceServer(
+            registry, batch_size=8,
+            retry=RetryPolicy(max_attempts=2, base_delay_s=0.002),
+            breaker_threshold=2, breaker_cooldown_s=0.25,
+        )
+        async with server:
+            with inject(plan):
+                for _ in range(2):
+                    with pytest.raises(ServeError) as ei:
+                        await server.submit(ServeRequest(
+                            model="base", trace=traces["long"],
+                        ))
+                    assert ei.value.code == "INTERNAL"
+                # breaker open: admissions shed with a backoff hint
+                with pytest.raises(ServeError) as ei:
+                    server.submit(
+                        ServeRequest(model="base", trace=traces["long"])
+                    )
+                assert ei.value.code == "CIRCUIT_OPEN"
+                assert ei.value.retry_after_s is not None
+                assert ei.value.retry_after_s > 0
+                open_stats = server.stats()
+                # cooldown elapses; the half-open probe succeeds (the plan
+                # is exhausted) and closes the breaker
+                await asyncio.sleep(0.3)
+                r = await server.submit(
+                    ServeRequest(model="base", trace=traces["long"])
+                )
+            return open_stats, r, server.stats()
+
+    open_stats, r, stats = _serve(run())
+    assert open_stats.breaker_sheds == 1 and open_stats.retries == 2
+    assert open_stats.breakers["base/w9b8"]["state"] == "open"
+    assert stats.breakers["base/w9b8"]["state"] == "closed"
+    direct = models["base"].simulate(traces["long"], batch_size=8)
+    assert _same_metrics(r.metrics, direct.metrics)
+    # the new counters are part of the JSON wire contract
+    sd = json.loads(json.dumps(stats.to_dict()))
+    for k in ("retries", "deadline_exceeded", "quarantined", "bisections",
+              "breaker_sheds", "breakers"):
+        assert k in sd, k
+    assert sd["breakers"]["base/w9b8"]["trips"] == 1
+
+
+def test_chaos_smoke_mixed_load_stays_available(registry, traces):
+    """The CI chaos-smoke entry: under REPRO_FAULT_PLAN (or a default
+    transient-fault plan) every request either completes or fails with a
+    stable ServeError code, the books balance, and the server serves
+    clean traffic afterwards."""
+    plan = FaultPlan.from_env() or FaultPlan(
+        FaultSpec("serve.dispatch", times=2),
+        FaultSpec("serve.extract", times=1, exc="OSError"),
+        seed=7,
+    )
+
+    async def run():
+        server = TraceServer(
+            registry, batch_size=8,
+            retry=RetryPolicy(max_attempts=3, base_delay_s=0.005),
+        )
+        async with server:
+            with inject(plan):
+                futs = [
+                    server.submit(ServeRequest(
+                        model=("base", "tuned")[i % 2],
+                        trace=traces[("long", "mid", "extra")[i % 3]],
+                        tenant=f"t{i % 3}",
+                    ))
+                    for i in range(6)
+                ]
+                out = await asyncio.gather(*futs, return_exceptions=True)
+            # plan disarmed: the server must serve clean traffic
+            r = await server.submit(
+                ServeRequest(model="base", trace=traces["extra"])
+            )
+            return out, r, server.stats()
+
+    out, r, stats = _serve(run())
+    assert sum(plan.hits.values()) > 0            # the chaos actually ran
+    for item in out:
+        if isinstance(item, BaseException):
+            assert isinstance(item, ServeError), item
+            assert item.code in ERROR_CODES
+        else:
+            assert isinstance(item, ServeResult)
+    assert isinstance(r, ServeResult)
+    assert stats.admitted == stats.completed + stats.failed
+
+
+# ---------------------------------------------------------------------------
+# Shutdown racing in-flight work
+# ---------------------------------------------------------------------------
+
+
+def test_shutdown_drain_serves_admitted_but_unbatched(registry, traces):
+    async def run():
+        server = TraceServer(registry, batch_size=8)
+        await server.start()
+        futs = [
+            server.submit(ServeRequest(model="base", trace=traces["extra"],
+                                       request_id=f"d{i}"))
+            for i in range(3)
+        ]
+        # shutdown races the admitted-but-unbatched requests: drain=True
+        # must serve every one of them before the loop exits
+        await server.shutdown(drain=True)
+        return await asyncio.gather(*futs), server.stats()
+
+    results, stats = _serve(run())
+    assert all(isinstance(r, ServeResult) for r in results)
+    assert stats.completed == 3 and stats.failed == 0
+
+
+def test_shutdown_drain_waits_for_parked_retry(registry, traces):
+    plan = FaultPlan(FaultSpec("serve.dispatch", times=1))
+
+    async def run():
+        server = TraceServer(
+            registry, batch_size=8,
+            retry=RetryPolicy(max_attempts=3, base_delay_s=0.05),
+        )
+        await server.start()
+        with inject(plan):
+            fut = server.submit(
+                ServeRequest(model="base", trace=traces["extra"])
+            )
+            # the drain loop must wait out the backoff timer, not exit
+            # while the retry is parked on it
+            await server.shutdown(drain=True)
+            r = await fut
+        return r, server.stats()
+
+    r, stats = _serve(run())
+    assert isinstance(r, ServeResult)
+    assert stats.retries == 1 and stats.failed == 0
+
+
+def test_shutdown_kill_fails_parked_retry_with_stable_code(registry, traces):
+    plan = FaultPlan(FaultSpec("serve.dispatch", times=None, transient=True))
+
+    async def run():
+        server = TraceServer(
+            registry, batch_size=8,
+            retry=RetryPolicy(max_attempts=10, base_delay_s=0.2),
+        )
+        await server.start()
+        with inject(plan):
+            fut = server.submit(
+                ServeRequest(model="base", trace=traces["extra"])
+            )
+            await server.stop(drain=False)
+            with pytest.raises(ServeError) as ei:
+                await fut
+            assert ei.value.code == "SHUTTING_DOWN"
+
+    _serve(run())
+
+
+# ---------------------------------------------------------------------------
+# Sweeper: producer death, crash-resume manifests
+# ---------------------------------------------------------------------------
+
+
+def test_sweeper_producer_thread_death_surfaces_no_hang(traces):
+    params = init_tao(jax.random.PRNGKey(4), CFG)
+    jobs = [
+        SweepJob("m/a", params, traces["long"].functional),
+        SweepJob("m/b", params, traces["mid"].functional),
+    ]
+    sweeper = TraceSweeper(
+        CFG, EngineConfig(batch_size=8), async_prepare=True,
+    )
+    plan = FaultPlan(FaultSpec("scheduler.prepare", exc="RuntimeError"))
+    with inject(plan), pytest.raises(RuntimeError, match="injected fault"):
+        sweeper.run(jobs)
+
+
+def test_sweep_resume_skips_done_jobs_bit_identical(tmp_path, traces):
+    st = ArtifactStore(str(tmp_path / "s"))
+    p1 = init_tao(jax.random.PRNGKey(5), CFG)
+    p2 = init_tao(jax.random.PRNGKey(6), CFG)
+    t1 = traces["long"].functional
+    t2 = traces["mid"].functional
+
+    def jobs():
+        return [
+            SweepJob("m1/a", p1, t1), SweepJob("m1/b", p1, t2),
+            SweepJob("m2/a", p2, t1), SweepJob("m2/b", p2, t2),
+        ]
+
+    ref = TraceSweeper(CFG, EngineConfig(batch_size=8)).run(jobs())
+
+    # "SIGKILL" mid-sweep: the 3rd consume dies after 2 jobs published
+    plan = FaultPlan(FaultSpec(
+        "scheduler.consume", after=2, times=1, exc="RuntimeError",
+    ))
+    crashed = TraceSweeper(CFG, EngineConfig(batch_size=8), store=st)
+    with inject(plan), pytest.raises(RuntimeError, match="injected fault"):
+        crashed.run(jobs(), resume_key="dse-run")
+
+    # resume: the done set loads from manifests; only the remainder runs,
+    # and its features come from the store (0 redundant extractions)
+    resumed = TraceSweeper(CFG, EngineConfig(batch_size=8), store=st).run(
+        jobs(), resume_key="dse-run"
+    )
+    assert resumed.jobs_skipped == 2
+    assert resumed.features_extracted == 0
+    assert resumed.num_traces == 4
+    assert set(resumed.results) == {"m1/a", "m1/b", "m2/a", "m2/b"}
+    for key, r in ref.results.items():
+        assert _same_metrics(r.metrics, resumed.results[key].metrics), key
+
+    # a fully-complete resume is pure manifest replay: no device work at all
+    replay = TraceSweeper(CFG, EngineConfig(batch_size=8), store=st).run(
+        jobs(), resume_key="dse-run"
+    )
+    assert replay.jobs_skipped == 4
+    assert replay.num_compiles == 0 and replay.features_extracted == 0
+    for key, r in ref.results.items():
+        assert _same_metrics(r.metrics, replay.results[key].metrics), key
+
+    with pytest.raises(ValueError, match="store"):
+        TraceSweeper(CFG, EngineConfig(batch_size=8)).run(
+            jobs(), resume_key="no-store"
+        )
+
+
+# ---------------------------------------------------------------------------
+# Training: crash-resume manifests, bit-identical trajectories
+# ---------------------------------------------------------------------------
+
+
+def test_train_resume_bit_identical(tmp_path):
+    s = Session(CFG, batch_size=8)
+    tr = s.capture("dee", 900)
+    ds = s.dataset(UARCH_A, [tr])
+    base = train_tao_impl(CFG, ds, epochs=3, batch_size=8, lr=1e-3, seed=0)
+
+    st = ArtifactStore(str(tmp_path / "ck"))
+    # "crash" after epoch 0: run one epoch with manifests on
+    part = train_tao_impl(CFG, ds, epochs=1, batch_size=8, lr=1e-3, seed=0,
+                          store=st, resume_key="run")
+    assert part.losses == base.losses[:1]
+
+    # resume to 3 epochs: losses, params, and step count all match the
+    # uninterrupted run exactly (shuffle rng state resumes mid-stream)
+    resumed = train_tao_impl(CFG, ds, epochs=3, batch_size=8, lr=1e-3,
+                             seed=0, store=st, resume_key="run")
+    assert resumed.losses == base.losses
+    assert resumed.steps == base.steps
+    for a, b in zip(jax.tree.leaves(base.params),
+                    jax.tree.leaves(resumed.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    # re-running a finished recipe replays the final manifest: zero epochs
+    again = train_tao_impl(CFG, ds, epochs=3, batch_size=8, lr=1e-3,
+                           seed=0, store=st, resume_key="run")
+    assert again.losses == base.losses and again.steps == base.steps
+    for a, b in zip(jax.tree.leaves(base.params),
+                    jax.tree.leaves(again.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    with pytest.raises(ValueError, match="manifest_every"):
+        train_tao_impl(CFG, ds, epochs=1, batch_size=8, store=st,
+                       resume_key="run", manifest_every=0)
+
+
+# ---------------------------------------------------------------------------
+# Store: load faults as misses, pin-lease idempotence, dead-pid sweep
+# ---------------------------------------------------------------------------
+
+
+def test_store_load_fault_is_corruption_miss_then_recovers(tmp_path):
+    st = ArtifactStore(str(tmp_path / "s"))
+    key = content_key("features", "z")
+    st.put("features", key, {"x": np.arange(4.0)})
+    with inject(FaultPlan(FaultSpec("store.load", times=1, exc="OSError"))):
+        assert st.get("features", key) is None    # fault -> miss, never raise
+    assert st.counters["corrupt_dropped"] == 1
+    assert st.put("features", key, {"x": np.arange(4.0)})  # recompute+reput
+    tree, _ = st.get("features", key)
+    np.testing.assert_array_equal(tree["x"], np.arange(4.0))
+
+
+def test_store_load_fault_sweep_recovers_bit_identical(tmp_path, traces):
+    st = ArtifactStore(str(tmp_path / "s"))
+    params = init_tao(jax.random.PRNGKey(7), CFG)
+
+    def jobs():
+        return [SweepJob("m/t", params, traces["mid"].functional)]
+
+    warm = TraceSweeper(CFG, EngineConfig(batch_size=8), store=st).run(jobs())
+    assert warm.features_extracted == 1
+    # the warm store entry "corrupts" on load: the sweep re-extracts and
+    # the result is bit-identical
+    with inject(FaultPlan(FaultSpec("store.load", times=1))):
+        rep = TraceSweeper(CFG, EngineConfig(batch_size=8), store=st).run(
+            jobs()
+        )
+    assert rep.features_extracted == 1 and rep.features_from_store == 0
+    assert st.counters["corrupt_dropped"] == 1
+    assert _same_metrics(warm.results["m/t"].metrics,
+                         rep.results["m/t"].metrics)
+
+
+def test_store_pin_lease_double_release_idempotent(tmp_path):
+    st = ArtifactStore(str(tmp_path / "s"))
+    k = content_key("features", "p")
+    st.put("features", k, {"x": np.arange(3.0)})
+    edir = st._entry_dir("features", k)
+
+    def pins():
+        return [n for n in os.listdir(edir) if n.startswith(".pin-")]
+
+    with st.pin("features", k) as lease:
+        assert lease and len(pins()) == 1
+        lease.release()                           # early release
+        assert pins() == []
+        lease.release()                           # double-unpin: no-op
+        assert pins() == []
+    assert pins() == []                           # context exit: still a no-op
+    st.gc(max_age_s=0.0)
+    assert not st.has("features", k)              # nothing left blocking GC
+
+
+def test_store_plain_gc_sweeps_dead_pid_pins(tmp_path):
+    # regression: a SIGKILLed reader's pin marker must not survive even a
+    # no-pressure gc() (no byte budget, no age bound)
+    st = ArtifactStore(str(tmp_path / "s"))
+    k = content_key("features", "held")
+    st.put("features", k, {"x": np.arange(3.0)})
+    edir = st._entry_dir("features", k)
+    open(os.path.join(edir, ".pin-999999999-3"), "x").close()
+    out = st.gc()                                 # no eviction pressure at all
+    assert out["stale_pins"] == 1
+    assert st.counters["stale_pins_swept"] == 1
+    assert not [n for n in os.listdir(edir) if n.startswith(".pin-")]
+    assert st.has("features", k)                  # the entry itself survives
+
+
+# ---------------------------------------------------------------------------
+# TCP front end: hostile input gets structured errors + clean closes
+# ---------------------------------------------------------------------------
+
+
+def test_tcp_oversized_line_structured_error_and_close(registry):
+    async def run():
+        server = TraceServer(registry, batch_size=8)
+        async with server:
+            ready = asyncio.get_running_loop().create_future()
+            tcp = asyncio.get_running_loop().create_task(
+                serve_forever(server, "127.0.0.1", 0, ready,
+                              max_line_bytes=1024))
+            _, port = await ready
+            reader, writer = await asyncio.open_connection("127.0.0.1", port)
+            writer.write(b"x" * 4096 + b"\n")
+            await writer.drain()
+            resp = json.loads(await reader.readline())
+            eof = await reader.readline()
+            writer.close()
+            tcp.cancel()
+        return resp, eof
+
+    resp, eof = _serve(run())
+    assert resp["ok"] is False and resp["error"] == "BAD_REQUEST"
+    assert "line" in resp["message"]
+    assert eof == b""                             # server closed cleanly
+
+
+def test_tcp_truncated_request_structured_error(registry):
+    async def run():
+        server = TraceServer(registry, batch_size=8)
+        async with server:
+            ready = asyncio.get_running_loop().create_future()
+            tcp = asyncio.get_running_loop().create_task(
+                serve_forever(server, "127.0.0.1", 0, ready))
+            _, port = await ready
+            reader, writer = await asyncio.open_connection("127.0.0.1", port)
+            writer.write(b'{"op": "stats"')       # no newline, then EOF
+            await writer.drain()
+            writer.write_eof()
+            resp = json.loads(await reader.readline())
+            eof = await reader.readline()
+            writer.close()
+            tcp.cancel()
+        return resp, eof
+
+    resp, eof = _serve(run())
+    assert resp["ok"] is False and resp["error"] == "BAD_REQUEST"
+    assert "truncated" in resp["message"]
+    assert eof == b""
+
+
+def test_tcp_disconnect_mid_request_server_survives(registry, traces):
+    async def run():
+        server = TraceServer(registry, batch_size=8)
+        async with server:
+            ready = asyncio.get_running_loop().create_future()
+            tcp = asyncio.get_running_loop().create_task(
+                serve_forever(server, "127.0.0.1", 0, ready))
+            _, port = await ready
+
+            # tenant 1 fires a simulate and slams the connection shut: the
+            # reply hits a dead socket (fault-boundary), nothing leaks
+            r1, w1 = await asyncio.open_connection("127.0.0.1", port)
+            w1.write(json.dumps({
+                "op": "simulate", "model": "base",
+                "trace": encode_trace(traces["extra"].functional),
+            }).encode() + b"\n")
+            await w1.drain()
+            w1.transport.abort()
+
+            # tenant 2 on a fresh connection is unaffected
+            r2, w2 = await asyncio.open_connection("127.0.0.1", port)
+            w2.write(b'{"op": "stats"}\n')
+            await w2.drain()
+            resp = json.loads(await r2.readline())
+            w2.close()
+            tcp.cancel()
+        return resp, server.stats()
+
+    resp, stats = _serve(run())
+    assert resp["ok"] is True and "stats" in resp
+    assert stats.admitted >= 1                    # the aborted request ran
+
+
+def test_tcp_reply_fault_drops_only_that_response(registry):
+    plan = FaultPlan(FaultSpec("tcp.reply", times=1,
+                               exc="ConnectionResetError"))
+
+    async def run():
+        server = TraceServer(registry, batch_size=8)
+        async with server:
+            ready = asyncio.get_running_loop().create_future()
+            tcp = asyncio.get_running_loop().create_task(
+                serve_forever(server, "127.0.0.1", 0, ready))
+            _, port = await ready
+            reader, writer = await asyncio.open_connection("127.0.0.1", port)
+            with inject(plan):
+                writer.write(b'{"op": "models"}\n')  # reply write faults
+                writer.write(b'{"op": "models"}\n')  # this one lands
+                await writer.drain()
+                resp = json.loads(await reader.readline())
+            # the connection is still healthy after the dropped reply
+            writer.write(b'{"op": "stats"}\n')
+            await writer.drain()
+            resp2 = json.loads(await reader.readline())
+            writer.close()
+            tcp.cancel()
+        return resp, resp2
+
+    resp, resp2 = _serve(run())
+    assert resp["ok"] is True and resp["models"] == ["base", "tuned"]
+    assert resp2["ok"] is True and "stats" in resp2
