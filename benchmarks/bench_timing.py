@@ -8,6 +8,11 @@
   * §4.2 feature-extraction throughput: host NumPy (`extract_features`) vs
     the device Pallas scan kernels (`extract_features_device`), plus the
     fused engine (`feature_backend="pallas"`) vs the host pre-pass
+  * the trace->logits megakernel (`feature_backend="fused"`, asserted
+    bit-identical to the staged path) and the int8 W8A8 engine, each with
+    end-to-end MIPS and host->device bytes/instr (the committed baseline
+    `benchmarks/baselines/BENCH_timing.json` + `check_regression` gate
+    these rows in CI)
   * the Table-4 ratio: (trace gen + train + simulate) Tao vs SimNet, where
     SimNet is charged detailed-trace generation for every new µarch and Tao
     is charged the reusable functional trace once.
@@ -125,6 +130,27 @@ def run() -> None:
         f"host_prepass_engine_mips={sim2.mips:.4f};"
         f"transfer_bytes_per_instr={host_bpi}->{dev_bpi}"
         f"({host_bpi / dev_bpi:.1f}x less)",
+    )
+
+    # --- fused megakernel backend + int8 quantized path -------------------
+    # Same raw-column payload as the staged backend (dev_bpi), but features
+    # never materialize in HBM: one megakernel launch per batch feeds the
+    # step directly.  fp32 fused is bit-identical to staged by contract.
+    mega = model.engine(batch_size=64, feature_backend="fused")
+    mega.simulate(ft_test)        # warm-up
+    sim_mega = mega.simulate(ft_test)
+    assert sim_mega.cpi == sim_fused.cpi, (sim_mega.cpi, sim_fused.cpi)
+    q8 = model.engine(batch_size=64, feature_backend="fused", precision="int8")
+    q8.simulate(ft_test)          # warm-up (own step: precision is keyed)
+    sim_q8 = q8.simulate(ft_test)
+    q8_err = abs(sim_q8.cpi - sim_mega.cpi) / max(sim_mega.cpi, 1e-9)
+    emit(
+        "fused/megakernel",
+        1e6 / max(sim_mega.mips * 1e6, 1e-9),
+        f"fused_mips={sim_mega.mips:.4f};int8_mips={sim_q8.mips:.4f};"
+        f"staged_mips={sim_fused.mips:.4f};"
+        f"int8_cpi_rel_err={q8_err:.2e};"
+        f"transfer_bytes_per_instr={dev_bpi}",
     )
 
     # SimNet-style: detailed trace for the new µarch + full training + sim

@@ -1,0 +1,130 @@
+"""MIPS regression gate over committed benchmark baselines.
+
+``python -m benchmarks.run --json BENCH_timing.json`` emits rows whose
+``derived`` field carries ``<label>_mips=<value>`` throughput numbers
+(engine, fused megakernel, int8, feature extraction...).  This module
+diffs a fresh run against the checked-in baseline
+(``benchmarks/baselines/BENCH_timing.json``, generated at
+``BENCH_SCALE=tiny`` — the CI bench-smoke geometry) and FAILS when any
+throughput dropped below ``baseline * (1 - tolerance)``.
+
+CI runs it right after the table4 smoke::
+
+    python -m benchmarks.check_regression BENCH_timing.json
+
+The default tolerance is wide (50%) because CI runners are shared,
+noisy machines — the gate catches structural regressions (a lost
+compile-cache hit, an accidental host round-trip, a dead fast path),
+not single-digit jitter.  Override with ``--tolerance`` or
+``$REPRO_BENCH_TOLERANCE``; refresh the baseline with ``--update``
+after an intentional perf-relevant change (commit the result).
+
+Throughputs that only exist on one side are reported but never fail the
+gate: new rows have no baseline yet, and retired rows are the updater's
+job to prune.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import re
+import shutil
+import sys
+from typing import Dict
+
+BASELINE = os.path.join(
+    os.path.dirname(os.path.abspath(__file__)), "baselines", "BENCH_timing.json"
+)
+
+# <label>_mips=<float> fragments inside a row's derived field
+_MIPS_RE = re.compile(r"([A-Za-z0-9_]+_mips)=([0-9.eE+-]+)")
+
+
+def extract_mips(payload: Dict) -> Dict[str, float]:
+    """``{"<row>/<label>_mips": value}`` for every throughput a bench
+    JSON artifact recorded."""
+    out: Dict[str, float] = {}
+    for row in payload.get("rows", []):
+        for label, val in _MIPS_RE.findall(row.get("derived", "")):
+            out[f"{row['name']}/{label}"] = float(val)
+    return out
+
+
+def check(
+    current_path: str,
+    baseline_path: str = BASELINE,
+    tolerance: float = 0.5,
+) -> int:
+    with open(current_path) as f:
+        current = extract_mips(json.load(f))
+    if not os.path.exists(baseline_path):
+        print(f"no baseline at {baseline_path}; run with --update to seed it")
+        return 1
+    with open(baseline_path) as f:
+        base_payload = json.load(f)
+    baseline = extract_mips(base_payload)
+    if base_payload.get("scale") is not None:
+        with open(current_path) as f:
+            cur_scale = json.load(f).get("scale")
+        if cur_scale != base_payload["scale"]:
+            print(
+                f"scale mismatch: baseline={base_payload['scale']!r} "
+                f"current={cur_scale!r} — numbers are not comparable "
+                f"(regenerate the baseline at the same BENCH_SCALE)"
+            )
+            return 1
+
+    failures = 0
+    for key in sorted(set(baseline) | set(current)):
+        b, c = baseline.get(key), current.get(key)
+        if b is None:
+            print(f"  NEW      {key}: {c:.4f} (no baseline)")
+            continue
+        if c is None:
+            print(f"  MISSING  {key}: baseline {b:.4f}, absent from this run")
+            continue
+        floor = b * (1.0 - tolerance)
+        status = "ok" if c >= floor else "REGRESSION"
+        print(
+            f"  {status:<10} {key}: {c:.4f} vs baseline {b:.4f} "
+            f"(floor {floor:.4f})"
+        )
+        failures += status != "ok"
+    if failures:
+        print(
+            f"{failures} throughput(s) below baseline*(1-{tolerance}); "
+            "if intentional, refresh with --update and commit the baseline"
+        )
+        return 1
+    print(f"all {len(baseline)} baselined throughputs within tolerance")
+    return 0
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("current", help="fresh BENCH_*.json from benchmarks.run --json")
+    ap.add_argument("--baseline", default=BASELINE)
+    ap.add_argument(
+        "--tolerance",
+        type=float,
+        default=float(os.environ.get("REPRO_BENCH_TOLERANCE", "0.5")),
+        help="allowed fractional drop below baseline (default 0.5; "
+        "env REPRO_BENCH_TOLERANCE)",
+    )
+    ap.add_argument(
+        "--update",
+        action="store_true",
+        help="copy the current artifact over the baseline instead of checking",
+    )
+    args = ap.parse_args()
+    if args.update:
+        os.makedirs(os.path.dirname(args.baseline), exist_ok=True)
+        shutil.copyfile(args.current, args.baseline)
+        print(f"baseline updated: {args.baseline}")
+        return
+    sys.exit(check(args.current, args.baseline, args.tolerance))
+
+
+if __name__ == "__main__":
+    main()

@@ -148,6 +148,17 @@ class Trace:
         return array_digest(self.functional)
 
 
+def quantized_params_key(params: Dict) -> str:
+    """Content key a params tree's int8 quantization is stored under:
+    derived from the fp32 tree digest plus the scheme version
+    (``core.quant.QUANT_VERSION``), so publish-time scales are shared by
+    every process resolving the model and a scheme bump invalidates stale
+    trees instead of silently reusing them."""
+    from ..core.quant import QUANT_VERSION
+
+    return content_key("params_int8", tree_digest(params), f"v{QUANT_VERSION}")
+
+
 @dataclasses.dataclass
 class TrainedModel:
     """Trained Tao parameters bound to their config: the simulate/transfer
@@ -163,11 +174,12 @@ class TrainedModel:
     seconds: float = 0.0
     steps: int = 0
     # simulate() defaults: Session.train stamps its batch_size,
-    # feature_backend, and ExecutionPlan here so simulate() and
+    # feature_backend, precision, and ExecutionPlan here so simulate() and
     # Session.sweep() compile the same executable and take the same
     # feature/partitioning path
     sim_batch_size: int = 64
     sim_feature_backend: str = "numpy"
+    sim_precision: str = "fp32"
     sim_plan: Optional[ExecutionPlan] = None
     # artifact store stamped by the owning Session: simulate() loads/saves
     # inference features through it, so a warm store skips extraction
@@ -186,7 +198,11 @@ class TrainedModel:
             ecfg = dataclasses.replace(ecfg, **kw)
         engine = self._engines.get(ecfg)
         if engine is None:
-            engine = StreamingEngine(self.params, self.cfg, ecfg)
+            # int8 engines get the published/stored quantized tree so every
+            # process (and the registry's serve path) shares one set of
+            # scales instead of re-deriving them per engine
+            qp = self.quantized_params() if ecfg.precision == "int8" else None
+            engine = StreamingEngine(self.params, self.cfg, ecfg, qparams=qp)
             self._engines[ecfg] = engine
             if len(self._engines) == _ENGINE_CACHE_WARN:
                 warnings.warn(
@@ -208,6 +224,7 @@ class TrainedModel:
         collect: bool = False,
         batch_size: Optional[int] = None,
         feature_backend: Optional[str] = None,
+        precision: Optional[str] = None,
         features: Optional[FeatureSet] = None,
         mesh=None,
         plan: Optional[ExecutionPlan] = None,
@@ -215,7 +232,10 @@ class TrainedModel:
         """Stream one functional trace through the model; ``metrics`` picks
         the device-side ``MetricSpec``s (default CPI + branch/L1D MPKI).
         ``plan=``/``mesh=`` override the model's stamped ``sim_plan``
-        (inherited from ``Session(mesh=...)``)."""
+        (inherited from ``Session(mesh=...)``); ``feature_backend=`` /
+        ``precision=`` likewise override the stamped defaults
+        (``"fused"``/``"int8"`` for the megakernel + W8A8 path —
+        docs/api.md)."""
         if plan is None and mesh is None:
             plan = self.sim_plan
         backend = feature_backend or self.sim_feature_backend
@@ -223,6 +243,7 @@ class TrainedModel:
             batch_size=batch_size if batch_size is not None else self.sim_batch_size,
             collect=collect,
             feature_backend=backend,
+            precision=precision or self.sim_precision,
             mesh=mesh,
             plan=plan,
             metrics=tuple(metrics) if metrics is not None else DEFAULT_METRICS,
@@ -243,6 +264,33 @@ class TrainedModel:
         fs = extract_features(ft, self.cfg.features, with_labels=False)
         self.store.put("features", key, features_to_tree(fs))
         return fs
+
+    def quantized_params(self) -> Dict:
+        """The W8A8 quantized twin of ``params`` (``core/quant.py``):
+        per-channel int8 weights + scales, computed once per model and —
+        when the owning Session stamped an artifact store — persisted
+        content-addressed next to the fp32 tree (the same key
+        ``serve.ModelRegistry.publish`` writes), so any process resolving
+        this model reuses the published scales instead of re-deriving
+        them."""
+        from ..core.quant import quantize_tao_params
+
+        q = getattr(self, "_qparams", None)
+        if q is not None:
+            return q
+        key = quantized_params_key(self.params)
+        if self.store is not None:
+            hit = self.store.get("params_int8", key)
+            if hit is not None:
+                self._qparams = hit[0]
+                return hit[0]
+        q = quantize_tao_params(self.params)
+        if self.store is not None:
+            self.store.put(
+                "params_int8", key, q, {"scheme": "w8a8-per-channel"}
+            )
+        self._qparams = q
+        return q
 
     @property
     def num_compiles(self) -> int:
@@ -284,7 +332,7 @@ class TrainedModel:
         return _model_from_result(
             res, self.cfg, name or f"{self.name}-transfer", uarch,
             self.sim_batch_size, self.sim_feature_backend, self.sim_plan,
-            self.store,
+            self.store, self.sim_precision,
         )
 
 
@@ -297,6 +345,7 @@ def _model_from_result(
     sim_feature_backend: str = "numpy",
     sim_plan: Optional[ExecutionPlan] = None,
     store: Optional[ArtifactStore] = None,
+    sim_precision: str = "fp32",
 ) -> TrainedModel:
     return TrainedModel(
         params=res.params,
@@ -308,6 +357,7 @@ def _model_from_result(
         steps=res.steps,
         sim_batch_size=sim_batch_size,
         sim_feature_backend=sim_feature_backend,
+        sim_precision=sim_precision,
         sim_plan=sim_plan,
         store=store,
     )
@@ -326,6 +376,7 @@ class JointModel:
     steps: int = 0
     sim_batch_size: int = 64          # inherited by head()/transfer() models
     sim_feature_backend: str = "numpy"
+    sim_precision: str = "fp32"
     sim_plan: Optional[ExecutionPlan] = None
     store: Optional[ArtifactStore] = dataclasses.field(
         default=None, repr=False, compare=False
@@ -356,6 +407,7 @@ class JointModel:
             name=name or f"joint-{self.method}-{arch}",
             sim_batch_size=self.sim_batch_size,
             sim_feature_backend=self.sim_feature_backend,
+            sim_precision=self.sim_precision,
             sim_plan=self.sim_plan,
             store=self.store,
         )
@@ -392,7 +444,7 @@ class JointModel:
         return _model_from_result(
             res, self.cfg, name or f"transfer-{self.method}", uarch,
             self.sim_batch_size, self.sim_feature_backend, self.sim_plan,
-            self.store,
+            self.store, self.sim_precision,
         )
 
     def eval_loss(self, batches, arch: str = "A") -> float:
@@ -499,6 +551,7 @@ class Session:
         *,
         batch_size: int = 64,
         feature_backend: str = "numpy",
+        precision: str = "fp32",
         seed: int = 0,
         streaming_threshold: Optional[int] = 1_000_000,
         mesh=None,
@@ -509,6 +562,9 @@ class Session:
         self.cfg = cfg if cfg is not None else TaoConfig()
         self.batch_size = batch_size
         self.feature_backend = feature_backend
+        # Default inference precision stamped onto trained models
+        # ("fp32" | "int8"); training itself always runs fp32.
+        self.precision = precision
         self.seed = seed
         # Content-addressed artifact store (repro.store): captured traces,
         # labeled/inference FeatureSets, detailed-sim summaries, and
@@ -784,6 +840,7 @@ class Session:
                     seconds=0.0, steps=int(extra.get("steps", 0)),
                     sim_batch_size=self.batch_size,
                     sim_feature_backend=self.feature_backend,
+                    sim_precision=self.precision,
                     sim_plan=self.plan, store=self.store,
                 )
         if dataset is None:
@@ -821,7 +878,7 @@ class Session:
         return _model_from_result(
             res, self.cfg, model_name,
             uarch, self.batch_size, self.feature_backend, self.plan,
-            self.store,
+            self.store, self.precision,
         )
 
     def init_model(self, seed: Optional[int] = None, name: str = "init") -> TrainedModel:
@@ -831,6 +888,7 @@ class Session:
             params=init_tao(key, self.cfg), cfg=self.cfg, name=name,
             sim_batch_size=self.batch_size,
             sim_feature_backend=self.feature_backend,
+            sim_precision=self.precision,
             sim_plan=self.plan,
             store=self.store,
         )
@@ -933,6 +991,7 @@ class Session:
             steps=steps,
             sim_batch_size=self.batch_size,
             sim_feature_backend=self.feature_backend,
+            sim_precision=self.precision,
             sim_plan=self.plan,
             store=self.store,
         )
@@ -947,6 +1006,7 @@ class Session:
         metrics: Optional[Metrics] = None,
         batch_size: Optional[int] = None,
         feature_backend: Optional[str] = None,
+        precision: Optional[str] = None,
         collect: bool = False,
         depth: int = 2,
         async_prepare: Optional[bool] = None,
@@ -984,6 +1044,7 @@ class Session:
         ecfg = EngineConfig(
             batch_size=batch_size or self.batch_size,
             feature_backend=feature_backend or self.feature_backend,
+            precision=precision or self.precision,
             collect=collect,
             mesh=mesh,
             plan=plan,
@@ -1046,6 +1107,7 @@ class Session:
                     ecfg = EngineConfig(
                         batch_size=bs,
                         feature_backend=self.feature_backend,
+                        precision=self.precision,
                         collect=collect,
                         plan=plan,
                         metrics=mets,

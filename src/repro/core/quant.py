@@ -1,0 +1,201 @@
+"""int8 W8A8 quantized inference for the Tao model.
+
+Scheme (``docs/kernels.md``):
+
+  * **weights** — symmetric per-output-channel int8: ``scale_j =
+    max|w[:, j]| / 127``, computed ONCE per parameter tree (at
+    ``ModelRegistry.publish`` time or lazily on the first int8 simulate)
+    and stored alongside the fp32 params in the ArtifactStore under a
+    content key derived from the fp32 tree digest, so every process that
+    resolves the model reuses the same scales;
+  * **embedding table** — symmetric per-row int8 (each opcode's vector has
+    its own scale);
+  * **activations** — symmetric per-row *dynamic* int8: the scale is
+    ``max|x|`` over the feature axis at run time (no calibration set
+    needed — simulation batches are full windows, so the row statistics
+    are stable);
+  * **matmuls** — int8 x int8 accumulated in int32
+    (``preferred_element_type``), dequantized by the rank-1 outer product
+    of the two scales;
+  * layernorms, softmax, gelu, the attention probability matmuls, biases,
+    and the latency-bucket argmax decode stay fp32 — they are O(d) work or
+    numerically load-bearing, and keeping them exact is what lets
+    ``bench_accuracy``'s parity gate hold a tight band.
+
+``tao_forward_int8`` mirrors ``core.model.tao_forward`` layer for layer;
+the engine picks between them at trace time from
+``EngineConfig.precision`` (the choice is part of the step-cache key).
+Everything here is traceable, so ``jax.eval_shape(quantize_tao_params,
+abstract_params)`` yields the abstract quantized tree AOT ``warmup()``
+lowers from.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from ..nn.core import gelu, layernorm
+from .model import NUM_LAT_BUCKETS, TaoConfig, _attention, expected_latency
+
+__all__ = [
+    "QUANT_VERSION",
+    "qdense",
+    "qembed",
+    "quantize_dense",
+    "quantize_embed",
+    "quantize_tao_params",
+    "tao_forward_int8",
+]
+
+# Versions the stored quantized trees (ArtifactStore content keys include
+# it): bump on any scheme change so stale scales are recomputed, not reused.
+QUANT_VERSION = 1
+
+
+def _safe_scale(amax: jnp.ndarray) -> jnp.ndarray:
+    # all-zero channels quantize to zeros either way; a unit scale avoids
+    # the 0/0 and keeps the dequant exact
+    return jnp.where(amax > 0.0, amax, 1.0).astype(jnp.float32) / 127.0
+
+
+def quantize_dense(p: Dict) -> Dict:
+    """{"w": (in, out), "b"?} -> {"w_q": int8, "scale": (out,), "b"?}."""
+    w = p["w"]
+    scale = _safe_scale(jnp.max(jnp.abs(w), axis=0))
+    wq = jnp.clip(jnp.round(w / scale), -127, 127).astype(jnp.int8)
+    out = {"w_q": wq, "scale": scale}
+    if "b" in p:
+        out["b"] = p["b"]
+    return out
+
+
+def quantize_embed(p: Dict) -> Dict:
+    """{"table": (vocab, d)} -> per-row int8 table + (vocab,) scales."""
+    t = p["table"]
+    scale = _safe_scale(jnp.max(jnp.abs(t), axis=1))
+    tq = jnp.clip(jnp.round(t / scale[:, None]), -127, 127).astype(jnp.int8)
+    return {"table_q": tq, "scale": scale}
+
+
+def quantize_tao_params(params: Dict) -> Dict:
+    """fp32 Tao parameter tree -> its W8A8 inference twin (per-channel
+    weight int8 + scales; norms/bias/pos stay fp32)."""
+    e = params["embed"]
+    pr = params["pred"]
+    return {
+        "embed": {
+            "opcode": quantize_embed(e["opcode"]),
+            "regbits": quantize_dense(e["regbits"]),
+            "flags": quantize_dense(e["flags"]),
+            "brhist": quantize_dense(e["brhist"]),
+            "memdist": quantize_dense(e["memdist"]),
+            "combine": quantize_dense(e["combine"]),
+        },
+        "adapt": quantize_dense(params["adapt"]),
+        "pred": {
+            "pos": pr["pos"],
+            "blocks": [
+                {
+                    "ln1": dict(b["ln1"]),
+                    "qkv": quantize_dense(b["qkv"]),
+                    "proj": quantize_dense(b["proj"]),
+                    "ln2": dict(b["ln2"]),
+                    "up": quantize_dense(b["up"]),
+                    "down": quantize_dense(b["down"]),
+                }
+                for b in pr["blocks"]
+            ],
+            "ln_f": dict(pr["ln_f"]),
+            "head_lat": quantize_dense(pr["head_lat"]),
+            "head_branch": quantize_dense(pr["head_branch"]),
+            "head_dlevel": quantize_dense(pr["head_dlevel"]),
+            "head_icache": quantize_dense(pr["head_icache"]),
+            "head_tlb": quantize_dense(pr["head_tlb"]),
+        },
+    }
+
+
+def qdense(p: Dict, x: jnp.ndarray) -> jnp.ndarray:
+    """Quantized twin of ``nn.core.dense``: dynamic per-row activation
+    int8, int32 accumulation, fp32 dequant + bias."""
+    sx = _safe_scale(jnp.max(jnp.abs(x), axis=-1, keepdims=True))
+    xq = jnp.clip(jnp.round(x / sx), -127, 127).astype(jnp.int8)
+    y = jax.lax.dot_general(
+        xq,
+        p["w_q"],
+        (((x.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    ).astype(jnp.float32)
+    y = y * (sx * p["scale"])
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+def qembed(p: Dict, ids: jnp.ndarray) -> jnp.ndarray:
+    return p["table_q"][ids].astype(jnp.float32) * p["scale"][ids][..., None]
+
+
+# ---------------------------------------------------------------------------
+# forward — mirrors core.model layer for layer with quantized projections
+# ---------------------------------------------------------------------------
+
+
+def _apply_embed_q(p: Dict, batch: Dict, cfg: TaoConfig) -> jnp.ndarray:
+    cats = [
+        qembed(p["opcode"], batch["opcode"]),
+        qdense(p["regbits"], batch["regbits"]),
+        qdense(p["flags"], batch["flags"]),
+        qdense(p["brhist"], batch["brhist"]),
+        qdense(p["memdist"], batch["memdist"]),
+    ]
+    x = jnp.concatenate(cats, axis=-1)
+    return gelu(qdense(p["combine"], x))
+
+
+def _block_q(p: Dict, h: jnp.ndarray, cfg: TaoConfig, causal: bool) -> jnp.ndarray:
+    B, W, d = h.shape
+    nh, hd = cfg.n_heads, cfg.head_dim
+    x = layernorm(p["ln1"], h)
+    qkv = qdense(p["qkv"], x).reshape(B, W, 3, nh, hd)
+    q, k, v = (qkv[:, :, i].transpose(0, 2, 1, 3) for i in range(3))
+    o = _attention(q, k, v, causal, cfg.use_pallas)
+    o = o.transpose(0, 2, 1, 3).reshape(B, W, d)
+    h = h + qdense(p["proj"], o)
+    x = layernorm(p["ln2"], h)
+    h = h + qdense(p["down"], gelu(qdense(p["up"], x)))
+    return h
+
+
+def _apply_pred_q(
+    p: Dict, h: jnp.ndarray, cfg: TaoConfig, causal: bool = True
+) -> Dict[str, jnp.ndarray]:
+    W = h.shape[1]
+    h = h + p["pos"][:W]
+    for blk in p["blocks"]:
+        h = _block_q(blk, h, cfg, causal)
+    h = layernorm(p["ln_f"], h)
+    lat = qdense(p["head_lat"], h)
+    nb = NUM_LAT_BUCKETS
+    return {
+        "fetch_lat_logits": lat[..., :nb],
+        "exec_lat_logits": lat[..., nb:],
+        "fetch_lat": expected_latency(lat[..., :nb]),
+        "exec_lat": expected_latency(lat[..., nb:]),
+        "mispred_logit": qdense(p["head_branch"], h)[..., 0],
+        "dlevel_logits": qdense(p["head_dlevel"], h),
+        "icache_logit": qdense(p["head_icache"], h)[..., 0],
+        "tlb_logit": qdense(p["head_tlb"], h)[..., 0],
+    }
+
+
+def tao_forward_int8(
+    params: Dict, batch: Dict, cfg: TaoConfig
+) -> Dict[str, jnp.ndarray]:
+    """Quantized twin of ``core.model.tao_forward`` over a tree from
+    ``quantize_tao_params``; same output dict, same shapes/dtypes."""
+    h = _apply_embed_q(params["embed"], batch, cfg)
+    h = qdense(params["adapt"], h)
+    return _apply_pred_q(params["pred"], h, cfg)

@@ -25,6 +25,7 @@ from .plan import AxisContext, ExecutionPlan
 from .runner import (
     FEATURE_BACKENDS,
     PER_INSTRUCTION_KEYS,
+    PRECISIONS,
     EngineConfig,
     MetricNotCollectedError,
     MetricNotComputedError,
@@ -47,6 +48,7 @@ __all__ = [
     "EngineConfig",
     "FEATURE_BACKENDS",
     "PER_INSTRUCTION_KEYS",
+    "PRECISIONS",
     "DEFAULT_METRICS",
     "DEFAULT_PHASE_CHUNKS",
     "METRIC_REGISTRY",

@@ -33,6 +33,17 @@ Design points (each measured by ``benchmarks/bench_timing.py``):
     ``kernels/features/``: raw trace columns are shipped once, features are
     extracted on device, and batches become device-side slices
     (bit-identical to the NumPy path; see docs/engine.md).
+    ``feature_backend="fused"`` goes further: one megakernel launch per
+    batch (``kernels/fused/``) produces the model inputs directly from the
+    raw columns with the scan state carried across batches — features only
+    ever exist at batch granularity, never as an O(trace) FeatureSet in
+    HBM.  Still bit-identical; all three backends share the step cache.
+  * **Precision.**  ``precision="int8"`` swaps the step's forward for the
+    W8A8 quantized twin (``core/quant.py``): per-channel int8 weights +
+    dynamic per-row int8 activations with int32 accumulation.  The
+    quantized tree is computed once per engine (or injected pre-quantized
+    via ``qparams=`` — the ArtifactStore / registry path) and the choice
+    is part of the step-cache key.
 
 ``repro.api.Session`` / ``TrainedModel.simulate`` are the supported entry
 points; ``core.simulate.simulate_trace`` survives as a deprecation shim and
@@ -54,20 +65,23 @@ from ..compat import Mesh, PartitionSpec as P
 from ..core.dataset import INPUT_KEYS, num_windows, stream_batches
 from ..core.features import FeatureSet, extract_features
 from ..core.model import TaoConfig, tao_forward
+from ..core.quant import quantize_tao_params, tao_forward_int8
 from ..uarch.isa import NUM_REGS
 from ..resilience.faults import fault_point
 from .aot import abstract_like, compile_bytes_estimate
 from .metrics import DEFAULT_METRICS, MetricSpec, StepContext, resolve_metrics
 from .plan import ExecutionPlan
 
-# NOTE: repro.kernels.features.ops is imported lazily inside simulate();
-# a module-level import would close an import cycle (kernels.features.ops
-# -> repro.core package init -> core.simulate -> engine.runner) and crash
-# any consumer whose first repro import is the ops module.
+# NOTE: repro.kernels.features.ops / repro.kernels.fused.ops are imported
+# lazily inside simulate(); a module-level import would close an import
+# cycle (kernels.*.ops -> repro.core package init -> core.simulate ->
+# engine.runner) and crash any consumer whose first repro import is the
+# ops module.
 
 __all__ = [
     "EngineConfig",
     "FEATURE_BACKENDS",
+    "PRECISIONS",
     "PER_INSTRUCTION_KEYS",
     "MetricNotCollectedError",
     "MetricNotComputedError",
@@ -191,7 +205,9 @@ def prefetch_to_device(
     return inline()
 
 
-FEATURE_BACKENDS = ("numpy", "pallas")
+FEATURE_BACKENDS = ("numpy", "pallas", "fused")
+
+PRECISIONS = ("fp32", "int8")
 
 # per-instruction prediction arrays the step can emit under collect=True
 PER_INSTRUCTION_KEYS = ("fetch_lat", "exec_lat", "mispred_prob", "dlevel")
@@ -217,12 +233,22 @@ class EngineConfig:
     mesh: Optional[Mesh] = None
     plan: Optional[ExecutionPlan] = None
     # "numpy": host NumPy pre-pass + per-batch host->device transfers.
-    # "pallas": fused device extraction — the trace's int32/bool columns are
-    # shipped once, the Pallas scan kernels compute brhist/memdist on device,
-    # and batches are device-side slices (bit-identical to the NumPy path;
-    # falls back to it when addresses exceed the int32-exact window).
+    # "pallas": staged device extraction — the trace's int32/bool columns
+    # are shipped once, the Pallas scan kernels compute brhist/memdist on
+    # device, and batches are device-side slices of the materialized
+    # feature arrays (bit-identical to the NumPy path; falls back to it
+    # when addresses exceed the int32-exact window).
+    # "fused": one megakernel launch per batch (kernels/fused/) produces
+    # the model inputs straight from the raw columns, scan state carried
+    # across batches — no O(trace) feature materialization (bit-identical;
+    # same NumPy fallback).
     feature_backend: str = "numpy"
     feature_chunk: int = 512     # Pallas scan grid chunk (trace positions)
+    # "fp32": exact float path.  "int8": W8A8 quantized forward — per-
+    # channel int8 weights + dynamic per-row int8 activations, int32
+    # accumulation (core/quant.py; gated on accuracy parity by
+    # bench_accuracy).
+    precision: str = "fp32"
     # device-side accumulators composed into the jitted step: registry names
     # or MetricSpec instances (see engine.metrics / docs/api.md)
     metrics: Tuple[Union[str, MetricSpec], ...] = DEFAULT_METRICS
@@ -421,13 +447,25 @@ class StreamingEngine:
     window length regardless of trace/batch geometry.
     """
 
-    def __init__(self, params: Dict, cfg: TaoConfig, ecfg: EngineConfig = EngineConfig()):
+    def __init__(
+        self,
+        params: Dict,
+        cfg: TaoConfig,
+        ecfg: EngineConfig = EngineConfig(),
+        *,
+        qparams: Optional[Dict] = None,
+    ):
         if ecfg.batch_size < 1:
             raise ValueError(f"batch_size must be >= 1, got {ecfg.batch_size}")
         if ecfg.feature_backend not in FEATURE_BACKENDS:
             raise ValueError(
                 f"feature_backend must be one of {FEATURE_BACKENDS}, "
                 f"got {ecfg.feature_backend!r}"
+            )
+        if ecfg.precision not in PRECISIONS:
+            raise ValueError(
+                f"precision must be one of {PRECISIONS}, "
+                f"got {ecfg.precision!r}"
             )
         if ecfg.feature_chunk < 1:
             raise ValueError(
@@ -449,6 +487,9 @@ class StreamingEngine:
         self.params = params
         self.cfg = cfg
         self.ecfg = ecfg
+        # pre-quantized int8 tree (registry/store path); lazily computed
+        # from the fp32 params otherwise when precision="int8"
+        self._qparams = qparams
         self._steps: Dict[int, _CachedStep] = {}  # effective window -> step
 
     @property
@@ -468,11 +509,14 @@ class StreamingEngine:
         actx = plan.axis_context()
         specs = self._specs
         bsz_global = self.ecfg.batch_size
+        # trace-time branch: the fp32 forward or its W8A8 quantized twin
+        # (the choice is baked into the executable, hence the cache key)
+        forward = tao_forward if self.ecfg.precision == "fp32" else tao_forward_int8
 
         def body(params, carry, batch):
             entry.compiles += 1  # runs at trace time only
             valid = batch["valid"].reshape(-1)
-            out = tao_forward(params, {k: batch[k] for k in INPUT_KEYS}, cfg)
+            out = forward(params, {k: batch[k] for k in INPUT_KEYS}, cfg)
             fetch = jnp.maximum(out["fetch_lat"], 0.0).reshape(-1)
             execl = jnp.maximum(out["exec_lat"], 0.0).reshape(-1)
             misp = jax.nn.sigmoid(out["mispred_logit"]).reshape(-1)
@@ -553,8 +597,9 @@ class StreamingEngine:
         entry = self._steps.get(w_eff)
         if entry is None:
             # Keyed on exactly what the compiled step depends on — notably
-            # NOT prefetch or feature_backend, so "numpy" and "pallas"
-            # engines of the same shape share one executable.  The
+            # NOT prefetch or feature_backend, so "numpy", "pallas", and
+            # "fused" engines of the same shape share one executable
+            # (precision IS keyed: int8 bakes a different forward).  The
             # resolved plan (not the raw mesh) is the partitioning key, so
             # EngineConfig(mesh=m) and EngineConfig(plan=resolve(m)) also
             # share one.
@@ -562,6 +607,7 @@ class StreamingEngine:
                 self.cfg,
                 self.ecfg.batch_size,
                 self.ecfg.collect,
+                self.ecfg.precision,
                 self.plan,
                 self._specs,
                 w_eff,
@@ -658,7 +704,7 @@ class StreamingEngine:
             return entry
         w_eff = min(self.cfg.window, n)
         lowered = entry.fn.lower(
-            abstract_like(self.params),
+            abstract_like(self._run_params()),
             abstract_like(self.init_carry(n)),
             self._abstract_batch(w_eff),
         )
@@ -667,12 +713,31 @@ class StreamingEngine:
         entry.aot = compiled
         return entry
 
+    def _run_params(self):
+        """The parameter tree the step actually consumes: the engine's
+        fp32 tree, or (``precision="int8"``) its quantized twin — the
+        injected pre-quantized ``qparams`` when the api/registry layer
+        resolved one from the ArtifactStore, otherwise computed once here
+        (``jax.eval_shape`` keeps abstract param trees abstract, so AOT
+        warmup works either way)."""
+        if self.ecfg.precision != "int8":
+            return self.params
+        q = self._qparams
+        if q is None:
+            leaves = jax.tree_util.tree_leaves(self.params)
+            if any(isinstance(x, jax.ShapeDtypeStruct) for x in leaves):
+                q = jax.eval_shape(quantize_tao_params, self.params)
+            else:
+                q = quantize_tao_params(self.params)
+            self._qparams = q
+        return q
+
     def _committed_params(self):
-        """Params as committed device arrays (what an AOT executable's
+        """Run params as committed device arrays (what an AOT executable's
         input layout expects); transferred once per engine."""
         p = getattr(self, "_dev_params", None)
         if p is None:
-            p = jax.device_put(self.params)
+            p = jax.device_put(self._run_params())
             self._dev_params = p
         return p
 
@@ -711,6 +776,40 @@ class StreamingEngine:
             # needs them re-laid-out across its batch axes
             yield self.plan.device_put(batch) if self.plan.sharded else batch
 
+    def _fused_batches(
+        self, cols: Dict, w_eff: int, count: int
+    ) -> Iterator[Dict]:
+        """Batch iterator for the "fused" backend: the raw int32/bool
+        columns ship to the device once, then every batch is ONE megakernel
+        launch (``kernels/fused/``) with the scan state carried across
+        batches — model inputs are produced per batch and consumed by the
+        step immediately, so no O(trace) feature materialization ever
+        exists.  Window/padding/validity layout is exactly
+        ``_device_batches``'s (bit-identical by construction)."""
+        from ..kernels.fused.ops import FusedExtractor  # lazy: module note
+
+        bsz = self.ecfg.batch_size
+        nw = count // w_eff
+        nb = -(-nw // bsz)
+        per = bsz * w_eff
+        extractor = FusedExtractor(
+            {k: v[:count] for k, v in cols.items()},
+            self.cfg.features,
+            chunk=self.ecfg.feature_chunk,
+            pad_to=nb * per,
+        )
+        valid = np.zeros((nb * bsz, w_eff), dtype=np.float32)
+        valid[:nw] = 1.0
+        valid = jnp.asarray(valid.reshape(nb, bsz, w_eff))
+        for i in range(nb):
+            feats = extractor.next_batch(per)
+            batch = {
+                k: v.reshape((bsz, w_eff) + v.shape[1:])
+                for k, v in feats.items()
+            }
+            batch["valid"] = valid[i]
+            yield self.plan.device_put(batch) if self.plan.sharded else batch
+
     # tao: hot
     def simulate(
         self,
@@ -734,11 +833,12 @@ class StreamingEngine:
             params = self._committed_params()
         else:
             step = entry.fn
-            params = self.params
+            params = self._run_params()
 
         dev_arrays = None
+        fused_batches = None
         fs = features
-        if fs is None and self.ecfg.feature_backend == "pallas":
+        if fs is None and self.ecfg.feature_backend in ("pallas", "fused"):
             from ..kernels.features.ops import (  # lazy: see module note
                 device_feature_arrays,
                 trace_columns,
@@ -746,13 +846,18 @@ class StreamingEngine:
 
             cols = trace_columns(func_trace, cfg.features)
             if cols is not None:  # addresses fit the int32-exact window
-                dev_arrays = device_feature_arrays(
-                    cols, cfg.features, chunk=self.ecfg.feature_chunk
-                )
-        if fs is None and dev_arrays is None:
+                if self.ecfg.feature_backend == "fused":
+                    fused_batches = self._fused_batches(cols, w_eff, count)
+                else:
+                    dev_arrays = device_feature_arrays(
+                        cols, cfg.features, chunk=self.ecfg.feature_chunk
+                    )
+        if fs is None and dev_arrays is None and fused_batches is None:
             fs = extract_features(func_trace, cfg.features, with_labels=False)
 
-        if dev_arrays is not None:
+        if fused_batches is not None:
+            batches = fused_batches
+        elif dev_arrays is not None:
             batches = self._device_batches(dev_arrays, w_eff, count)
         else:
             host_batches = stream_batches(
@@ -830,6 +935,7 @@ def simulate_trace_engine(
     mesh: Optional[Mesh] = None,
     plan: Optional[ExecutionPlan] = None,
     feature_backend: str = "numpy",
+    precision: str = "fp32",
     metrics: Tuple[Union[str, MetricSpec], ...] = DEFAULT_METRICS,
 ) -> SimulationResult:
     """One-shot convenience wrapper: build an engine, stream one trace."""
@@ -842,6 +948,7 @@ def simulate_trace_engine(
             mesh=mesh,
             plan=plan,
             feature_backend=feature_backend,
+            precision=precision,
             metrics=metrics,
         ),
     )

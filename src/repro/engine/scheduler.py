@@ -82,8 +82,8 @@ class SweepReport:
     num_shards: int = 1           # devices each step fanned out over
     # host feature pre-passes this sweep actually ran vs loaded from the
     # artifact store (0 extracted on a warm store = the zero-cold-start
-    # invariant; both stay 0 on the pallas backend, which extracts on
-    # device per trace)
+    # invariant; both stay 0 on the pallas/fused backends, which extract
+    # on device per trace)
     features_extracted: int = 0
     features_from_store: int = 0
     # jobs satisfied from crash-resume progress manifests (store entries
@@ -192,7 +192,7 @@ class TraceSweeper:
         counts: Dict[str, int],
     ) -> Optional[FeatureSet]:
         fault_point("scheduler.prepare", payload=job.key)
-        if self.ecfg.feature_backend == "pallas":
+        if self.ecfg.feature_backend in ("pallas", "fused"):
             # device-side extraction happens in the consumer (the device is
             # the contended resource); nothing to pre-compute on host.
             return None

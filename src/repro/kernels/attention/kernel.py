@@ -6,8 +6,20 @@ VMEM scratch across k steps.  Block shapes are (block_q, head_dim) /
 (block_k, head_dim) tiles staged HBM->VMEM by BlockSpec; head_dim and the
 block sizes are multiples of 128 to keep the MXU fully utilized.
 
-Causal masking is applied per-tile from absolute positions; fully-masked
-tiles are skipped (the classic flash-attention triangular schedule).
+Causal masking happens at two granularities:
+
+  * **static** — ``q_offset`` and the sequence lengths are trace-time
+    constants, so k-blocks that sit entirely above the causal diagonal for
+    EVERY q-block (``first_k > q_offset + Sq - 1``) are clamped out of the
+    grid itself and never scheduled (zero DMA, zero FLOPs);
+  * **dynamic** — within the clamped grid, a per-tile ``pl.when``
+    predicate skips the remaining fully-masked (qi, ki) tiles of the
+    triangular schedule, and the in-tile position mask handles the
+    diagonal blocks element-wise.
+
+Optional ``segment_ids`` fold a per-tile segment-equality mask into the
+position mask so windows packed back-to-back in one sequence never attend
+across their boundary (the fused backend's batched-window layout).
 """
 from __future__ import annotations
 
@@ -24,17 +36,21 @@ NEG_INF = -1e30
 
 
 def flash_attention_kernel(
-    q_ref, k_ref, v_ref,       # inputs (VMEM tiles)
-    o_ref,                     # output tile
-    m_scr, l_scr, acc_scr,     # VMEM scratch carried over the k grid dim
-    *,
+    *refs,
     block_q: int,
     block_k: int,
     seq_k: int,
     causal: bool,
     q_offset: int,
     scale: float,
+    segmented: bool,
 ):
+    if segmented:
+        q_ref, k_ref, v_ref, segq_ref, segk_ref, o_ref = refs[:6]
+        m_scr, l_scr, acc_scr = refs[6:]
+    else:
+        q_ref, k_ref, v_ref, o_ref = refs[:4]
+        m_scr, l_scr, acc_scr = refs[4:]
     qi = pl.program_id(2)
     ki = pl.program_id(3)
     nk = pl.num_programs(3)
@@ -52,17 +68,15 @@ def flash_attention_kernel(
         jnp.int32, (block_q, block_k), 1
     )
 
-    # Skip tiles that are entirely above the causal diagonal.
-    first_q = q_offset + qi * block_q
-    last_q = first_q + block_q - 1
+    # Fully-above-diagonal tiles: k-blocks masked for EVERY q-block were
+    # already clamped out of the grid (static, see flash_attention_pallas);
+    # the interior triangular skip depends on qi/ki — grid indices — so it
+    # is necessarily a dynamic per-tile predicate.
+    last_q = q_offset + qi * block_q + (block_q - 1)
     first_k = ki * block_k
-    run = True
-    if causal:
-        run = last_q >= first_k  # static per-tile predicate? positions are
-        # trace-time ints only when q_offset is static; keep dynamic:
-        run = jnp.asarray(last_q >= first_k)
+    run = (last_q >= first_k) if causal else (ki >= 0)
 
-    @pl.when(run if causal else jnp.asarray(True))
+    @pl.when(run)
     def _body():
         q = q_ref[0, 0].astype(jnp.float32)          # (bq, d)
         k = k_ref[0, 0].astype(jnp.float32)          # (bk, d)
@@ -72,6 +86,10 @@ def flash_attention_kernel(
         mask = k_pos < seq_k
         if causal:
             mask &= q_pos >= k_pos
+        if segmented:
+            sq = segq_ref[0]                          # (bq,)
+            sk = segk_ref[0]                          # (bk,)
+            mask &= sq[:, None] == sk[None, :]
         s = jnp.where(mask, s, NEG_INF)
 
         m_prev = m_scr[...]                           # (bq, 1)
@@ -99,6 +117,7 @@ def flash_attention_pallas(
     q: jnp.ndarray,
     k: jnp.ndarray,
     v: jnp.ndarray,
+    segment_ids: jnp.ndarray | None = None,
     *,
     causal: bool = True,
     q_offset: int = 0,
@@ -106,7 +125,12 @@ def flash_attention_pallas(
     block_k: int = 128,
     interpret: bool = False,
 ) -> jnp.ndarray:
-    """q,k,v: (B, H, S, D) (GQA already expanded).  Returns (B, H, Sq, D)."""
+    """q,k,v: (B, H, S, D) (GQA already expanded).  Returns (B, H, Sq, D).
+
+    ``segment_ids``: optional (B, Sk) int32 — positions only attend within
+    their own segment (q rows take theirs from ``q_offset + row``, so
+    ``Sq < Sk`` decode-style calls work too).
+    """
     B, H, Sq, D = q.shape
     Sk = k.shape[2]
     Dv = v.shape[3]
@@ -115,10 +139,23 @@ def flash_attention_pallas(
     bk = min(block_k, max(Sk, 8))
     nq = -(-Sq // bq)
     nk = -(-Sk // bk)
+    if causal:
+        # Static diagonal clamp: q_offset/Sq/bk are trace-time ints, so
+        # k-blocks past the last query position (first_k > q_offset+Sq-1,
+        # i.e. masked for ALL q-blocks) are simply never part of the grid.
+        nk = max(1, min(nk, -(-(q_offset + Sq) // bk)))
     qp = jnp.pad(q, ((0, 0), (0, 0), (0, nq * bq - Sq), (0, 0)))
-    kp = jnp.pad(k, ((0, 0), (0, 0), (0, nk * bk - Sk), (0, 0)))
-    vp = jnp.pad(v, ((0, 0), (0, 0), (0, nk * bk - Sk), (0, 0)))
+    # the clamp may leave nk*bk < Sk — those key blocks are dead for every
+    # query, so slice them off (pad only when rounding UP to the tile edge)
+    kv_len = nk * bk
+    if kv_len >= Sk:
+        kp = jnp.pad(k, ((0, 0), (0, 0), (0, kv_len - Sk), (0, 0)))
+        vp = jnp.pad(v, ((0, 0), (0, 0), (0, kv_len - Sk), (0, 0)))
+    else:
+        kp = k[:, :, :kv_len]
+        vp = v[:, :, :kv_len]
 
+    segmented = segment_ids is not None
     kernel = functools.partial(
         flash_attention_kernel,
         block_q=bq,
@@ -127,15 +164,42 @@ def flash_attention_pallas(
         causal=causal,
         q_offset=q_offset,
         scale=scale,
+        segmented=segmented,
     )
+    in_specs = [
+        pl.BlockSpec((1, 1, bq, D), lambda b, h, qi, ki: (b, h, qi, 0)),
+        pl.BlockSpec((1, 1, bk, D), lambda b, h, qi, ki: (b, h, ki, 0)),
+        pl.BlockSpec((1, 1, bk, Dv), lambda b, h, qi, ki: (b, h, ki, 0)),
+    ]
+    operands = [qp, kp, vp]
+    if segmented:
+        if segment_ids.shape != (B, Sk):
+            raise ValueError(
+                f"segment_ids must be (B, Sk)=({B}, {Sk}), got "
+                f"{segment_ids.shape}"
+            )
+        seg = segment_ids.astype(jnp.int32)
+        # q rows read segment ids at their absolute positions; distinct
+        # sentinels on the two pads keep padded rows from ever matching
+        segq = jax.lax.dynamic_slice_in_dim(
+            jnp.pad(seg, ((0, 0), (0, max(0, q_offset + Sq - Sk))),
+                    constant_values=-2),
+            q_offset, Sq, axis=1,
+        )
+        segq = jnp.pad(segq, ((0, 0), (0, nq * bq - Sq)), constant_values=-2)
+        if kv_len >= Sk:
+            segk = jnp.pad(seg, ((0, 0), (0, kv_len - Sk)), constant_values=-1)
+        else:
+            segk = seg[:, :kv_len]
+        in_specs += [
+            pl.BlockSpec((1, bq), lambda b, h, qi, ki: (b, qi)),
+            pl.BlockSpec((1, bk), lambda b, h, qi, ki: (b, ki)),
+        ]
+        operands += [segq, segk]
     out = pl.pallas_call(
         kernel,
         grid=(B, H, nq, nk),
-        in_specs=[
-            pl.BlockSpec((1, 1, bq, D), lambda b, h, qi, ki: (b, h, qi, 0)),
-            pl.BlockSpec((1, 1, bk, D), lambda b, h, qi, ki: (b, h, ki, 0)),
-            pl.BlockSpec((1, 1, bk, Dv), lambda b, h, qi, ki: (b, h, ki, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, bq, Dv), lambda b, h, qi, ki: (b, h, qi, 0)),
         out_shape=jax.ShapeDtypeStruct((B, H, nq * bq, Dv), q.dtype),
         scratch_shapes=[
@@ -149,7 +213,7 @@ def flash_attention_pallas(
         if not interpret
         else None,
         interpret=interpret,
-    )(qp, kp, vp)
+    )(*operands)
     return out[:, :, :Sq, :]
 
 

@@ -7,6 +7,7 @@ in Python for correctness validation.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -14,7 +15,16 @@ import jax.numpy as jnp
 from ...compat import on_tpu
 from .kernel import flash_attention_pallas
 
-__all__ = ["flash_attention"]
+__all__ = ["default_block_size", "flash_attention"]
+
+# Long windows amortize the per-tile softmax-state update over more MXU
+# work: past this sequence length the default tile doubles to 256.
+LONG_SEQ = 2048
+
+
+def default_block_size(seq: int) -> int:
+    """Default flash-attention tile edge for a sequence length."""
+    return 256 if seq >= LONG_SEQ else 128
 
 
 @functools.partial(
@@ -24,17 +34,29 @@ def flash_attention(
     q: jnp.ndarray,
     k: jnp.ndarray,
     v: jnp.ndarray,
+    segment_ids: Optional[jnp.ndarray] = None,
     *,
     causal: bool = True,
     q_offset: int = 0,
-    block_q: int = 128,
-    block_k: int = 128,
+    block_q: Optional[int] = None,
+    block_k: Optional[int] = None,
 ) -> jnp.ndarray:
-    """Flash attention over (B, H, S, D) operands (GQA pre-expanded)."""
+    """Flash attention over (B, H, S, D) operands (GQA pre-expanded).
+
+    ``segment_ids`` ((B, Sk) int32, optional) confines attention to equal-
+    id spans — packed windows never attend across their boundary.
+    ``block_q``/``block_k`` default per sequence length
+    (``default_block_size``: 256 for S >= 2048, else 128).
+    """
+    if block_q is None:
+        block_q = default_block_size(q.shape[2])
+    if block_k is None:
+        block_k = default_block_size(k.shape[2])
     return flash_attention_pallas(
         q,
         k,
         v,
+        segment_ids,
         causal=causal,
         q_offset=q_offset,
         block_q=block_q,

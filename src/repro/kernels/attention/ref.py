@@ -14,20 +14,34 @@ def attention_ref(
     q: jnp.ndarray,
     k: jnp.ndarray,
     v: jnp.ndarray,
+    segment_ids: jnp.ndarray | None = None,
     *,
     causal: bool = True,
     q_offset: int = 0,
 ) -> jnp.ndarray:
-    """q,k,v: (B,H,S,D); returns (B,H,Sq,Dv) in fp32 math."""
+    """q,k,v: (B,H,S,D); returns (B,H,Sq,Dv) in fp32 math.  Optional
+    ``segment_ids`` (B, Sk): rows attend only within their own segment."""
     B, H, Sq, D = q.shape
     Sk = k.shape[2]
     s = jnp.einsum(
         "bhqd,bhkd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32)
     ) / math.sqrt(D)
+    mask = jnp.ones((B, 1, Sq, Sk), dtype=bool)
     if causal:
         qpos = q_offset + jnp.arange(Sq)
         kpos = jnp.arange(Sk)
-        mask = qpos[:, None] >= kpos[None, :]
-        s = jnp.where(mask[None, None], s, -jnp.inf)
+        mask &= (qpos[:, None] >= kpos[None, :])[None, None]
+    if segment_ids is not None:
+        seg = segment_ids.astype(jnp.int32)
+        segq = jax.lax.dynamic_slice_in_dim(
+            jnp.pad(seg, ((0, 0), (0, max(0, q_offset + Sq - Sk))),
+                    constant_values=-2),
+            q_offset, Sq, axis=1,
+        )
+        mask &= (segq[:, :, None] == seg[:, None, :])[:, None]
+    s = jnp.where(mask, s, -jnp.inf)
     p = jax.nn.softmax(s, axis=-1)
+    # a row with zero visible keys softmaxes NaN; such rows are padding by
+    # construction — zero them so bitwise comparisons stay meaningful
+    p = jnp.where(jnp.any(mask, axis=-1, keepdims=True), p, 0.0)
     return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,223 @@
+"""Public wrappers for the fused feature-extraction megakernel.
+
+The contract mirrors ``kernels/features/ops`` — and is enforced by
+``tests/test_fused.py``: the fused pipeline is **bit-identical** to both the
+staged Pallas backend and the NumPy specification.  That falls out of three
+invariants:
+
+  * regbits/flags/brhist are exact integer/bool -> {0.0, 1.0, ±1.0} values —
+    any compute path produces the same bits;
+  * memory-distance deltas leave the kernel RAW (exact int32 subtraction,
+    correctly-rounded cast) and the signed-log compression runs EAGERLY via
+    ``signed_log_device`` — never inside a compiled program, where XLA's fma
+    contraction of ``a*b + c`` would diverge in the last ulp;
+  * the scan state threads across calls exactly (float copies and int32
+    values), so batch-granular extraction equals one monolithic scan.
+
+``FusedExtractor`` is the streaming driver the engine's ``"fused"`` backend
+uses: raw int32/bool columns ship to the device once (~30 B/instr — the
+same payload as the staged backend), then each ``next_batch`` slices one
+batch worth of columns device-side, runs ONE megakernel launch, applies the
+eager signed-log, and hands the model-input dict straight to the jitted
+step.  Features exist only at batch granularity — no O(trace) FeatureSet in
+HBM (see docs/kernels.md for the bandwidth accounting).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ...compat import on_tpu
+from ...core.features import FeatureConfig
+from ...uarch.isa import NUM_REGS, Op
+from ..features.ops import DEFAULT_CHUNK, signed_log_device
+from .kernel import fused_feature_pallas
+
+__all__ = [
+    "FusedExtractor",
+    "fused_feature_columns",
+    "init_fused_state",
+]
+
+# opcodes whose instructions set the is_fp flag (static in the kernel)
+_FP_OPS = (int(Op.FALU), int(Op.FMUL), int(Op.FDIV))
+
+# the raw trace columns a fused pass consumes, in kernel argument order
+_COLUMN_KEYS = (
+    "bucket", "addr", "opcode", "dst", "src1", "src2",
+    "is_branch", "taken", "is_mem", "is_store",
+)
+
+
+def init_fused_state(cfg: FeatureConfig) -> Dict[str, jnp.ndarray]:
+    """The scan carry threaded across megakernel calls: the (N_b, N_q)
+    branch-outcome table and the address queue + fill counter packed into
+    one int32 row (``mq[0, :n_mem]`` = queue, ``mq[0, n_mem]`` = fill)."""
+    return {
+        "table": jnp.zeros((cfg.n_buckets, cfg.n_queue), jnp.float32),
+        "mq": jnp.zeros((1, cfg.n_mem + 1), jnp.int32),
+    }
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "n_buckets", "n_queue", "n_mem", "n_flags", "chunk", "interpret"
+    ),
+)
+def _fused_padded(
+    bucket, addr, opcode, dst, src1, src2,
+    is_branch, taken, is_mem, is_store,
+    table, mq,
+    *,
+    n_buckets, n_queue, n_mem, n_flags, chunk, interpret,
+):
+    n = bucket.shape[0]
+    nc = max(1, -(-n // chunk))
+    pad = nc * chunk - n
+
+    def prep(v):
+        # pad rows are all-zero: non-branch, non-mem — the carried scan
+        # state passes through them untouched
+        return jnp.pad(v.astype(jnp.int32), (0, pad)).reshape(nc, chunk)
+
+    regbits, flags, brhist, memdist, table_out, mq_out = fused_feature_pallas(
+        prep(bucket), prep(addr), prep(opcode),
+        prep(dst), prep(src1), prep(src2),
+        prep(is_branch), prep(taken), prep(is_mem), prep(is_store),
+        table, mq,
+        n_buckets=n_buckets,
+        n_queue=n_queue,
+        n_mem=n_mem,
+        n_flags=n_flags,
+        num_regs=NUM_REGS,
+        fp_ops=_FP_OPS,
+        interpret=interpret,
+    )
+    m = nc * chunk
+    return (
+        regbits.reshape(m, NUM_REGS)[:n],
+        flags.reshape(m, n_flags)[:n],
+        brhist.reshape(m, n_queue)[:n],
+        memdist.reshape(m, n_mem)[:n],
+        table_out,
+        mq_out,
+    )
+
+
+# tao: hot
+def fused_feature_columns(
+    cols: Dict,
+    state: Dict[str, jnp.ndarray],
+    cfg: FeatureConfig,
+    *,
+    chunk: int = DEFAULT_CHUNK,
+    interpret: Optional[bool] = None,
+) -> Tuple[Dict[str, jnp.ndarray], Dict[str, jnp.ndarray]]:
+    """One fused device pass over (a slice of) the raw trace columns.
+
+    Returns ``(features, new_state)`` where ``features`` holds the model
+    inputs (``opcode``/``regbits``/``flags``/``brhist``/``memdist``) for
+    exactly these positions and ``new_state`` is the scan carry to thread
+    into the next slice.  Bit-identical to running the staged extraction
+    over the concatenated slices.
+    """
+    if interpret is None:
+        interpret = not on_tpu()
+    regbits, flags, brhist, raw, table, mq = _fused_padded(
+        jnp.asarray(cols["bucket"]),
+        jnp.asarray(cols["addr"]),
+        jnp.asarray(cols["opcode"]),
+        jnp.asarray(cols["dst"]),
+        jnp.asarray(cols["src1"]),
+        jnp.asarray(cols["src2"]),
+        jnp.asarray(cols["is_branch"]),
+        jnp.asarray(cols["taken"]),
+        jnp.asarray(cols["is_mem"]),
+        jnp.asarray(cols["is_store"]),
+        state["table"],
+        state["mq"],
+        n_buckets=cfg.n_buckets,
+        n_queue=cfg.n_queue,
+        n_mem=cfg.n_mem,
+        n_flags=cfg.flags_dim,
+        chunk=chunk,
+        interpret=interpret,
+    )
+    memdist = signed_log_device(raw)  # eager: keeps NumPy bit-equality
+    feats = {
+        "opcode": jnp.asarray(cols["opcode"], jnp.int32),
+        "regbits": regbits,
+        "flags": flags,
+        "brhist": brhist,
+        "memdist": memdist,
+    }
+    return feats, {"table": table, "mq": mq}
+
+
+class FusedExtractor:
+    """Streams fixed-size feature batches out of device-resident raw trace
+    columns, carrying the scan state across batches.
+
+    ``cols`` is the host dict from ``kernels.features.ops.trace_columns``
+    (already validated against the int32-exact address window); it ships to
+    the device ONCE here, zero-padded to ``pad_to`` positions so every
+    ``next_batch(m)`` slice is uniform (pad rows are non-branch/non-mem and
+    leave the carry untouched).  Each call runs one megakernel launch plus
+    the eager signed-log and returns the model-input dict for the next
+    ``m`` positions, including the sliced ``is_branch``/``is_mem`` bool
+    columns the engine's step masks with.
+    """
+
+    # one-time host->device column upload, not the batch loop
+    # tao: cold
+    def __init__(
+        self,
+        cols: Dict[str, np.ndarray],
+        cfg: FeatureConfig,
+        *,
+        chunk: int = DEFAULT_CHUNK,
+        pad_to: Optional[int] = None,
+        interpret: Optional[bool] = None,
+    ):
+        n = len(cols["bucket"])
+        pad_to = n if pad_to is None else pad_to
+        if pad_to < n:
+            raise ValueError(f"pad_to ({pad_to}) < column length ({n})")
+        self._cols: Dict[str, jnp.ndarray] = {}
+        for k in _COLUMN_KEYS:
+            a = jnp.asarray(cols[k])
+            if pad_to > n:
+                a = jnp.pad(a, (0, pad_to - n))
+            self._cols[k] = a
+        self._cfg = cfg
+        self._chunk = chunk
+        self._interpret = interpret
+        self._pos = 0
+        self._limit = pad_to
+        self.state = init_fused_state(cfg)
+
+    # tao: hot
+    def next_batch(self, m: int) -> Dict[str, jnp.ndarray]:
+        lo = self._pos
+        if lo + m > self._limit:
+            raise ValueError(
+                f"next_batch({m}) past the padded column end "
+                f"({lo} + {m} > {self._limit})"
+            )
+        self._pos = lo + m
+        sl = {k: v[lo : lo + m] for k, v in self._cols.items()}
+        feats, self.state = fused_feature_columns(
+            sl,
+            self.state,
+            self._cfg,
+            chunk=self._chunk,
+            interpret=self._interpret,
+        )
+        feats["is_branch"] = sl["is_branch"]
+        feats["is_mem"] = sl["is_mem"]
+        return feats

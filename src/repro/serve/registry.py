@@ -80,7 +80,7 @@ class ModelRegistry:
                     "overwrite=True to rebind it"
                 )
             self.store.delete(_KIND, key)
-        return self.store.put(
+        ok = self.store.put(
             _KIND,
             key,
             model.params,
@@ -89,8 +89,25 @@ class ModelRegistry:
                 "cfg": _cfg_to_dict(model.cfg),
                 "sim_batch_size": int(model.sim_batch_size),
                 "sim_feature_backend": model.sim_feature_backend,
+                "sim_precision": getattr(model, "sim_precision", "fp32"),
             },
         )
+        # Publish time is when the int8 scales are computed — every process
+        # that later resolves this name and simulates with precision="int8"
+        # reuses the same stored quantized tree instead of re-deriving it.
+        from ..api.session import quantized_params_key  # lazy: api imports serve
+        from ..core.quant import QUANT_VERSION, quantize_tao_params
+
+        qkey = quantized_params_key(model.params)
+        if not self.store.has("params_int8", qkey):
+            self.store.put(
+                "params_int8",
+                qkey,
+                quantize_tao_params(model.params),
+                {"scheme": "w8a8-per-channel", "version": QUANT_VERSION,
+                 "name": name},
+            )
+        return ok
 
     # ---- resolution ------------------------------------------------------
 
@@ -114,6 +131,7 @@ class ModelRegistry:
                     name=extra.get("name", name),
                     sim_batch_size=int(extra.get("sim_batch_size", 64)),
                     sim_feature_backend=extra.get("sim_feature_backend", "numpy"),
+                    sim_precision=extra.get("sim_precision", "fp32"),
                     store=self.store,
                 )
                 self._models[name] = model

@@ -170,6 +170,7 @@ class TraceServer:
         *,
         batch_size: int = 64,
         feature_backend: str = "numpy",
+        precision: str = "fp32",
         max_queue: int = 64,
         metrics: Tuple = DEFAULT_METRICS,
         store=None,
@@ -189,6 +190,7 @@ class TraceServer:
         self.registry = registry
         self.batch_size = batch_size
         self.feature_backend = feature_backend
+        self.precision = precision
         self.max_queue = max_queue
         self.default_metrics = resolve_metrics(metrics)
         self.store = store if store is not None else getattr(registry, "store", None)
@@ -481,6 +483,7 @@ class TraceServer:
             return p.model.engine(EngineConfig(
                 batch_size=self.batch_size,
                 feature_backend=self.feature_backend,
+                precision=self.precision,
                 plan=self._plan,
                 metrics=p.specs,
             ))
@@ -789,6 +792,7 @@ class TraceServer:
             engine = model.engine(EngineConfig(
                 batch_size=self.batch_size,
                 feature_backend=self.feature_backend,
+                precision=self.precision,
                 plan=self._plan,
                 metrics=self.default_metrics,
             ))

@@ -109,6 +109,98 @@ else:
     )(_check_flash_kernel)
 
 
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_segment_ids_block_attention(causal):
+    """Packed windows: positions attend only within their own segment, at
+    and across block boundaries (segments deliberately not tile-aligned)."""
+    ks = jax.random.split(jax.random.PRNGKey(6), 3)
+    B, H, S, D = 2, 2, 96, 32
+    q = jax.random.normal(ks[0], (B, H, S, D))
+    k = jax.random.normal(ks[1], (B, H, S, D))
+    v = jax.random.normal(ks[2], (B, H, S, D))
+    seg = jnp.asarray(
+        np.repeat(np.arange(8), 12)[None].repeat(B, 0), jnp.int32
+    )
+    out = flash_attention(q, k, v, seg, causal=causal, block_q=32, block_k=32)
+    ref = attention_ref(q, k, v, seg, causal=causal)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+    # segment isolation is literal: each segment equals attention run on
+    # that segment alone
+    for s0 in (0, 12, 84):
+        solo = attention_ref(
+            q[:, :, s0:s0 + 12], k[:, :, s0:s0 + 12], v[:, :, s0:s0 + 12],
+            causal=causal,
+        )
+        np.testing.assert_allclose(
+            np.asarray(out[:, :, s0:s0 + 12]), np.asarray(solo),
+            atol=2e-5, rtol=2e-5,
+        )
+
+
+def test_flash_segment_ids_with_q_offset():
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    B, H, S, D = 1, 2, 64, 32
+    q = jax.random.normal(ks[0], (B, H, S, D))
+    k = jax.random.normal(ks[1], (B, H, S, D))
+    v = jax.random.normal(ks[2], (B, H, S, D))
+    seg = jnp.asarray(np.repeat([0, 1], 32)[None], jnp.int32)
+    last8 = flash_attention(q[:, :, -8:], k, v, seg, causal=True,
+                            q_offset=S - 8, block_q=8, block_k=32)
+    ref = attention_ref(q[:, :, -8:], k, v, seg, causal=True, q_offset=S - 8)
+    np.testing.assert_allclose(np.asarray(last8), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_flash_segment_ids_shape_validated():
+    ks = jax.random.split(jax.random.PRNGKey(8), 3)
+    q = jax.random.normal(ks[0], (1, 1, 32, 16))
+    bad = jnp.zeros((1, 16), jnp.int32)
+    with pytest.raises(ValueError, match="segment_ids"):
+        flash_attention(q, q, q, bad, block_q=16, block_k=16)
+
+
+def test_flash_causal_clamp_skips_dead_k_blocks():
+    """The static diagonal clamp: k-blocks past the last query position
+    are never part of the grid.  Observable two ways: NaNs planted in the
+    dead key region cannot poison the output (those tiles are never
+    computed), and the result matches the oracle."""
+    ks = jax.random.split(jax.random.PRNGKey(9), 3)
+    B, H, S, D = 1, 2, 128, 32
+    q = jax.random.normal(ks[0], (B, H, S, D))
+    k = jax.random.normal(ks[1], (B, H, S, D))
+    v = jax.random.normal(ks[2], (B, H, S, D))
+    # queries cover positions [0, 16): keys from 32 on are causally dead
+    k_poison = k.at[:, :, 32:].set(jnp.nan)
+    v_poison = v.at[:, :, 32:].set(jnp.nan)
+    out = flash_attention(q[:, :, :16], k_poison, v_poison, causal=True,
+                          block_q=16, block_k=16)
+    assert np.isfinite(np.asarray(out)).all()
+    ref = attention_ref(q[:, :, :16], k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+    # mid-window offsets clamp to ceil((q_offset+Sq)/bk) blocks
+    mid = flash_attention(q[:, :, 48:64], k, v, causal=True, q_offset=48,
+                          block_q=16, block_k=16)
+    refm = attention_ref(q[:, :, 48:64], k, v, causal=True, q_offset=48)
+    np.testing.assert_allclose(np.asarray(mid), np.asarray(refm),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_flash_default_block_sizes():
+    from repro.kernels.attention.ops import default_block_size
+
+    assert default_block_size(512) == 128
+    assert default_block_size(2048) == 256
+    # defaults apply when block_q/block_k are omitted and stay correct
+    ks = jax.random.split(jax.random.PRNGKey(10), 3)
+    q = jax.random.normal(ks[0], (1, 1, 200, 32))
+    out = flash_attention(q, q, q, causal=True)   # S=200 -> 128 tiles
+    ref = attention_ref(q, q, q, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+
+
 # ---------------------------------------------------------------------------
 # SSD
 # ---------------------------------------------------------------------------
